@@ -1,0 +1,44 @@
+"""Paper Fig. 2: one-time synchronization per decoder layer.
+
+Counts the per-layer residual-stream reductions in the traced schedule for
+the parallel-residual (GPT-J) config with §2.2 ON vs OFF, and times the two
+variants end-to-end on CPU (reduced config, tp=1 semantics identical)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(__file__)
+
+
+def _trace(one_shot: bool) -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "comm_trace.py"), "4",
+         "gptj-parallel",
+         json.dumps({"one_shot_sync": one_shot, "seq_parallel": False})],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main(emit):
+    on, off = _trace(True), _trace(False)
+    n_on = sum(v["count"] for k, v in on["per_tag"].items()
+               if k in ("one_shot", "attn_reduce", "ffn_reduce"))
+    n_off = sum(v["count"] for k, v in off["per_tag"].items()
+                if k in ("one_shot", "attn_reduce", "ffn_reduce"))
+    emit("one_shot/reductions_per_layer", n_on,
+         f"{n_on} vs {n_off} baseline (paper §2.2: 1 vs 2)")
+    b_on = sum(v["bytes"] for k, v in on["per_tag"].items()
+               if k in ("one_shot", "attn_reduce", "ffn_reduce"))
+    b_off = sum(v["bytes"] for k, v in off["per_tag"].items()
+                if k in ("one_shot", "attn_reduce", "ffn_reduce"))
+    emit("one_shot/layer_sync_bytes", b_on,
+         f"{b_off/max(b_on,1):.2f}x fewer wire bytes per layer")

@@ -1,0 +1,84 @@
+"""Paper Fig. 3: minimize memory copy (zero-copy), on XLA terms.
+
+(a) buffer donation: alias bytes of the decode step with and without donated
+    KV caches — the donated bytes are buffers the runtime does NOT copy;
+(b) layout-stable epilogue: HLO copy/transpose ops with the fused
+    (b,h,s,hd)x(h,hd,d) out-projection vs the naive reshape-then-matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.zero_copy import count_copies, fused_out_projection
+
+
+def _decode_step_alias(donate: bool) -> int:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import model as M
+    from repro.runtime import kvcache
+    from repro.runtime.engine import make_decode_step
+
+    cfg = get_config("yi-9b").reduced()
+    ctx = M.ModelCtx.make(cfg, ParallelConfig(tp=1, dp=1, remat=False))
+    mesh = make_local_mesh(1, 1)
+    params = M.init_params(ctx, jax.random.key(0))
+    caches = M.init_caches(ctx, 2, 64)
+    cspecs = kvcache.cache_pspecs(ctx)
+    step = make_decode_step(ctx, SamplingConfig(top_k=8))
+    f = jax.shard_map(step, mesh=mesh,
+                      in_specs=(M.param_specs(ctx), P("data"), cspecs, P(), P()),
+                      out_specs=(P("data"), cspecs), check_vma=False)
+    jf = jax.jit(f, donate_argnums=(2,) if donate else ())
+    c = jf.lower(params, jnp.zeros((2,), jnp.int32), caches, jnp.int32(8),
+                 jax.random.key(0)).compile()
+    return int(c.memory_analysis().alias_size_in_bytes)
+
+
+def _epilogue_copies(fused: bool) -> dict:
+    b, h, s, hd, d = 4, 8, 32, 64, 512
+    x = jax.ShapeDtypeStruct((b, h, s, hd), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((h, hd, d), jnp.bfloat16)
+
+    if fused:
+        fn = lambda x, w: fused_out_projection(x, w)
+    else:
+        def fn(x, w):  # naive: materialise (b,s,h*hd) then 2-D matmul
+            xt = x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+            return xt @ w.reshape(h * hd, d)
+
+    txt = jax.jit(fn).lower(x, w).compile().as_text()
+    return count_copies(txt)
+
+
+def main(emit):
+    a_on = _decode_step_alias(True)
+    a_off = _decode_step_alias(False)
+    emit("zero_copy/donated_alias_bytes", a_on,
+         f"{a_on} B aliased in-place vs {a_off} without donation")
+    c_f = _epilogue_copies(True)
+    c_n = _epilogue_copies(False)
+    emit("zero_copy/epilogue_copy_ops", c_f["copy"] + c_f["transpose"],
+         f"fused {c_f} vs naive {c_n} (CPU backend; TPU layouts differ)")
+    # the Pallas dual-matmul epilogue is the hard zero-copy artifact:
+    # one fp32 VMEM tile, one HBM write, vs write+write+read+write naive.
+    T, D = 4096, 5120
+    saved = 3 * T * D * 2  # bytes of HBM traffic eliminated (bf16)
+    from repro.kernels import ops as kops
+    import numpy as np
+    import time
+
+    a = jnp.ones((256, 512), jnp.bfloat16)
+    wa = jnp.ones((512, 256), jnp.bfloat16)
+    b = jnp.ones((256, 1024), jnp.bfloat16)
+    wb = jnp.ones((1024, 256), jnp.bfloat16)
+    out = kops.fused_dual_matmul(a, wa, b, wb)  # correctness ping
+    t0 = time.perf_counter()
+    kops.fused_dual_matmul(a, wa, b, wb).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    emit("zero_copy/fused_epilogue_kernel", us,
+         f"dual-matmul accumulate; saves {saved/1e6:.1f} MB HBM traffic/layer "
+         f"at (T,D)=({T},{D})")

@@ -1,0 +1,65 @@
+"""Subprocess helper: trace a decode round at TP=N virtual devices and print
+the collective schedule (JSON).  Run by benchmarks/run.py — keeps the parent
+process at 1 device."""
+import os
+import sys
+
+if __name__ == "__main__":
+    tp = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={tp}"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.core import collectives as cc
+from repro.launch.inputs import _globalize, _sds, rng_spec
+from repro.models import model as M
+from repro.runtime import kvcache
+from repro.runtime.engine import make_decode_step
+
+
+def trace_decode(arch: str, tp: int, **flags):
+    cfg = get_config(arch).reduced()
+    par = ParallelConfig(tp=tp, dp=1, remat=False, **flags)
+    ctx = M.ModelCtx.make(cfg, par)
+    mesh = jax.make_mesh((1, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    pspecs = M.param_specs(ctx)
+    p_in = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
+        M.param_shapes(ctx), pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    local = jax.eval_shape(lambda: M.init_caches(ctx, 2, 32))
+    cspecs = kvcache.cache_pspecs(ctx)
+    caches_in = _globalize(local, cspecs, mesh)
+    step = make_decode_step(ctx, SamplingConfig(top_k=16))
+    tshape = (2,) if cfg.n_codebooks == 1 else (2, cfg.n_codebooks)
+    tok_spec = P("data") if cfg.n_codebooks == 1 else P("data", None)
+    tok = _sds(tshape, jnp.int32, mesh, tok_spec)
+    cur = _sds((), jnp.int32, mesh, P())
+    with cc.comm_stats() as stats:
+        jax.jit(jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, tok_spec, cspecs, P(), P()),
+            out_specs=(tok_spec, cspecs), check_vma=False,
+        )).lower(p_in, tok, caches_in, cur, rng_spec(mesh))
+    per_tag = {}
+    for r in stats.records:
+        d = per_tag.setdefault(r.tag or r.kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += r.bytes
+    return {"per_tag": per_tag, "total_bytes": stats.total_bytes(),
+            "n_collectives": stats.count()}
+
+
+if __name__ == "__main__":
+    arch = sys.argv[2] if len(sys.argv) > 2 else "yi-9b"
+    flags = json.loads(sys.argv[3]) if len(sys.argv) > 3 else {}
+    print(json.dumps(trace_decode(arch, tp, **flags)))

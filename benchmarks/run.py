@@ -1,0 +1,69 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+  token_latency       — paper §3 (the headline ms/token measurement)
+  sync_minimization   — paper Fig. 1 (§2.1a token-ID broadcast, §2.1b top-k)
+  one_shot            — paper Fig. 2 (§2.2 one sync per decoder layer)
+  zero_copy           — paper Fig. 3 (§2.3 zero-copy handoff)
+  roofline            — §Roofline terms from the dry-run artifacts (if present)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import (bench_one_shot, bench_sync_minimization,
+                            bench_token_latency, bench_zero_copy)
+
+    benches = [
+        ("token_latency", bench_token_latency.main),
+        ("sync_minimization", bench_sync_minimization.main),
+        ("one_shot", bench_one_shot.main),
+        ("zero_copy", bench_zero_copy.main),
+    ]
+    failures = []
+    for name, fn in benches:
+        try:
+            fn(emit)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            emit(f"{name}/FAILED", 0.0, repr(e))
+    # roofline summary (only if the dry-run artifacts exist)
+    try:
+        from benchmarks.roofline import build_table
+
+        rows = build_table()
+        if rows:
+            doms = {}
+            for r in rows:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+            emit("roofline/combos", len(rows), f"dominant terms: {doms}")
+            worst = max(rows, key=lambda r: r["bound_est_s"])
+            emit("roofline/worst_bound_s", worst["bound_est_s"] * 1e6,
+                 f"{worst['arch']}x{worst['shape']} ({worst['dominant']})")
+    except Exception:  # noqa: BLE001
+        pass
+    print(f"# total {time.time()-t0:.0f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benches failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests through the wave scheduler —
+the paper-kind end-to-end driver (§3 measures exactly this loop).
+
+    PYTHONPATH=src python examples/serve_batch.py [arch]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen-72b"
+main(["--arch", arch, "--requests", "8", "--batch", "4",
+      "--prompt-len", "24", "--max-new", "16"])

@@ -1,0 +1,17 @@
+"""Train a ~100M-class model for a few hundred steps on the synthetic stream
+(end-to-end training driver; checkpoints at the end).
+
+    PYTHONPATH=src python examples/train_small.py [arch] [steps]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "yi-9b"
+steps = sys.argv[2] if len(sys.argv) > 2 else "200"
+main(["--arch", arch, "--steps", steps, "--global-batch", "8",
+      "--seq-len", "128", "--lr", "3e-3", "--zero1",
+      "--ckpt", "/tmp/repro_ckpt/last.npz"])

@@ -1,0 +1,21 @@
+"""internvl2-26b — VLM: InternViT (stub) + InternLM2 backbone [arXiv:2404.16821].
+
+Per the assignment carve-out the ViT is a STUB: ``input_specs`` feeds
+precomputed patch embeddings (256 tokens/tile after pixel-shuffle, 3200-wide
+InternViT-6B features). The 2-layer MLP projector IS implemented.
+"""
+from repro.configs.base import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    frontend=FrontendStub(kind="vision", prefix_len=256, feature_dim=3200),
+    citation="arXiv:2404.16821 (InternVL 1.5/2); InternViT-6B features 3200-d",
+)

@@ -1,0 +1,26 @@
+"""musicgen-medium — audio decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+4 codebooks (delay interleave pattern), vocab 2048 per codebook; embeddings of
+the 4 streams are summed and 4 parallel LM heads predict the next frame. The
+EnCodec tokenizer and text-conditioning encoder are STUBS per the assignment
+carve-out — ``input_specs`` feeds conditioning frame embeddings.
+MusicGen uses a plain (non-gated, GELU) transformer FFN.
+"""
+from repro.configs.base import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    n_codebooks=4,
+    gated_mlp=False,
+    act="gelu",
+    rope_theta=10000.0,
+    frontend=FrontendStub(kind="audio", prefix_len=64, feature_dim=768),
+    citation="arXiv:2306.05284 (MusicGen); EnCodec 4x2048 codebooks",
+)

@@ -1,0 +1,15 @@
+"""yi-9b — llama-arch dense GQA [arXiv:2403.04652]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=10000.0,
+    citation="arXiv:2403.04652 (Yi: Open Foundation Models)",
+)

@@ -1,0 +1,117 @@
+"""Explicit collectives with static byte accounting.
+
+The paper's whole contribution is *which collectives run per decode round and
+how many bytes they move*.  Every collective in this codebase goes through
+these wrappers so that tracing a step function under
+:func:`comm_stats` yields the exact schedule — the quantity benchmarked in
+``benchmarks/bench_sync_minimization.py`` and friends.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+_local = threading.local()
+
+
+@dataclass
+class CommRecord:
+    kind: str
+    axis: str
+    bytes: int
+    shape: tuple
+    tag: str = ""
+
+
+@dataclass
+class CommStats:
+    records: List[CommRecord] = field(default_factory=list)
+
+    def count(self, kind: Optional[str] = None) -> int:
+        return sum(1 for r in self.records if kind is None or r.kind == kind)
+
+    def total_bytes(self, kind: Optional[str] = None, axis: Optional[str] = None) -> int:
+        return sum(
+            r.bytes
+            for r in self.records
+            if (kind is None or r.kind == kind) and (axis is None or r.axis == axis)
+        )
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out[r.kind] = out.get(r.kind, 0) + r.bytes
+        return out
+
+
+@contextlib.contextmanager
+def comm_stats():
+    """Record every wrapped collective issued while tracing under this ctx."""
+    stats = CommStats()
+    prev = getattr(_local, "stats", None)
+    _local.stats = stats
+    try:
+        yield stats
+    finally:
+        _local.stats = prev
+
+
+def _record(kind: str, axis: str, x, tag: str, wire_factor: float = 1.0) -> None:
+    stats: Optional[CommStats] = getattr(_local, "stats", None)
+    if stats is None:
+        return
+    for leaf in jax.tree.leaves(x):
+        nbytes = int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+        stats.records.append(
+            CommRecord(kind, axis, int(nbytes * wire_factor), tuple(leaf.shape), tag)
+        )
+
+
+# -- wrapped collectives -----------------------------------------------------
+# wire_factor approximates bytes crossing links per device for ring algos:
+# all_reduce moves ~2x the payload (reduce-scatter + all-gather), the others 1x.
+
+
+def psum(x, axis: str, tag: str = ""):
+    _record("all_reduce", axis, x, tag, wire_factor=2.0)
+    return jax.lax.psum(x, axis)
+
+
+def psum_scatter(x, axis: str, *, scatter_dimension: int, tiled: bool = True, tag: str = ""):
+    _record("reduce_scatter", axis, x, tag)
+    return jax.lax.psum_scatter(
+        x, axis, scatter_dimension=scatter_dimension, tiled=tiled
+    )
+
+
+def all_gather(x, axis: str, *, gather_axis: int, tiled: bool = True, tag: str = ""):
+    _record("all_gather", axis, x, tag)
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+
+def all_to_all(x, axis: str, *, split_axis: int, concat_axis: int, tag: str = ""):
+    _record("all_to_all", axis, x, tag)
+    return jax.lax.all_to_all(x, axis, split_axis=split_axis, concat_axis=concat_axis, tiled=True)
+
+
+def ppermute(x, axis: str, perm, tag: str = ""):
+    _record("collective_permute", axis, x, tag)
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def pbroadcast_from0(x, axis: str, tag: str = ""):
+    """Broadcast shard 0's value to all shards of ``axis``.
+
+    This is the explicit analogue of the paper's baseline "rank 0 broadcasts
+    the embedding activations" — implemented as a masked psum so the wire cost
+    is the payload size, like a real broadcast.
+    """
+    _record("broadcast", axis, x, tag)
+    idx = jax.lax.axis_index(axis)
+    masked = jax.tree.map(lambda v: jnp.where(idx == 0, v, jnp.zeros_like(v)), x)
+    return jax.lax.psum(masked, axis)

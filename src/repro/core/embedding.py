@@ -1,0 +1,89 @@
+"""Paper §2.1a — broadcast token IDs, not embedding activations.
+
+Three modes, all explicit:
+
+* ``id_broadcast + replicated table`` (paper-faithful): token IDs are the
+  replicated value (their "broadcast" costs 4 bytes/token); every shard looks
+  up the full table locally — **zero** collective bytes on the embedding path.
+* ``id_broadcast + vocab-sharded table`` (memory-constrained TPU variant):
+  masked local lookup over the shard's vocab slice + one psum of the
+  activations; table memory is /tp.
+* ``embed_broadcast`` (the paper's baseline, for the ablation bench): shard 0
+  owns the lookup and broadcasts the dense (batch, seq, d_model) activations.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import collectives as cc
+from repro.models.common import Dist, ParamDef, ShardPlan
+
+# tables at or below this many bytes (bf16) are replicated, paper-style
+REPLICATE_BYTES_LIMIT = 512 * 2**20
+
+
+def table_replicated(cfg: ModelConfig) -> bool:
+    return (
+        not cfg.tie_embeddings
+        and cfg.vocab_size * cfg.d_model * 2 * cfg.n_codebooks <= REPLICATE_BYTES_LIMIT
+    )
+
+
+def embed_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist) -> Dict[str, ParamDef]:
+    if table_replicated(cfg):
+        shape = (cfg.n_codebooks, cfg.vocab_size, cfg.d_model)
+        spec = P(None, None, None)
+    else:
+        shape = (cfg.n_codebooks, plan.vocab_p, cfg.d_model)
+        spec = P(None, dist.model_axis, None)
+    return {"table": ParamDef(shape, spec, init="normal")}
+
+
+def embed_lookup(
+    params: Dict[str, jax.Array],
+    tokens: jax.Array,            # (batch, seq) or (batch, seq, n_codebooks) int32
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    id_broadcast: bool = True,
+) -> jax.Array:
+    """Returns (batch, seq, d_model) activations, replicated over model axis."""
+    table = params["table"]
+    if tokens.ndim == 2:
+        tokens = tokens[..., None]
+    n_cb = tokens.shape[-1]
+
+    if table_replicated(cfg):
+        # Paper-faithful: IDs replicated, local full-table lookup, 0 comm bytes.
+        out = 0.0
+        for cb in range(n_cb):
+            out = out + jnp.take(table[cb], tokens[..., cb], axis=0)
+        if not id_broadcast:
+            # baseline for the bench: rank-0 lookup + activation broadcast
+            out = cc.pbroadcast_from0(out, dist.model_axis, tag="embed_bcast")
+        return out
+
+    # vocab-sharded table: masked local lookup + psum
+    shard = dist.model_idx()
+    lo = shard * plan.local_vocab
+    out = 0.0
+    for cb in range(n_cb):
+        ids = tokens[..., cb]
+        local = ids - lo
+        ok = (local >= 0) & (local < plan.local_vocab)
+        local = jnp.clip(local, 0, plan.local_vocab - 1)
+        e = jnp.take(table[cb], local, axis=0)
+        out = out + jnp.where(ok[..., None], e, 0.0).astype(table.dtype)
+    if id_broadcast:
+        return cc.psum(out, dist.model_axis, tag="embed_shard_merge")
+    # baseline: merge on shard 0 then broadcast the dense activations
+    # (models the paper's rank-0-computes-then-broadcasts schedule: the
+    # activation row crosses the wire twice).
+    merged = cc.psum(out, dist.model_axis, tag="embed_shard_merge")
+    return cc.pbroadcast_from0(merged, dist.model_axis, tag="embed_bcast")

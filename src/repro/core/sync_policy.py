@@ -1,0 +1,66 @@
+"""Paper §2.2 — one-time synchronization per decoder layer, generalized.
+
+The paper's observation: a TP decoder layer ordinarily ends each of its two
+row-parallel matmuls (attention out-proj, FFN down-proj) with an all-reduce —
+2 syncs/layer.  For parallel-residual models the two partial sums can be added
+*locally* and reduced **once**.
+
+This module centralizes the residual-stream synchronization policy so every
+block uses the same, countable schedule:
+
+* ``replicated`` (decode default): residual is replicated over the model axis;
+  ``reduce_partial`` = one psum.  Parallel-residual blocks sum both branch
+  partials first -> exactly the paper's 1 psum/layer.
+* ``seq_sharded`` (train/prefill default; beyond-paper Megatron-SP):
+  the residual is sequence-sharded over the model axis; entering a branch
+  all-gathers the sequence, leaving reduce-scatters it.  Same bytes on the
+  wire as one all-reduce but half the latency-exposed hops and 1/tp the
+  residual memory — the TPU-idiomatic version of "cheaper syncs per layer".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as cc
+from repro.models.common import Dist
+
+SEQ_AXIS = 1  # residual stream layout (batch, seq, d_model)
+
+
+@dataclass(frozen=True)
+class SyncPolicy:
+    dist: Dist
+    seq_sharded: bool = False     # Megatron-SP residual stream
+    one_shot: bool = True         # paper §2.2 for parallel-residual blocks
+
+    # -- entering a mixer/FFN branch: need the full sequence, replicated ----
+    def gather_in(self, x: jax.Array, tag: str = "sp_gather") -> jax.Array:
+        if self.seq_sharded and self.dist.tp > 1:
+            return cc.all_gather(x, self.dist.model_axis, gather_axis=SEQ_AXIS, tag=tag)
+        return x
+
+    # -- leaving a branch: partial sums must be reduced ---------------------
+    def reduce_out(self, partial: jax.Array, tag: str = "branch_reduce") -> jax.Array:
+        if self.dist.tp == 1:
+            return partial
+        if self.seq_sharded:
+            return cc.psum_scatter(
+                partial, self.dist.model_axis, scatter_dimension=SEQ_AXIS, tag=tag
+            )
+        return cc.psum(partial, self.dist.model_axis, tag=tag)
+
+    def shard_residual(self, x: jax.Array) -> jax.Array:
+        """Slice a replicated residual down to this shard's sequence chunk."""
+        if not (self.seq_sharded and self.dist.tp > 1):
+            return x
+        idx = self.dist.model_idx()
+        chunk = x.shape[SEQ_AXIS] // self.dist.tp
+        return jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=SEQ_AXIS)
+
+    def unshard_residual(self, x: jax.Array, tag: str = "final_gather") -> jax.Array:
+        if not (self.seq_sharded and self.dist.tp > 1):
+            return x
+        return cc.all_gather(x, self.dist.model_axis, gather_axis=SEQ_AXIS, tag=tag)

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: single-token GQA flash-decode over the KV cache.
+
+The latency-critical op of the whole paper: one query token attends over a
+long cache.  Grid is (batch x kv_head, cache_blocks); each step loads one
+(block_s, head_dim) K/V slab into VMEM, updates running (m, l, acc) flash
+statistics for the g query heads sharing that KV head, and never materialises
+the (S,) score row in HBM.  Emits the PARTIAL (m, l, acc) triple rather than
+the normalized output so the caller can LSE-merge across a sequence-sharded
+cache (the long_500k path) — the kernel composes with the distributed
+schedule instead of forcing an all-gather.
+
+HBM traffic: one read of K/V (the roofline floor for decode attention).
+Target: TPU; validated with interpret=True against ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, m_ref, l_ref, acc_ref,
+                   ms_ref, ls_ref, as_ref, *, scale: float, n_s: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, NEG)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        as_ref[...] = jnp.zeros_like(as_ref)
+
+    q = q_ref[...].astype(jnp.float32)                   # (g, hd)
+    k = k_ref[...].astype(jnp.float32)                   # (bs, hd)
+    v = v_ref[...].astype(jnp.float32)                   # (bs, hd)
+    ok = valid_ref[...] != 0                             # (bs,)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (g, bs)
+    s = jnp.where(ok[None, :], s, NEG)
+    m_prev = ms_ref[...][:, 0]                           # (g,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # explicit zeroing: on a fully-masked block exp(NEG - NEG) would be 1
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = ls_ref[...][:, 0] * corr + p.sum(axis=1)
+    acc_new = as_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    ms_ref[...] = m_new[:, None]
+    ls_ref[...] = l_new[:, None]
+    as_ref[...] = acc_new
+
+    @pl.when(j == n_s - 1)
+    def _emit():
+        m_ref[...] = ms_ref[...]
+        l_ref[...] = ls_ref[...]
+        acc_ref[...] = as_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def decode_attention_partial(
+    q: jax.Array,        # (b, hq, 1, hd)
+    k: jax.Array,        # (b, hkv, S, hd)
+    v: jax.Array,
+    valid: jax.Array,    # (S,) bool — position mask (causal/window/emptiness)
+    scale: float,
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+):
+    """-> flash partials (m (b,hq,1), l (b,hq,1), acc (b,hq,1,hd)) fp32."""
+    b, hq, _, hd = q.shape
+    hkv, S = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bs = min(block_s, S)
+    pad_s = (-S) % bs
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        valid = jnp.pad(valid, (0, pad_s))
+    Sp = S + pad_s
+    n_s = Sp // bs
+    qg = q.reshape(b, hkv, g, hd).reshape(b * hkv, g, hd)
+    kg = k.reshape(b * hkv, Sp, hd)
+    vg = v.reshape(b * hkv, Sp, hd)
+    vmask = valid.astype(jnp.int32)
+    import jax.experimental.pallas.tpu as pltpu
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, n_s=n_s),
+        grid=(b * hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((None, g, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, bs, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bs, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bs,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, g, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, g, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, g, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, g, hd), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qg, kg, vg, vmask)
+    m = m.reshape(b, hq, 1)
+    l = l.reshape(b, hq, 1)
+    acc = acc.reshape(b, hq, 1, hd)
+    # match the jnp path's -inf convention for fully-masked shards
+    m = jnp.where(m <= NEG / 2, -jnp.inf, m)
+    return m, l, acc

@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels always run with interpret=True (the kernel
+body executes in Python, validating the exact TPU program); on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` to lower to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import fused_residual as _fr
+from repro.kernels import topk_shard as _tk
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def topk(x: jax.Array, k: int):
+    """(batch, v_local) -> (vals (batch,k) fp32, idx (batch,k) int32)."""
+    return _tk.topk(x, k, interpret=INTERPRET)
+
+
+def fused_dual_matmul(a, wa, b, wb):
+    """(T,Ka)@(Ka,D) + (T,Kb)@(Kb,D) accumulated in one output tile."""
+    return _fr.fused_dual_matmul(a, wa, b, wb, interpret=INTERPRET)
+
+
+def decode_attention_partial(q, k, v, valid, scale):
+    """Flash partials (m, l, acc) for one decode token over the cache."""
+    return _da.decode_attention_partial(q, k, v, valid, float(scale),
+                                        interpret=INTERPRET)
+
+
+def lru_scan(a, b, h0):
+    """RG-LRU linear-recurrence scan: h_t = a_t h_{t-1} + b_t."""
+    from repro.kernels import lru_scan as _ls
+
+    return _ls.lru_scan(a, b, h0, interpret=INTERPRET)

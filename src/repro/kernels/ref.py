@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(x: jax.Array, k: int):
+    """(batch, v) -> (vals fp32, idx int32)."""
+    vals, idx = jax.lax.top_k(x.astype(jnp.float32), k)
+    return vals, idx.astype(jnp.int32)
+
+
+def fused_residual_ref(a, wa, b, wb):
+    """out = a@wa + b@wb with fp32 accumulation."""
+    o = jnp.dot(a.astype(jnp.float32), wa.astype(jnp.float32)) + jnp.dot(
+        b.astype(jnp.float32), wb.astype(jnp.float32)
+    )
+    return o.astype(a.dtype)
+
+
+def decode_attention_ref(q, k, v, valid, scale):
+    """Flash partials (m, l, acc) for one decode token; fp32.
+
+    q (b,hq,1,hd); k,v (b,hkv,S,hd); valid (S,) bool.
+    """
+    b, hq, _, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return (
+        m.reshape(b, hq, 1),
+        l.reshape(b, hq, 1),
+        acc.reshape(b, hq, 1, hd),
+    )
+
+
+def lru_scan_ref(a, b, h0):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via lax.scan; fp32.
+
+    a, b: (batch, seq, w); h0: (batch, w) -> (h (batch, seq, w), h_T)."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    at = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    bt = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), (at, bt))
+    return jnp.moveaxis(hs, 0, 1), hT

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input builders shared by the dry-run and launchers.
+
+``input_specs(arch, shape, ...)`` returns weak-type-correct, shardable
+stand-ins for every model input — no device allocation (deliverable (e).2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, ParallelConfig
+from repro.models import model as M
+from repro.runtime import kvcache
+
+Pytree = Any
+
+
+def needs_kv_seq_shard(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decode with any FULL-attention layer -> shard the cache
+    sequence over the data axis (window/SSM/RG-LRU caches stay O(window))."""
+    return (
+        shape.kind == "decode"
+        and shape.seq_len >= 262_144
+        and any(cfg.block_kind(i) == "attn" for i in range(len(cfg.layer_pattern)))
+    )
+
+
+def parallel_for(cfg: ModelConfig, shape: InputShape, *, tp: int, dp: int,
+                 pods: int = 1, use_pallas: bool = False) -> ParallelConfig:
+    return ParallelConfig(
+        tp=tp, dp=dp, pods=pods,
+        seq_parallel=True,
+        kv_seq_shard=needs_kv_seq_shard(cfg, shape),
+        remat=shape.kind == "train",
+        use_pallas=use_pallas,
+    )
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _globalize(local_tree: Pytree, spec_tree: Pytree, mesh) -> Pytree:
+    """Local (per-shard) ShapeDtypeStructs -> global, by multiplying each dim
+    by the total size of the mesh axes its spec entry names."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(local, spec):
+        dims = list(local.shape)
+        for i, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            for a in axes:
+                dims[i] *= sizes[a]
+        return _sds(tuple(dims), local.dtype, mesh, spec)
+
+    return jax.tree.map(one, local_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_axes(ctx: M.ModelCtx):
+    d = ctx.dist.data_axes
+    return d if len(d) > 1 else d[0]
+
+
+def token_specs(ctx: M.ModelCtx, mesh, global_batch: int, text_len: int,
+                *, replicate_batch: bool = False) -> jax.ShapeDtypeStruct:
+    cfg = ctx.cfg
+    b_ax = None if replicate_batch else batch_axes(ctx)
+    shp = (global_batch, text_len) if cfg.n_codebooks == 1 else (
+        global_batch, text_len, cfg.n_codebooks)
+    spec = P(b_ax, None) if cfg.n_codebooks == 1 else P(b_ax, None, None)
+    return _sds(shp, jnp.int32, mesh, spec)
+
+
+def feature_specs(ctx: M.ModelCtx, mesh, global_batch: int,
+                  *, replicate_batch: bool = False):
+    f = ctx.cfg.frontend
+    if f is None:
+        return None
+    b_ax = None if replicate_batch else batch_axes(ctx)
+    return _sds((global_batch, f.prefix_len, f.feature_dim), jnp.float32, mesh,
+                P(b_ax, None, None))
+
+
+def param_input_specs(ctx: M.ModelCtx, mesh) -> Pytree:
+    shapes = M.param_shapes(ctx)
+    specs = M.param_specs(ctx)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def replicate_batch_for(ctx: M.ModelCtx, shape: InputShape) -> bool:
+    return shape.global_batch < ctx.dist.dp * ctx.dist.pods
+
+
+def cache_input_specs(ctx: M.ModelCtx, mesh, shape: InputShape) -> Tuple[Pytree, Pytree]:
+    """-> (global cache ShapeDtypeStructs, cache specs)."""
+    kv_seq = ctx.parallel.kv_seq_shard
+    rep_b = replicate_batch_for(ctx, shape)
+    dp_total = ctx.dist.dp * ctx.dist.pods
+    if kv_seq or rep_b:
+        b_local, kv_dp = shape.global_batch, (ctx.dist.dp if kv_seq else 1)
+    else:
+        b_local, kv_dp = shape.global_batch // dp_total, 1
+    local = jax.eval_shape(
+        lambda: M.init_caches(ctx, b_local, shape.seq_len, kv_seq_shard_dp=kv_dp)
+    )
+    specs = kvcache.cache_pspecs(ctx, kv_seq_shard=kv_seq, replicate_batch=rep_b)
+    return _globalize(local, specs, mesh), specs
+
+
+def rng_spec(mesh):
+    k = jax.eval_shape(lambda: jax.random.key(0))
+    return _sds(k.shape, k.dtype, mesh, P())
+
+
+def text_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """seq_len is the TOTAL sequence; multimodal prefix comes out of it."""
+    if cfg.frontend is not None and shape.kind != "decode":
+        return shape.seq_len - cfg.frontend.prefix_len
+    return shape.seq_len

@@ -1,0 +1,24 @@
+"""Mesh construction. Functions only — importing this module never touches
+jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production target: one v5e pod 16x16 = 256 chips, or 2 pods = 512.
+
+    The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count
+    before any jax import so these shapes materialise on CPU."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_local_mesh(dp: int = 1, tp: int = 1):
+    """Test/example mesh over however many (virtual) devices exist."""
+    return jax.make_mesh((dp, tp), ("data", "model"), axis_types=_auto(2))

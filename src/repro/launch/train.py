@@ -1,0 +1,94 @@
+"""Training driver: ``python -m repro.launch.train --arch yi-9b --steps 200``.
+
+On this CPU container it runs REDUCED configs on a local mesh (the end-to-end
+example deliverable: ~100M-class model for a few hundred steps); on real
+hardware the same driver takes --full and the production mesh geometry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.models.common import specs_of
+from repro.training import checkpoint, data
+from repro.training.train_loop import AdamWConfig, init_opt_state, make_train_step
+from repro.training.zero import init_zero_state, zero_state_defs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) architecture config")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh(args.dp, args.tp)
+    par = ParallelConfig(tp=args.tp, dp=args.dp, remat=True)
+    ctx = M.ModelCtx.make(cfg, par)
+    params = M.init_params(ctx, jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh=({args.dp},{args.tp})")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                          total_steps=args.steps)
+    pspecs = M.param_specs(ctx)
+    if args.zero1:
+        opt = init_zero_state(M.model_defs(ctx), ctx.dist)
+        ospecs = specs_of(zero_state_defs(M.model_defs(ctx), ctx.dist))
+    else:
+        opt = init_opt_state(params)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+
+    dc = data.DataConfig(global_batch=args.global_batch, seq_len=args.seq_len)
+    b0 = data.make_batch(cfg, dc, 0)
+    bspecs = {k: P("data", *(None,) * (v.ndim - 1)) for k, v in b0.items()}
+
+    step_fn = make_train_step(ctx, opt_cfg, zero1=args.zero1)
+    jstep = jax.jit(
+        jax.shard_map(step_fn, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
+                      out_specs=(pspecs, ospecs, P()), check_vma=False),
+        donate_argnums=(0, 1),
+    )
+
+    t0 = time.time()
+    history = []
+    for step, batch in enumerate(data.iter_batches(cfg, dc)):
+        if step >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = jstep(params, opt, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            print(f"step {step:5d} loss {m['loss']:.4f} aux {m['aux']:.3f} "
+                  f"gnorm {m['grad_norm']:.2f} ({time.time()-t0:.0f}s)", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.steps,
+                        meta={"arch": cfg.name, "history": history[-5:]})
+        print("saved", args.ckpt)
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,615 @@
+"""Attention: GQA/MHA (+QKV bias, RoPE, sliding window) and MLA.
+
+Per-shard code (runs under shard_map).  All outputs of the out-projection are
+returned **unreduced** — the block assembly applies the SyncPolicy so the
+collective schedule (paper §2.2) is decided in exactly one place.
+
+KV caches carry an explicit per-slot absolute-position array, which uniformly
+handles full caches, sliding-window ring buffers, and the sequence-sharded
+long-context cache (cache sequence sharded over the ``data`` axis, partial
+attention merged with a log-sum-exp psum — the sub-quadratic long_500k path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import collectives as cc
+from repro.core.sync_policy import SyncPolicy
+from repro.core.zero_copy import fused_out_projection
+from repro.models.common import Dist, ParamDef, ShardPlan, apply_rope
+
+KV_CHUNK = 1024  # flash-style kv chunk for prefill
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist) -> Dict[str, ParamDef]:
+    if cfg.mla is not None:
+        return _mla_defs(cfg, plan, dist)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    M = dist.model_axis
+    kv_sharded = plan.n_kv_p >= plan.tp
+    kv_cols = (plan.n_kv_p if kv_sharded else plan.n_kv_heads) * hd
+    kv_spec = P(None, M) if kv_sharded else P(None, None)
+    defs = {
+        "w_q": ParamDef((d, plan.n_heads_p * hd), P(None, M), init="scaled", scale_dim=0),
+        "w_k": ParamDef((d, kv_cols), kv_spec, init="scaled", scale_dim=0),
+        "w_v": ParamDef((d, kv_cols), kv_spec, init="scaled", scale_dim=0),
+        "w_o": ParamDef((plan.n_heads_p, hd, d), P(M, None, None), init="scaled", scale_dim=1),
+    }
+    if cfg.qkv_bias:
+        bias_spec = P(M) if kv_sharded else P(None)
+        defs["b_q"] = ParamDef((plan.n_heads_p * hd,), P(M), init="zeros")
+        defs["b_k"] = ParamDef((kv_cols,), bias_spec, init="zeros")
+        defs["b_v"] = ParamDef((kv_cols,), bias_spec, init="zeros")
+    return defs
+
+
+def _mla_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist) -> Dict[str, ParamDef]:
+    m, d, M = cfg.mla, cfg.d_model, dist.model_axis
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamDef((d, m.q_lora_rank), P(None, None), init="scaled", scale_dim=0),
+        "q_norm": ParamDef((m.q_lora_rank,), P(None), init="zeros"),
+        "w_uq": ParamDef((m.q_lora_rank, plan.n_heads_p * qd), P(None, M), init="scaled", scale_dim=0),
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim), P(None, None), init="scaled", scale_dim=0),
+        "kv_norm": ParamDef((m.kv_lora_rank,), P(None), init="zeros"),
+        "w_uk": ParamDef((m.kv_lora_rank, plan.n_heads_p * m.qk_nope_head_dim), P(None, M), init="scaled", scale_dim=0),
+        "w_uv": ParamDef((m.kv_lora_rank, plan.n_heads_p * m.v_head_dim), P(None, M), init="scaled", scale_dim=0),
+        "w_o": ParamDef((plan.n_heads_p, m.v_head_dim, d), P(M, None, None), init="scaled", scale_dim=1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    batch_local: int,
+    cache_len_local: int,
+    *,
+    kind: str,
+    dtype=jnp.bfloat16,
+    quant: bool = False,
+) -> Dict[str, jax.Array]:
+    """Per-shard cache buffers for one layer (stacked by the scan outside).
+
+    quant=True stores K/V as int8 with a per-(batch, head, slot) bf16 absmax
+    scale — halves cache HBM residency + read traffic (beyond-paper)."""
+    if cfg.mla is not None:
+        m = cfg.mla   # latent cache is already 10-30x smaller; no quant
+        return {
+            "ckv": jnp.zeros((batch_local, cache_len_local, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch_local, cache_len_local, m.qk_rope_head_dim), dtype),
+            "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+        }
+    hd = cfg.resolved_head_dim
+    shape = (batch_local, plan.local_kv, cache_len_local, hd)
+    if quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], dtype),
+            "v_scale": jnp.zeros(shape[:3], dtype),
+            "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+    }
+
+
+def _quantize_kv(x: jax.Array):
+    """(b,h,s,hd) -> (int8 values, (b,h,s) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def cache_len_for(cfg: ModelConfig, kind: str, seq_len: int, kv_seq_shard_dp: int) -> int:
+    """Per-shard cache length: windowed archs cap at window, seq-sharding
+    divides over the data axis."""
+    eff = min(seq_len, cfg.window) if (cfg.window and kind == "local_attn") else seq_len
+    if kv_seq_shard_dp > 1 and eff == seq_len:
+        eff = -(-seq_len // kv_seq_shard_dp)
+    return eff
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (b,hq,Sq,hd) x k (b,hkv,Sk,hd) -> (b,hq,Sq,Sk) fp32, GQA groups.
+
+    Inputs stay in their storage dtype (bf16) with fp32 ACCUMULATION
+    (preferred_element_type) — casting the KV cache to fp32 first would
+    materialise a 2x-sized copy of the whole cache per layer (§Perf H1:
+    measured 97.5 -> 43.7 GB/device on qwen2.5-32b decode_32k)."""
+    b, hq, sq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(b, hq, sq, k.shape[2])
+
+
+def _grouped_attend(w: jax.Array, v: jax.Array) -> jax.Array:
+    b, hq, sq, sk = w.shape
+    hkv = v.shape[1]
+    g = hq // hkv
+    wg = w.reshape(b, hkv, g, sq, sk)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", wg.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, sq, v.shape[3])
+
+
+def chunked_causal_attention(
+    q: jax.Array,                 # (b, hq, Sq, hd) — RoPE already applied
+    k: jax.Array,                 # (b, hkv, Sk, hd)
+    v: jax.Array,
+    q_positions: jax.Array,       # (Sq,) absolute positions
+    kv_positions: jax.Array,      # (Sk,) absolute positions (-1 = empty slot)
+    window: int,                  # 0 = full causal
+    scale: float,
+) -> jax.Array:
+    """Flash-style streaming softmax over KV chunks (pure jnp oracle path)."""
+    b, hq, sq, hd = q.shape
+    sk = k.shape[2]
+    chunk = min(KV_CHUNK, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kc = k.reshape(b, k.shape[1], n_chunks, chunk, k.shape[3]).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, v.shape[1], n_chunks, chunk, v.shape[3]).transpose(2, 0, 1, 3, 4)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_i, v_i, p_i = inputs
+        s = _grouped_scores(q, k_i) * scale                      # (b,hq,Sq,chunk)
+        valid = (p_i[None, :] >= 0) & (p_i[None, :] <= q_positions[:, None])
+        if window:
+            valid &= p_i[None, :] > q_positions[:, None] - window
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> use where
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + _grouped_attend(p, v_i)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, v.shape[3]), jnp.float32)  # v_dim may != hd (MLA)
+    from repro.models.common import maybe_scan
+    (m, l, acc), _ = maybe_scan(step, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def banded_causal_attention(
+    q: jax.Array,                 # (b, hq, S, hd) — RoPE applied
+    k: jax.Array,                 # (b, hkv, S, hd)
+    v: jax.Array,
+    positions: jax.Array,         # (S,) absolute
+    window: int,
+    scale: float,
+    q_chunk: int = 1024,
+) -> jax.Array:
+    """Sliding-window prefill in O(S·window) instead of O(S^2) (§Perf H6).
+
+    Scans query chunks; each attends only its [pos-window, pos] KV band,
+    sliced with a front-padded cache so slice bounds are static."""
+    b, hq, S, hd = q.shape
+    cq = min(q_chunk, S)
+    if S % cq:
+        return chunked_causal_attention(q, k, v, positions, positions, window, scale)
+    n_q = S // cq
+    band = window + cq            # covers every query in the chunk
+    pad = band                    # front pad so (start >= 0) always
+    kp = jnp.pad(k, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+    pp = jnp.pad(positions, (pad, 0), constant_values=-1)
+    qc = q.reshape(b, hq, n_q, cq, hd).transpose(2, 0, 1, 3, 4)   # (n_q,b,hq,cq,hd)
+    pc = positions.reshape(n_q, cq)
+
+    def one(i, q_i, qpos_i):
+        start = pad + (i + 1) * cq - band
+        k_i = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=2)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=2)
+        p_i = jax.lax.dynamic_slice_in_dim(pp, start, band, axis=0)
+        s = _grouped_scores(q_i, k_i) * scale                     # (b,hq,cq,band)
+        ok = (p_i[None, :] >= 0) & (p_i[None, :] <= qpos_i[:, None])
+        ok &= p_i[None, :] > qpos_i[:, None] - window
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+        m = s.max(axis=-1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        l = p.sum(axis=-1)
+        o = _grouped_attend(p, v_i) / jnp.maximum(l, 1e-30)[..., None]
+        return o.astype(q.dtype)
+
+    def body(_, inp):
+        i, q_i, qp_i = inp
+        return None, one(i, q_i, qp_i)
+
+    from repro.models.common import maybe_scan
+    _, out = maybe_scan(body, None,
+                        (jnp.arange(n_q, dtype=jnp.int32), qc, pc))
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, S, hd)
+
+
+def _prefill_attention(q, k, v, positions, window, scale):
+    """Dispatch: banded O(S*window) path for long windowed prefill (§Perf H6),
+    full chunked flash otherwise."""
+    S = q.shape[2]
+    if window and S >= 4 * window and S % min(1024, S) == 0:
+        return banded_causal_attention(q, k, v, positions, window, scale)
+    return chunked_causal_attention(q, k, v, positions, positions, window, scale)
+
+
+def decode_attention_shardable(
+    q: jax.Array,                 # (b, hq, 1, hd)
+    k: jax.Array,                 # (b, hkv, S_local, hd) cache slice
+    v: jax.Array,
+    kv_positions: jax.Array,      # (S_local,)
+    cur_pos: jax.Array,           # scalar int32: position of the query token
+    window: int,
+    scale: float,
+    dist: Dist,
+    *,
+    seq_axis: Optional[str] = None,   # data axis name when cache is seq-sharded
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Single-token attention over the (possibly seq-sharded) cache.
+
+    When ``seq_axis`` is given, each shard holds a slice of the cache
+    sequence; partials are merged with a log-sum-exp psum of (num, denom) —
+    O(b·h·hd) bytes instead of gathering the O(S) cache.
+    """
+    valid = (kv_positions >= 0) & (kv_positions <= cur_pos)
+    if window:
+        valid &= kv_positions > cur_pos - window
+    if use_pallas and q.shape[-1] % 128 == 0 and k.shape[2] % 128 == 0:
+        from repro.kernels import ops as kops
+
+        m, l, acc = kops.decode_attention_partial(q, k, v, valid, scale)
+    else:
+        s = _grouped_scores(q, k) * scale                        # (b,hq,1,S)
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        m = s.max(axis=-1)                                       # (b,hq,1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        l = p.sum(axis=-1)
+        acc = _grouped_attend(p, v)                              # (b,hq,1,hd)
+    if seq_axis is not None:
+        m_g = jax.lax.pmax(m, seq_axis)
+        m_gs = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_gs), 0.0)
+        l, acc = cc.psum(
+            (l * corr, acc * corr[..., None]), seq_axis, tag="lse_merge"
+        )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache update helpers
+# ---------------------------------------------------------------------------
+
+
+def _write_prefill(cache_side: jax.Array, new: jax.Array, positions: jax.Array, S: int,
+                   seq_axis: Optional[str] = None):
+    """Write (b,h,s,hd) prefill K/V into an (b,h,S,hd) cache; keeps last S.
+
+    With ``seq_axis`` (sequence-sharded cache) each shard takes its own slice
+    of the prefill; requires s == S * axis_size."""
+    new = new.astype(cache_side.dtype)
+    s = new.shape[2]
+    if seq_axis is not None:
+        ns = jax.lax.axis_size(seq_axis)
+        if s > S * ns:
+            raise ValueError(f"seq-sharded prefill needs s <= S*shards ({s} > {S}*{ns})")
+        if s < S * ns:  # pad; padded slots keep pos = -1 (masked, decode-writable)
+            new = jnp.pad(new, ((0, 0), (0, 0), (0, S * ns - s), (0, 0)))
+            positions = jnp.pad(positions, (0, S * ns - s), constant_values=-1)
+        idx = jax.lax.axis_index(seq_axis)
+        new = jax.lax.dynamic_slice_in_dim(new, idx * S, S, axis=2)
+        pos = jax.lax.dynamic_slice_in_dim(positions, idx * S, S, axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(cache_side, new, 0, axis=2), pos
+    if s <= S:
+        out = jax.lax.dynamic_update_slice_in_dim(cache_side, new, 0, axis=2)
+        pos = positions[:S] if s == S else jnp.concatenate(
+            [positions, jnp.full((S - s,), -1, jnp.int32)]
+        )
+        return out, pos
+    # window cache smaller than prefill: keep the last S tokens, ring layout
+    tail = new[:, :, -S:, :]
+    tail_pos = positions[-S:]
+    slots = tail_pos % S
+    out = cache_side.at[:, :, slots, :].set(tail)
+    pos = jnp.zeros((S,), jnp.int32).at[slots].set(tail_pos)
+    return out, pos
+
+
+def _write_decode(cache_side: jax.Array, new: jax.Array, cur_pos: jax.Array,
+                  S: int, ring: bool, seq_shard: Optional[Tuple[str, int]]):
+    """Write one token (b,h,1,hd) at its slot; returns updated cache."""
+    new = new.astype(cache_side.dtype)
+    if ring:
+        slot = cur_pos % S
+        return jax.lax.dynamic_update_slice_in_dim(cache_side, new, slot, axis=2)
+    if seq_shard is None:
+        return jax.lax.dynamic_update_slice_in_dim(cache_side, new, cur_pos, axis=2)
+    axis, S_local = seq_shard
+    owner = cur_pos // S_local
+    slot = cur_pos - owner * S_local
+    mine = jax.lax.axis_index(axis) == owner
+    updated = jax.lax.dynamic_update_slice_in_dim(cache_side, new, slot, axis=2)
+    return jnp.where(mine, updated, cache_side)
+
+
+def _write_pos(pos_arr: jax.Array, cur_pos: jax.Array, S: int, ring: bool,
+               seq_shard: Optional[Tuple[str, int]]):
+    one = cur_pos[None].astype(jnp.int32)
+    if ring:
+        return jax.lax.dynamic_update_slice(pos_arr, one, (cur_pos % S,))
+    if seq_shard is None:
+        return jax.lax.dynamic_update_slice(pos_arr, one, (cur_pos,))
+    axis, S_local = seq_shard
+    owner = cur_pos // S_local
+    slot = cur_pos - owner * S_local
+    mine = jax.lax.axis_index(axis) == owner
+    updated = jax.lax.dynamic_update_slice(pos_arr, one, (slot,))
+    return jnp.where(mine, updated, pos_arr)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _slice_kv_weight(w: jax.Array, plan: ShardPlan, dist: Dist, hd: int) -> jax.Array:
+    """Replicated (d, n_kv*hd) KV weight -> this shard's (d, local_kv*hd)."""
+    if plan.n_kv_p >= plan.tp:
+        return w  # already sharded by pjit/shard_map in_specs
+    kv_head = dist.model_idx() // plan.kv_rep
+    return jax.lax.dynamic_slice_in_dim(w, kv_head * plan.local_kv * hd,
+                                        plan.local_kv * hd, axis=w.ndim - 1)
+
+
+def gqa_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                 # (b, s, d) replicated over model axis
+    positions: jax.Array,         # (s,) absolute
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    kind: str,                    # "attn" | "local_attn"
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cur_pos: Optional[jax.Array] = None,    # scalar, decode only
+    kv_seq_axis: Optional[str] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (partial out (b,s,d) — UNREDUCED over model axis, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    window = cfg.window if kind == "local_attn" else 0
+    scale = 1.0 / math.sqrt(hd)
+    decode = cache is not None and s == 1
+
+    q = x @ params["w_q"]
+    if "b_q" in params:
+        q = q + params["b_q"]
+    w_k = _slice_kv_weight(params["w_k"], plan, dist, hd)
+    w_v = _slice_kv_weight(params["w_v"], plan, dist, hd)
+    k = x @ w_k
+    v = x @ w_v
+    if "b_k" in params:
+        b_k = _slice_kv_weight(params["b_k"][None], plan, dist, hd)[0]
+        b_v = _slice_kv_weight(params["b_v"][None], plan, dist, hd)[0]
+        k, v = k + b_k, v + b_v
+
+    q = q.reshape(b, s, plan.local_q, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, plan.local_kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, plan.local_kv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        S = cache["k"].shape[2]
+        ring = bool(window) and kv_seq_axis is None
+        quant = "k_scale" in cache
+        if decode:
+            seq_shard = (kv_seq_axis, S) if kv_seq_axis else None
+            if quant:
+                kq, ksc = _quantize_kv(k)
+                vq, vsc = _quantize_kv(v)
+                ck = _write_decode(cache["k"], kq, cur_pos, S, ring, seq_shard)
+                cv = _write_decode(cache["v"], vq, cur_pos, S, ring, seq_shard)
+                cks = _write_decode(cache["k_scale"][..., None], ksc[..., None],
+                                    cur_pos, S, ring, seq_shard)[..., 0]
+                cvs = _write_decode(cache["v_scale"][..., None], vsc[..., None],
+                                    cur_pos, S, ring, seq_shard)[..., 0]
+                cpos = _write_pos(cache["pos"], cur_pos, S, ring, seq_shard)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                             "pos": cpos}
+                k_read = _dequantize_kv(ck, cks)
+                v_read = _dequantize_kv(cv, cvs)
+            else:
+                ck = _write_decode(cache["k"], k, cur_pos, S, ring, seq_shard)
+                cv = _write_decode(cache["v"], v, cur_pos, S, ring, seq_shard)
+                cpos = _write_pos(cache["pos"], cur_pos, S, ring, seq_shard)
+                new_cache = {"k": ck, "v": cv, "pos": cpos}
+                k_read, v_read = ck, cv
+            out = decode_attention_shardable(
+                q, k_read, v_read, cpos, cur_pos, window, scale, dist,
+                seq_axis=kv_seq_axis, use_pallas=use_pallas,
+            )
+        else:
+            if quant:
+                kq, ksc = _quantize_kv(k)
+                vq, vsc = _quantize_kv(v)
+                ck, cpos = _write_prefill(cache["k"], kq, positions, S, kv_seq_axis)
+                cv, _ = _write_prefill(cache["v"], vq, positions, S, kv_seq_axis)
+                cks, _ = _write_prefill(cache["k_scale"][..., None],
+                                        ksc[..., None], positions, S, kv_seq_axis)
+                cvs, _ = _write_prefill(cache["v_scale"][..., None],
+                                        vsc[..., None], positions, S, kv_seq_axis)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks[..., 0],
+                             "v_scale": cvs[..., 0], "pos": cpos}
+            else:
+                ck, cpos = _write_prefill(cache["k"], k, positions, S, kv_seq_axis)
+                cv, _ = _write_prefill(cache["v"], v, positions, S, kv_seq_axis)
+                new_cache = {"k": ck, "v": cv, "pos": cpos}
+            out = _prefill_attention(q, k, v, positions, window, scale)
+    else:
+        out = _prefill_attention(q, k, v, positions, window, scale)
+
+    partial = fused_out_projection(out, params["w_o"])  # zero-copy epilogue
+    return partial, new_cache
+
+
+def mla_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cur_pos: Optional[jax.Array] = None,
+    kv_seq_axis: Optional[str] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Multi-head latent attention (DeepSeek-V2 style, absorbed matmuls).
+
+    Cache holds only (kv_lora_rank + rope_dim) floats/token — MLA's whole
+    point; it is replicated over the model axis and optionally seq-sharded
+    over the data axis for long_500k.
+    """
+    from repro.models.common import rms_norm
+
+    m = cfg.mla
+    b, s, d = x.shape
+    h = plan.local_q
+    decode = cache is not None and s == 1
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    # --- queries ---------------------------------------------------------
+    q_lat = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps)
+    q = (q_lat @ params["w_uq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[None, None, :],
+                        cfg.rope_theta)                       # (b,h,s,rope)
+    # absorb W_uk into q: (b,s,h,nope) @ (rank, h, nope) -> (b,h,s,rank)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bshn,rhn->bhsr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    # --- latent kv -------------------------------------------------------
+    dkv = x @ params["w_dkv"]
+    ckv_new, krope_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv_new = rms_norm(ckv_new, params["kv_norm"], cfg.rms_eps)
+    krope_new = apply_rope(krope_new[:, None], positions[None, None, :],
+                           cfg.rope_theta)[:, 0]              # (b,s,rope)
+
+    if cache is not None:
+        S = cache["ckv"].shape[1]
+        if decode:
+            seq_shard = (kv_seq_axis, S) if kv_seq_axis else None
+            # reuse the generic writers via a dummy head axis
+            ckv = _write_decode(cache["ckv"][:, None], ckv_new[:, None], cur_pos,
+                                S, False, seq_shard)[:, 0]
+            krope = _write_decode(cache["krope"][:, None], krope_new[:, None],
+                                  cur_pos, S, False, seq_shard)[:, 0]
+            cpos = _write_pos(cache["pos"], cur_pos, S, False, seq_shard)
+        else:
+            ckv, cpos = _write_prefill(cache["ckv"][:, None], ckv_new[:, None],
+                                       positions, S, kv_seq_axis)
+            ckv = ckv[:, 0]
+            krope, _ = _write_prefill(cache["krope"][:, None], krope_new[:, None],
+                                      positions, S, kv_seq_axis)
+            krope = krope[:, 0]
+        new_cache = {"ckv": ckv, "krope": krope, "pos": cpos}
+        if decode:
+            kv_src, krope_src, kv_pos = ckv, krope, cpos
+        else:  # prefill attends over the full freshly-computed latents
+            kv_src, krope_src, kv_pos = ckv_new, krope_new, positions
+    else:
+        new_cache = None
+        kv_src, krope_src = ckv_new, krope_new
+        kv_pos = positions
+
+    if decode:
+        # §Perf H2: two-dot scores (nope·ckv + rope·krope) instead of
+        # concat([ckv, krope]) — the concat materialised a cache-sized copy
+        # per layer per decode step. fp32 accumulation, bf16 operands.
+        qa = q_abs.astype(x.dtype)                                  # (b,h,1,r)
+        qr = q_rope.astype(x.dtype)                                 # (b,h,1,e)
+        s_nope = jnp.einsum("bhsr,btr->bhst", qa, kv_src,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhse,bte->bhst", qr, krope_src,
+                            preferred_element_type=jnp.float32)
+        sc = (s_nope + s_rope) * scale                              # (b,h,1,t)
+        valid = (kv_pos >= 0) & (kv_pos <= cur_pos)
+        sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+        mx = sc.max(axis=-1)
+        mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        p = jnp.exp(sc - mx_safe[..., None])
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bhst,btr->bhsr", p.astype(x.dtype), kv_src,
+                         preferred_element_type=jnp.float32)
+        if kv_seq_axis is not None:
+            m_g = jax.lax.pmax(mx, kv_seq_axis)
+            m_gs = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+            corr = jnp.where(jnp.isfinite(mx), jnp.exp(mx - m_gs), 0.0)
+            l, acc = cc.psum((l * corr, acc * corr[..., None]), kv_seq_axis,
+                             tag="lse_merge")
+        o_lat = acc / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        # prefill: MLA as MQA over the latent (k_eff = [ckv ; krope], one
+        # shared head of width rank+rope) — reuses the chunked flash path.
+        q_eff = jnp.concatenate(
+            [q_abs, q_rope.astype(jnp.float32)], axis=-1).astype(x.dtype)
+        k_eff = jnp.concatenate([kv_src, krope_src], axis=-1)[:, None]
+        v_eff = kv_src[:, None]
+        o_lat = chunked_causal_attention(
+            q_eff, k_eff, v_eff, positions, kv_pos, 0, scale
+        ).astype(jnp.float32)
+    # value up-projection (absorbed): (b,h,s,rank) @ (rank,h,vd) -> (b,h,s,vd)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhsr,rhv->bhsv", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    partial = fused_out_projection(o, params["w_o"])
+    return partial, new_cache

@@ -1,0 +1,37 @@
+"""Dense FFN: gated (SwiGLU/GeGLU) or plain 2-matmul, column→row parallel.
+
+Output is the UNREDUCED row-parallel partial — the block applies SyncPolicy.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Dist, ParamDef, activation
+
+
+def mlp_defs(cfg: ModelConfig, dist: Dist, d_ff: int = 0) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    M = dist.model_axis
+    defs = {
+        "w_up": ParamDef((d, f), P(None, M), init="scaled", scale_dim=0),
+        "w_down": ParamDef((f, d), P(M, None), init="scaled", scale_dim=0),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((d, f), P(None, M), init="scaled", scale_dim=0)
+    return defs
+
+
+def mlp_forward(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation(cfg.act)
+    up = x @ params["w_up"]
+    if cfg.gated_mlp:
+        h = act(x @ params["w_gate"]) * up
+    else:
+        h = act(up)
+    return h @ params["w_down"]          # unreduced partial

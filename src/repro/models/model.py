@@ -1,0 +1,187 @@
+"""Top-level model: params, forward, and the per-shard step functions.
+
+Everything here is per-shard code for ``jax.shard_map``; the launcher
+(`repro.launch`) wraps these in shard_map + jit with the right specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import embedding as emb
+from repro.core.sync_policy import SyncPolicy
+from repro.models import multimodal, transformer as tfm
+from repro.models.common import (
+    Dist,
+    ParamDef,
+    ShardPlan,
+    materialize,
+    rms_norm,
+    shapes_of,
+    specs_of,
+)
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ModelCtx:
+    """Everything static the per-shard step functions need."""
+
+    cfg: ModelConfig
+    plan: ShardPlan
+    dist: Dist
+    parallel: ParallelConfig
+
+    @staticmethod
+    def make(cfg: ModelConfig, parallel: ParallelConfig,
+             *, pod_axis: Optional[str] = None) -> "ModelCtx":
+        dist = Dist(
+            model_axis="model", data_axis="data", pod_axis=pod_axis,
+            tp=parallel.tp, dp=parallel.dp, pods=parallel.pods,
+        )
+        return ModelCtx(cfg, ShardPlan.make(cfg, parallel.tp), dist, parallel)
+
+    def policy(self, *, seq_sharded: bool) -> SyncPolicy:
+        return SyncPolicy(
+            dist=self.dist,
+            seq_sharded=seq_sharded and self.parallel.seq_parallel and self.dist.tp > 1,
+            one_shot=self.parallel.one_shot_sync,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def model_defs(ctx: ModelCtx) -> Dict[str, Any]:
+    cfg, plan, dist = ctx.cfg, ctx.plan, ctx.dist
+    groups = tfm.build_groups(cfg)
+    defs: Dict[str, Any] = {
+        "embed": emb.embed_defs(cfg, plan, dist),
+        "groups": tuple(tfm.group_defs(cfg, plan, dist, g) for g in groups),
+        "final_norm": ParamDef((cfg.d_model,), P(None), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef(
+            (cfg.n_codebooks, cfg.d_model, plan.vocab_p),
+            P(None, None, dist.model_axis),
+            init="scaled",
+            scale_dim=1,
+        )
+    if cfg.frontend is not None:
+        defs["frontend"] = multimodal.frontend_defs(cfg, dist)
+    return defs
+
+
+def init_params(ctx: ModelCtx, key) -> Pytree:
+    return materialize(model_defs(ctx), key)
+
+
+def param_specs(ctx: ModelCtx) -> Pytree:
+    return specs_of(model_defs(ctx))
+
+
+def param_shapes(ctx: ModelCtx) -> Pytree:
+    return shapes_of(model_defs(ctx))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _lm_head(params, x, ctx: ModelCtx) -> jax.Array:
+    """x (b,s,d) -> local logits (b,s,[ncb,]V_local), fp32."""
+    cfg = ctx.cfg
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"]      # (ncb, V_local, d) vocab-sharded
+        logits = jnp.einsum("bsd,cvd->bscv", x.astype(jnp.float32),
+                            table.astype(jnp.float32))
+    else:
+        logits = jnp.einsum("bsd,cdv->bscv", x.astype(jnp.float32),
+                            params["lm_head"].astype(jnp.float32))
+    return logits[:, :, 0] if cfg.n_codebooks == 1 else logits
+
+
+def forward(
+    params: Pytree,
+    tokens: jax.Array,               # (b_local, s) or (b_local, s, ncb)
+    ctx: ModelCtx,
+    *,
+    features: Optional[jax.Array] = None,   # (b_local, prefix, feat) stub output
+    caches: Optional[Tuple] = None,
+    cur_pos: Optional[jax.Array] = None,    # scalar int32 (decode)
+    kv_seq_axis: Optional[str] = None,
+    seq_sharded: bool = False,
+    last_only: bool = False,
+    id_broadcast: Optional[bool] = None,
+    skip_head: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
+    """-> (local logits, new_caches, aux_loss). Logits are vocab-sharded.
+
+    skip_head=True returns the final-norm hidden states instead of logits
+    (the chunked vocab-parallel loss applies the head itself)."""
+    cfg, plan, dist = ctx.cfg, ctx.plan, ctx.dist
+    policy = ctx.policy(seq_sharded=seq_sharded)
+    if id_broadcast is None:
+        id_broadcast = ctx.parallel.id_broadcast
+    decode = cur_pos is not None and tokens.shape[1] == 1
+
+    x = emb.embed_lookup(params["embed"], tokens, cfg, plan, dist,
+                         id_broadcast=id_broadcast)
+    if cfg.frontend is not None and features is not None:
+        prefix = multimodal.project_features(params["frontend"], features, cfg)
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+
+    s_total = x.shape[1]
+    if decode:
+        positions = cur_pos[None]
+    else:
+        positions = jnp.arange(s_total, dtype=jnp.int32)
+
+    x = policy.shard_residual(x)
+    groups = tfm.build_groups(cfg)
+    new_caches = [] if caches is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for gi, g in enumerate(groups):
+        c = caches[gi] if caches is not None else None
+        x, c_new, a = tfm.group_forward(
+            params["groups"][gi], x, positions, cfg, plan, dist, policy, g,
+            caches=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
+            use_pallas=ctx.parallel.use_pallas, remat=ctx.parallel.remat and not decode,
+        )
+        aux = aux + a
+        if new_caches is not None:
+            new_caches.append(c_new)
+    x = policy.unshard_residual(x)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if last_only:
+        x = x[:, -1:]
+    if skip_head:
+        return x, (tuple(new_caches) if new_caches is not None else None), aux
+    logits = _lm_head(params, x, ctx)
+    return logits, (tuple(new_caches) if new_caches is not None else None), aux
+
+
+def lm_head_local(params, x, ctx: ModelCtx) -> jax.Array:
+    """Public head application (used by the chunked loss)."""
+    return _lm_head(params, x, ctx)
+
+
+def init_caches(ctx: ModelCtx, batch_local: int, cache_len: int,
+                *, kv_seq_shard_dp: int = 1) -> Tuple:
+    groups = tfm.build_groups(ctx.cfg)
+    return tuple(
+        tfm.group_cache(ctx.cfg, ctx.plan, ctx.dist, g, batch_local, cache_len,
+                        kv_seq_shard_dp, quant=ctx.parallel.kv_quant)
+        for g in groups
+    )
+
+

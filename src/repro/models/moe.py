@@ -1,0 +1,157 @@
+"""Mixture-of-experts FFN with expert-parallel sharding over the model axis.
+
+Design (see DESIGN.md §5): activations entering the FFN are replicated over
+the model axis (they come out of the attention psum / SP all-gather), so
+expert parallelism needs **no extra all-to-all**: every shard routes the full
+token set, index-gathers only the tokens destined for *its* experts, and the
+layer's single existing reduction (psum / psum_scatter) merges expert outputs
+— the MoE analogue of the paper's minimize-synchronization principle.
+
+Expert weight storage is uniform: ``(n_blocks, d, dff_block)`` with
+``n_blocks = max(E, tp)`` sharded on dim 0.  When E < tp each expert's d_ff is
+split over ``ffn_tp = tp // E`` shards (Mixtral: 8 experts x 2-way FFN TP);
+when E >= tp each shard owns ``E // tp`` whole experts (DeepSeekMoE: 4/shard).
+
+Routing is softmax→top-k→renormalize; dispatch is index-based (argsort +
+capacity clipping, GShard-style) — no O(T·E·C) one-hot matmuls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import Dist, ParamDef, activation
+
+
+def moe_plan(m: MoEConfig, tp: int) -> Tuple[int, int, int, int]:
+    """-> (n_blocks, dff_block, local_blocks, ffn_tp)."""
+    E = m.n_experts
+    if E >= tp:
+        if E % tp:
+            raise ValueError(f"n_experts {E} not divisible by tp {tp}")
+        return E, m.expert_d_ff, E // tp, 1
+    if tp % E:
+        raise ValueError(f"tp {tp} not divisible by n_experts {E}")
+    ffn_tp = tp // E
+    if m.expert_d_ff % ffn_tp:
+        raise ValueError("expert_d_ff not divisible by ffn_tp")
+    return tp, m.expert_d_ff // ffn_tp, 1, ffn_tp
+
+
+def capacity(m: MoEConfig, tokens: int) -> int:
+    """Expert capacity. Decode-sized batches get C = T (provably drop-free);
+    large prefill/train batches use the GShard capacity-factor clipping."""
+    if tokens <= 256:
+        return tokens
+    return max(4, int(math.ceil(tokens * m.top_k / m.n_experts * m.capacity_factor)))
+
+
+def moe_defs(cfg: ModelConfig, dist: Dist) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d, M = cfg.d_model, dist.model_axis
+    n_blocks, dff_b, _, _ = moe_plan(m, dist.tp)
+    defs = {
+        "router": ParamDef((d, m.n_experts), P(None, None), init="scaled",
+                           scale_dim=0, dtype=jnp.float32),
+        "w_up": ParamDef((n_blocks, d, dff_b), P(M, None, None), init="scaled", scale_dim=1),
+        "w_down": ParamDef((n_blocks, dff_b, d), P(M, None, None), init="scaled", scale_dim=1),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((n_blocks, d, dff_b), P(M, None, None),
+                                  init="scaled", scale_dim=1)
+    if m.n_shared:
+        from repro.models.mlp import mlp_defs
+
+        defs["shared"] = mlp_defs(cfg, dist, d_ff=m.shared_d_ff)
+    return defs
+
+
+def route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
+    """-> (topk experts (T,k), topk gates (T,k), aux load-balance loss)."""
+    logits = x.astype(jnp.float32) @ router_w                   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch/GShard load-balance aux: E * sum_i f_i * P_i
+    T = x.shape[0]
+    ones = jnp.zeros((T, m.n_experts), jnp.float32).at[
+        jnp.arange(T)[:, None], top_e
+    ].add(1.0 / m.top_k)
+    f = ones.mean(axis=0)
+    P_mean = probs.mean(axis=0)
+    aux = m.n_experts * jnp.sum(f * P_mean)
+    return top_e, gates, aux
+
+
+def moe_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                 # (b, s, d) replicated over model axis
+    cfg: ModelConfig,
+    dist: Dist,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (UNREDUCED partial (b,s,d), aux loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    xf = x.reshape(T, d)
+    n_blocks, dff_b, local_blocks, ffn_tp = moe_plan(m, dist.tp)
+    C = capacity(m, T)
+    act = activation(cfg.act)
+
+    top_e, gates, aux = route(params["router"], xf, m)
+
+    # ---- dispatch bookkeeping (identical on every shard; cheap) ----------
+    k = m.top_k
+    flat_e = top_e.reshape(-1)                                  # (T*k,)
+    flat_tok = jnp.arange(T * k) // k
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_gate = flat_gate[order]
+    counts = jnp.bincount(flat_e, length=m.n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k) - starts[sorted_e]
+    keep = pos < C
+
+    # ---- this shard's experts --------------------------------------------
+    shard = dist.model_idx() if dist.tp > 1 else jnp.int32(0)
+    blk0 = shard * local_blocks
+    e_lo = (blk0 * m.n_experts) // n_blocks                     # first local expert
+    local_E = max(1, local_blocks * m.n_experts // n_blocks)
+    mine = keep & (sorted_e >= e_lo) & (sorted_e < e_lo + local_E)
+    slot = (sorted_e - e_lo) * C + pos                          # (T*k,)
+    slot = jnp.where(mine, slot, local_E * C)                   # dump row
+
+    x_disp = jnp.zeros((local_E * C + 1, d), x.dtype)
+    x_disp = x_disp.at[slot].add(xf[sorted_tok])
+    xe = x_disp[: local_E * C].reshape(local_E, C, d)
+
+    # ---- expert FFN (einsum over the local expert blocks) -----------------
+    # local_blocks == local_E except when ffn_tp > 1 (then both are 1).
+    w_up, w_down = params["w_up"], params["w_down"]
+    up = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    if cfg.gated_mlp:
+        up = act(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) * up
+    else:
+        up = act(up)
+    ye = jnp.einsum("ecf,efd->ecd", up, w_down)                 # partial if ffn_tp>1
+    ye = jnp.concatenate([ye.reshape(local_E * C, d),
+                          jnp.zeros((1, d), ye.dtype)])         # dump row back
+
+    # ---- combine: scatter-add weighted expert outputs ---------------------
+    out = jnp.zeros((T, d), jnp.float32)
+    contrib = ye[slot].astype(jnp.float32) * jnp.where(mine, sorted_gate, 0.0)[:, None]
+    out = out.at[sorted_tok].add(contrib)
+    partial = out.reshape(b, s, d).astype(x.dtype)
+
+    if m.n_shared:
+        from repro.models.mlp import mlp_forward
+
+        partial = partial + mlp_forward(params["shared"], x, cfg)
+    return partial, aux

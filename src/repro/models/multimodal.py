@@ -1,0 +1,38 @@
+"""Modality frontends (STUBS per the assignment carve-out) + real projector.
+
+``input_specs`` provides precomputed patch/frame embeddings of shape
+(batch, prefix_len, feature_dim) — we do NOT build the ViT / EnCodec.  The
+projector that maps frontend features into the decoder's d_model IS part of
+the language model and is implemented here (2-layer MLP, InternVL-style).
+
+The projector weights are replicated: at these sizes the matmuls are noise
+and replication keeps the prefix path collective-free (minimal-sync theme).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Dist, ParamDef, activation, rms_norm
+
+
+def frontend_defs(cfg: ModelConfig, dist: Dist) -> Dict[str, ParamDef]:
+    f = cfg.frontend
+    d = cfg.d_model
+    return {
+        "norm": ParamDef((f.feature_dim,), P(None), init="zeros"),
+        "w1": ParamDef((f.feature_dim, d), P(None, None), init="scaled", scale_dim=0),
+        "w2": ParamDef((d, d), P(None, None), init="scaled", scale_dim=0),
+    }
+
+
+def project_features(params: Dict[str, jax.Array], features: jax.Array,
+                     cfg: ModelConfig) -> jax.Array:
+    """(b, prefix_len, feature_dim) -> (b, prefix_len, d_model), replicated."""
+    h = rms_norm(features.astype(jnp.bfloat16), params["norm"], cfg.rms_eps)
+    h = activation("gelu")(h @ params["w1"])
+    return h @ params["w2"]

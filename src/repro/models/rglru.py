@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: two column-parallel input branches (gate branch: GeLU; recurrent
+branch: causal depthwise conv -> RG-LRU), elementwise product, row-parallel
+out-projection — exactly **one** reduction per block.
+
+RG-LRU (all elementwise over the lru_width channels, block-diagonal gate
+projections with n_blocks = n_heads, blocks sharded over the model axis):
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Prefill uses jax.lax.associative_scan over the sequence (the recurrence
+h = a*h' + b is associative); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Dist, ParamDef, activation
+
+
+def _dims(cfg: ModelConfig, tp: int):
+    w = cfg.rglru.lru_width or cfg.d_model
+    n_blocks = cfg.n_heads
+    if w % n_blocks or n_blocks % tp:
+        raise ValueError(f"lru_width {w} / n_blocks {n_blocks} / tp {tp} mismatch")
+    return w, n_blocks, w // n_blocks
+
+
+def rglru_defs(cfg: ModelConfig, dist: Dist) -> Dict[str, ParamDef]:
+    d, M = cfg.d_model, dist.model_axis
+    w, n_blocks, bs = _dims(cfg, dist.tp)
+    return {
+        "w_gate": ParamDef((d, w), P(None, M), init="scaled", scale_dim=0),
+        "w_x": ParamDef((d, w), P(None, M), init="scaled", scale_dim=0),
+        "conv_w": ParamDef((cfg.rglru.conv_width, w), P(None, M),
+                           init="scaled", scale_dim=0),
+        # block-diagonal gate projections, blocks sharded over model axis
+        "gate_a_w": ParamDef((n_blocks, bs, bs), P(M, None, None),
+                             init="scaled", scale_dim=1),
+        "gate_a_b": ParamDef((n_blocks, bs), P(M, None), init="zeros"),
+        "gate_x_w": ParamDef((n_blocks, bs, bs), P(M, None, None),
+                             init="scaled", scale_dim=1),
+        "gate_x_b": ParamDef((n_blocks, bs), P(M, None), init="zeros"),
+        "Lambda": ParamDef((w,), P(M), init="normal", dtype=jnp.float32),
+        "w_out": ParamDef((w, d), P(M, None), init="scaled", scale_dim=0),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, dist: Dist, batch_local: int) -> Dict[str, jax.Array]:
+    w, _, _ = _dims(cfg, dist.tp)
+    w_local = w // dist.tp
+    return {
+        "h": jnp.zeros((batch_local, w_local), jnp.float32),
+        "conv": jnp.zeros((batch_local, cfg.rglru.conv_width - 1, w_local),
+                          jnp.bfloat16),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
+    new_tail = ext[:, -(W - 1):] if W > 1 else tail
+    return out, new_tail
+
+
+def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u (b,s,local_w) -> block-diagonal linear; w (local_blocks, bs, bs)."""
+    nb, bs, _ = w.shape
+    ub = u.reshape(*u.shape[:2], nb, bs)
+    out = jnp.einsum("bsnx,nxy->bsny", ub.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.reshape(u.shape)
+
+
+def rglru_forward(
+    params: Dict[str, jax.Array],
+    x_in: jax.Array,              # (b, s, d) replicated over model axis
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (UNREDUCED partial (b,s,d), new_state or None)."""
+    c = cfg.rglru.c_constant
+    gate = activation("gelu")(x_in @ params["w_gate"])   # (b,s,w_local)
+    u = x_in @ params["w_x"]
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv(u, params["conv_w"], tail)
+
+    r = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"], params["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"], params["gate_x_b"]))
+    log_a = -c * jax.nn.softplus(params["Lambda"]) * r   # (b,s,w_local) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    bx = beta * i * u.astype(jnp.float32)                # (b,s,w_local)
+
+    h0 = state["h"] if state is not None else jnp.zeros(
+        (x_in.shape[0], u.shape[-1]), jnp.float32
+    )
+    if x_in.shape[1] == 1:
+        h = a[:, 0] * h0 + bx[:, 0]
+        hs = h[:, None]
+        new_state = {"h": h, "conv": new_tail}
+    elif use_pallas:
+        # Pallas linear scan: state lives in VMEM, one HBM read of (a, bx)
+        # and one write of h — vs O(log S) HBM-level intermediates of
+        # associative_scan (the Griffin paper's own kernel choice).
+        from repro.kernels import ops as kops
+
+        hs, hT = kops.lru_scan(a, bx, h0)
+        new_state = {"h": hT, "conv": new_tail} if state is not None else None
+    else:
+        # h_t = a_t h_{t-1} + bx_t with h_{-1} = h0: fold h0 into step 0
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        new_state = {"h": hs[:, -1], "conv": new_tail} if state is not None else None
+
+    y = (hs * gate.astype(jnp.float32)).astype(x_in.dtype)
+    partial = y @ params["w_out"]                        # unreduced
+    return partial, new_state

@@ -1,0 +1,217 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), per-shard.
+
+Sharding: the inner channels / SSD heads are sharded over the model axis
+(z, x, dt head-sharded; B, C group-replicated since n_groups=1); the
+out-projection is row-parallel, so the block contributes exactly **one**
+reduction — SSM blocks satisfy the paper's one-sync-per-layer bound natively.
+
+Prefill uses the chunked SSD form (intra-chunk quadratic term + inter-chunk
+state scan); decode is the O(1) recurrent update.  State (h, conv tail) is
+carried functionally like a KV cache.
+
+Recurrence per head (P = head_dim, N = state_dim):
+    h_i = a_i * h_{i-1} + (dt_i x_i) B_i^T          h: (P, N)
+    y_i = h_i C_i + D x_i
+with a_i = exp(dt_i * A), A = -exp(A_log) < 0.
+
+Chunked SSD identities used below (cs = inclusive cumsum of log a in-chunk):
+    intra:  Y[i] += sum_{j<=i} exp(cs[i]-cs[j]) (C_i·B_j) (dt_j x_j)
+    into-state: S = sum_j exp(cs[L-1]-cs[j]) (dt_j x_j) B_j^T
+    inter:  Y[i] += exp(cs[i]) C_i · H_chunk_start
+    carry:  H' = exp(cs[L-1]) H + S
+
+Normalization: gated per-head RMS norm (norm over head_dim, collective-free
+under TP — deviation from the reference's full-d_inner RMSNormGated, noted
+in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Dist, ParamDef
+
+N_GROUPS = 1  # mamba2-1.3b uses a single B/C group
+
+
+def _dims(cfg: ModelConfig, tp: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    if n_heads % tp:
+        raise ValueError(f"ssd heads {n_heads} not divisible by tp {tp}")
+    return d_in, n_heads, n_heads // tp
+
+
+def ssd_defs(cfg: ModelConfig, dist: Dist) -> Dict[str, ParamDef]:
+    s, d, M = cfg.ssm, cfg.d_model, dist.model_axis
+    d_in, n_heads, _ = _dims(cfg, dist.tp)
+    gn = N_GROUPS * s.state_dim
+    return {
+        "w_z": ParamDef((d, d_in), P(None, M), init="scaled", scale_dim=0),
+        "w_x": ParamDef((d, d_in), P(None, M), init="scaled", scale_dim=0),
+        "w_bc": ParamDef((d, 2 * gn), P(None, None), init="scaled", scale_dim=0),
+        "w_dt": ParamDef((d, n_heads), P(None, M), init="scaled", scale_dim=0),
+        "dt_bias": ParamDef((n_heads,), P(M), init="zeros", dtype=jnp.float32),
+        "A_log": ParamDef((n_heads,), P(M), init="zeros", dtype=jnp.float32),
+        "D": ParamDef((n_heads,), P(M), init="zeros", dtype=jnp.float32),
+        "conv_w": ParamDef((s.conv_width, d_in + 2 * gn),
+                           P(None, None), init="scaled", scale_dim=0),
+        "norm": ParamDef((d_in,), P(M), init="zeros"),
+        "w_out": ParamDef((d_in, d), P(M, None), init="scaled", scale_dim=0),
+    }
+
+
+def init_ssd_state(cfg: ModelConfig, dist: Dist, batch_local: int) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    d_in, _, local_h = _dims(cfg, dist.tp)
+    gn = N_GROUPS * s.state_dim
+    conv_ch = d_in // dist.tp + 2 * gn
+    return {
+        "h": jnp.zeros((batch_local, local_h, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch_local, s.conv_width - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def _conv_weight_local(params, cfg: ModelConfig, dist: Dist):
+    """Depthwise conv weight slice: local x channels + replicated B/C."""
+    s = cfg.ssm
+    d_in, _, _ = _dims(cfg, dist.tp)
+    w = params["conv_w"]                                # (W, d_in + 2gn)
+    if dist.tp == 1:
+        return w
+    loc = d_in // dist.tp
+    idx = jax.lax.axis_index(dist.model_axis)
+    wx = jax.lax.dynamic_slice_in_dim(w[:, :d_in], idx * loc, loc, axis=1)
+    return jnp.concatenate([wx, w[:, d_in:]], axis=1)   # (W, loc + 2gn)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+    """u (b,s,ch), w (W,ch) depthwise; tail (b,W-1,ch) carries history.
+
+    Returns (silu(conv(u)) (b,s,ch), new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)            # (b, s+W-1, ch)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
+    new_tail = ext[:, -(W - 1):] if W > 1 else tail
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_tail
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L): seg[i,j] = sum_{t=j+1..i} log_a[t] (i>=j),
+    -inf above the diagonal.  Diagonal is 0."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _per_head_rmsnorm_gated(y: jax.Array, z: jax.Array, gamma: jax.Array,
+                            eps: float) -> jax.Array:
+    """y,z: (b,s,local_dim); norm over each head's channels after gating."""
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+
+
+def ssd_forward(
+    params: Dict[str, jax.Array],
+    x_in: jax.Array,              # (b, s, d) replicated over model axis
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (UNREDUCED partial (b,s,d), new_state or None)."""
+    s_cfg = cfg.ssm
+    b, s, d = x_in.shape
+    d_in, n_heads, local_h = _dims(cfg, dist.tp)
+    P_dim, N = s_cfg.head_dim, s_cfg.state_dim
+
+    z = x_in @ params["w_z"]                            # (b,s,d_in/tp)
+    xr = x_in @ params["w_x"]
+    bc = x_in @ params["w_bc"]                          # (b,s,2gn) replicated
+    dt_raw = x_in @ params["w_dt"]                      # (b,s,local_h)
+
+    conv_in = jnp.concatenate([xr, bc], axis=-1)
+    w_conv = _conv_weight_local(params, cfg, dist)
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, w_conv, tail)
+    loc = xr.shape[-1]
+    xr = conv_out[..., :loc]
+    Bm, Cm = jnp.split(conv_out[..., loc:], 2, axis=-1)  # (b,s,gn) each
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.clip(dt, s_cfg.dt_min, 10.0)                # (b,s,local_h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))    # (local_h,) negative
+    log_a = dt * A                                       # (b,s,local_h)
+    xh = xr.reshape(b, s, local_h, P_dim).astype(jnp.float32)
+    Bh = Bm.reshape(b, s, N_GROUPS, N)[:, :, 0].astype(jnp.float32)   # (b,s,N)
+    Ch = Cm.reshape(b, s, N_GROUPS, N)[:, :, 0].astype(jnp.float32)
+    xdt = xh * dt[..., None]                             # (b,s,h,P)
+
+    h0 = state["h"] if state is not None else jnp.zeros(
+        (b, local_h, P_dim, N), jnp.float32
+    )
+
+    if s == 1:
+        a = jnp.exp(log_a[:, 0])                         # (b,h)
+        h_new = h0 * a[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, 0], Bh[:, 0]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h_new, Ch[:, 0])
+        y = y + params["D"][None, :, None] * xh[:, 0]
+        y = y[:, None]                                   # (b,1,h,P)
+        new_state = {"h": h_new, "conv": new_tail}
+    else:
+        L = min(s_cfg.chunk, s)
+        if s % L:
+            raise ValueError(f"seq {s} not divisible by ssd chunk {L}")
+        nc = s // L
+        la = log_a.reshape(b, nc, L, local_h).transpose(0, 3, 1, 2)   # (b,h,c,L)
+        xc = xdt.reshape(b, nc, L, local_h, P_dim).transpose(0, 3, 1, 2, 4)  # (b,h,c,L,P)
+        Bc = Bh.reshape(b, nc, L, N)                                   # (b,c,L,N)
+        Cc = Ch.reshape(b, nc, L, N)
+        cs = jnp.cumsum(la, axis=-1)                                   # (b,h,c,L)
+        seg = _segsum(la)                                              # (b,h,c,L,L)
+        # intra-chunk
+        sc = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                     # (b,c,i,j)
+        M = jnp.exp(seg) * sc[:, None]                                 # (b,h,c,i,j)
+        y_intra = jnp.einsum("bhcij,bhcjp->bhcip", M, xc)
+        # chunk summaries -> inter-chunk scan
+        decay_end = jnp.exp(cs[..., -1:] - cs)                         # (b,h,c,L)
+        S = jnp.einsum("bhcj,bhcjp,bcjn->bhcpn", decay_end, xc, Bc)    # (b,h,c,P,N)
+        chunk_decay = jnp.exp(cs[..., -1])                             # (b,h,c)
+
+        def scan_fn(H, inp):
+            S_c, dec_c = inp                                           # (b,h,P,N),(b,h)
+            H_next = H * dec_c[..., None, None] + S_c
+            return H_next, H                                           # emit state BEFORE chunk
+
+        S_t = S.transpose(2, 0, 1, 3, 4)                               # (c,b,h,P,N)
+        dec_t = chunk_decay.transpose(2, 0, 1)                         # (c,b,h)
+        from repro.models.common import maybe_scan
+        H_final, H_before = maybe_scan(scan_fn, h0, (S_t, dec_t))
+        H_before = H_before.transpose(1, 2, 0, 3, 4)                   # (b,h,c,P,N)
+        y_inter = jnp.einsum("bhci,bcin,bhcpn->bhcip", jnp.exp(cs), Cc, H_before)
+        y = y_intra + y_inter                                          # (b,h,c,L,P)
+        y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, local_h, P_dim)
+        y = y + params["D"][None, None, :, None] * xh
+        new_state = {"h": H_final, "conv": new_tail} if state is not None else None
+
+    y = y.reshape(y.shape[0], y.shape[1], local_h * P_dim)
+    y = _per_head_rmsnorm_gated(
+        y.reshape(*y.shape[:2], local_h, P_dim),
+        z.astype(jnp.float32).reshape(*z.shape[:2], local_h, P_dim),
+        params["norm"].reshape(local_h, P_dim),
+        cfg.rms_eps,
+    ).reshape(*y.shape[:2], local_h * P_dim)
+    partial = y.astype(x_in.dtype) @ params["w_out"]     # unreduced
+    return partial, new_state

@@ -1,0 +1,311 @@
+"""Decoder assembly: sub-layers -> super-blocks -> scanned layer groups.
+
+Layers are grouped into homogeneous *scan groups* (jax.lax.scan over stacked
+params) so HLO size and 512-device compile time are depth-independent.
+Heterogeneous patterns (Griffin's R,R,A; DeepSeek's dense layer 0) become
+multiple groups: full repeating periods are scanned, remainders unrolled.
+
+The collective schedule per sub-layer is decided HERE, via SyncPolicy —
+this is where the paper's §2.2 (one-shot sync for parallel-residual) and its
+sequence-parallel generalization live.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.sync_policy import SyncPolicy
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import Dist, ParamDef, ShardPlan, rms_norm
+
+ATTN_KINDS = ("attn", "local_attn")
+
+
+@dataclass(frozen=True)
+class SubLayer:
+    kind: str                   # attn | local_attn | ssd | rglru
+    is_moe: bool
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.kind != "ssd"
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    subs: Tuple[SubLayer, ...]
+    n: int                      # scan length (1 = unrolled single block)
+
+
+def layer_signature(cfg: ModelConfig, layer: int) -> SubLayer:
+    kind = cfg.block_kind(layer)
+    is_moe = cfg.moe is not None and layer not in cfg.dense_ffn_layers and kind != "ssd"
+    return SubLayer(kind, is_moe)
+
+
+def build_groups(cfg: ModelConfig) -> Tuple[GroupSpec, ...]:
+    p = len(cfg.layer_pattern)
+    sigs = [layer_signature(cfg, i) for i in range(cfg.n_layers)]
+    if cfg.force_unroll:
+        return tuple(GroupSpec((s,), 1) for s in sigs)
+    groups = []
+    i = 0
+    while i < cfg.n_layers:
+        # a full aligned period that matches the pattern's own signature?
+        def period_ok(start: int) -> bool:
+            if start % p or start + p > cfg.n_layers:
+                return False
+            return all(
+                sigs[start + j] == SubLayer(
+                    cfg.layer_pattern[j],
+                    cfg.moe is not None
+                    and (start + j) not in cfg.dense_ffn_layers
+                    and cfg.layer_pattern[j] != "ssd",
+                )
+                for j in range(p)
+            )
+
+        if period_ok(i):
+            unit = tuple(sigs[i + j] for j in range(p))
+            cnt = 0
+            while period_ok(i) and tuple(sigs[i + j] for j in range(p)) == unit:
+                cnt += 1
+                i += p
+            groups.append(GroupSpec(unit, cnt))
+        else:
+            groups.append(GroupSpec((sigs[i],), 1))
+            i += 1
+    return tuple(groups)
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def sub_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist, sub: SubLayer) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"norm1": ParamDef((d,), P(None), init="zeros")}
+    if sub.kind in ATTN_KINDS:
+        defs["mixer"] = attn.attn_defs(cfg, plan, dist)
+    elif sub.kind == "ssd":
+        defs["mixer"] = ssm_mod.ssd_defs(cfg, dist)
+    elif sub.kind == "rglru":
+        defs["mixer"] = rglru_mod.rglru_defs(cfg, dist)
+    else:
+        raise ValueError(sub.kind)
+    if sub.has_ffn:
+        if not cfg.parallel_residual:
+            defs["norm2"] = ParamDef((d,), P(None), init="zeros")
+        if sub.is_moe:
+            defs["ffn"] = moe_mod.moe_defs(cfg, dist)
+        else:
+            defs["ffn"] = mlp_mod.mlp_defs(cfg, dist)
+    return defs
+
+
+def group_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec) -> Dict[str, Any]:
+    from repro.models.common import stack_defs
+
+    defs = {f"sub{i}": sub_defs(cfg, plan, dist, s) for i, s in enumerate(g.subs)}
+    return stack_defs(defs, g.n) if g.n > 1 else defs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def sub_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, sub: SubLayer,
+              batch_local: int, cache_len_local: int,
+              quant: bool = False) -> Dict[str, jax.Array]:
+    if sub.kind in ATTN_KINDS:
+        clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, 1)
+        return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
+                               quant=quant)
+    if sub.kind == "ssd":
+        return ssm_mod.init_ssd_state(cfg, dist, batch_local)
+    if sub.kind == "rglru":
+        return rglru_mod.init_rglru_state(cfg, dist, batch_local)
+    raise ValueError(sub.kind)
+
+
+def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
+                batch_local: int, cache_len_local: int,
+                kv_seq_shard_dp: int = 1, quant: bool = False) -> Dict[str, Any]:
+    def one(sub: SubLayer):
+        if sub.kind in ATTN_KINDS:
+            clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, kv_seq_shard_dp)
+            return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
+                                   quant=quant)
+        return sub_cache(cfg, plan, dist, sub, batch_local, cache_len_local)
+
+    caches = {f"sub{i}": one(s) for i, s in enumerate(g.subs)}
+    if g.n > 1:
+        caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g.n,) + x.shape), caches
+        )
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
+                   cur_pos, kv_seq_axis, use_pallas):
+    if sub.kind in ATTN_KINDS:
+        if cfg.mla is not None:
+            return attn.mla_forward(
+                p, xa, positions, cfg, plan, dist, cache=cache, cur_pos=cur_pos,
+                kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
+            )
+        return attn.gqa_forward(
+            p, xa, positions, cfg, plan, dist, kind=sub.kind, cache=cache,
+            cur_pos=cur_pos, kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
+        )
+    if sub.kind == "ssd":
+        return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache)
+    if sub.kind == "rglru":
+        return rglru_mod.rglru_forward(p, xa, cfg, dist, state=cache,
+                                       use_pallas=use_pallas)
+    raise ValueError(sub.kind)
+
+
+def sublayer_forward(
+    p: Dict[str, Any],
+    x: jax.Array,                 # residual (maybe seq-sharded)
+    positions: jax.Array,
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    policy: SyncPolicy,
+    sub: SubLayer,
+    *,
+    cache=None,
+    cur_pos=None,
+    kv_seq_axis=None,
+    use_pallas=False,
+):
+    """-> (x', new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    xa = policy.gather_in(rms_norm(x, p["norm1"], cfg.rms_eps), tag="pre_mixer")
+
+    if cfg.parallel_residual and sub.has_ffn and sub.kind in ATTN_KINDS:
+        # paper §2.2: attention + FFN read the same normed input
+        attn_p, new_cache = _mixer_forward(
+            p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
+            kv_seq_axis, use_pallas,
+        )
+        ffn_p = mlp_mod.mlp_forward(p["ffn"], xa, cfg)
+        if policy.one_shot:
+            x = x + policy.reduce_out(attn_p + ffn_p, tag="one_shot")
+        else:  # the 2-sync baseline the paper improves on
+            x = x + policy.reduce_out(attn_p, tag="attn_reduce") \
+                  + policy.reduce_out(ffn_p, tag="ffn_reduce")
+        return x, new_cache, aux
+
+    mix_p, new_cache = _mixer_forward(
+        p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
+        kv_seq_axis, use_pallas,
+    )
+    x = x + policy.reduce_out(mix_p, tag="mixer_reduce")
+    if sub.has_ffn:
+        xf = policy.gather_in(rms_norm(x, p["norm2"], cfg.rms_eps), tag="pre_ffn")
+        if sub.is_moe:
+            ffn_p, aux = moe_mod.moe_forward(p["ffn"], xf, cfg, dist)
+        else:
+            ffn_p = mlp_mod.mlp_forward(p["ffn"], xf, cfg)
+        x = x + policy.reduce_out(ffn_p, tag="ffn_reduce")
+    return x, new_cache, aux
+
+
+def group_forward(
+    gp: Dict[str, Any],
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    policy: SyncPolicy,
+    g: GroupSpec,
+    *,
+    caches=None,
+    cur_pos=None,
+    kv_seq_axis=None,
+    use_pallas=False,
+    remat=False,
+):
+    """-> (x', new_caches, aux)."""
+
+    def superblock(x, aux, p_layer, cache_layer):
+        new_caches = {}
+        for i, sub in enumerate(g.subs):
+            c = cache_layer[f"sub{i}"] if cache_layer is not None else None
+            x, c_new, a = sublayer_forward(
+                p_layer[f"sub{i}"], x, positions, cfg, plan, dist, policy, sub,
+                cache=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
+                use_pallas=use_pallas,
+            )
+            if c_new is not None:
+                new_caches[f"sub{i}"] = c_new
+            aux = aux + a
+        return x, aux, (new_caches if new_caches else None)
+
+    if g.n == 1:
+        blk = jax.checkpoint(superblock) if (remat and caches is None) else superblock
+        x, aux, new_caches = blk(x, jnp.zeros((), jnp.float32), gp, caches)
+        return x, new_caches, aux
+
+    def index_params(i):
+        # params are a scan closure constant indexed per iteration — scanning
+        # them as xs makes XLA:CPU stage the whole stacked tree into temp
+        # buffers (observed: +150 MB/layer of temp on the dry-run).
+        return jax.tree.map(
+            lambda p: jax.lax.dynamic_index_in_dim(p, i, 0, keepdims=False), gp
+        )
+
+    if caches is None:
+        def body(carry, _):
+            x, aux, i = carry
+            x, aux, _ = superblock(x, aux, index_params(i), None)
+            return (x, aux, i + 1), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux, _), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), jnp.int32(0)), None, length=g.n
+        )
+        return x, None, aux
+
+    # Caches ride in the CARRY and are updated in place with
+    # dynamic_update_slice — scanning them as xs/ys would double-buffer the
+    # whole stacked KV cache (observed: 3x cache bytes of temp at 32k).
+    def body_cached(carry, _):
+        x, aux, stacked, i = carry
+        cache_layer = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            stacked,
+        )
+        x, aux, new_c = superblock(x, aux, index_params(i), cache_layer)
+        stacked = jax.tree.map(
+            lambda cs, cl: jax.lax.dynamic_update_index_in_dim(cs, cl, i, 0),
+            stacked, new_c,
+        )
+        return (x, aux, stacked, i + 1), None
+
+    (x, aux, new_caches, _), _ = jax.lax.scan(
+        body_cached, (x, jnp.zeros((), jnp.float32), caches, jnp.int32(0)),
+        None, length=g.n,
+    )
+    return x, new_caches, aux

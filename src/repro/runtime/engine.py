@@ -1,0 +1,211 @@
+"""Serving engine: jitted shard_map'd prefill/decode steps + host generate loop.
+
+The decode step is the paper's experiment unit (§3 measures ms/token of
+exactly this function).  Schedule per decode round, with all paper
+optimizations on:
+
+  1 x  (token ids already replicated — §2.1a "broadcast" is free)
+  L x  block reductions (1 psum per parallel-residual block, 2 per
+       sequential block, or scatter/gather pairs under SP)
+  1 x  k-candidate all-gather for sampling (§2.1b)
+
+KV caches are DONATED to the decode step (§2.3): XLA aliases them in-place,
+`memory_analysis().alias_size_in_bytes` is the receipt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, SamplingConfig
+from repro.models import model as M
+from repro.runtime import kvcache
+from repro.runtime.sampling import sample_tokens
+
+Pytree = Any
+
+
+def make_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig):
+    """Per-shard fn: (params, tokens, features, caches, rng) -> (tok, caches)."""
+
+    def prefill_step(params, tokens, features, caches, rng):
+        kv_axis = ctx.dist.data_axis if ctx.parallel.kv_seq_shard else None
+        logits, caches, _ = M.forward(
+            params, tokens, ctx, features=features, caches=caches,
+            last_only=True, seq_sharded=True, kv_seq_axis=kv_axis,
+        )
+        tok = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        return tok, caches
+
+    return prefill_step
+
+
+def make_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
+    """Per-shard fn: (params, tok, caches, cur_pos, rng) -> (tok', caches)."""
+
+    def decode_step(params, tok, caches, cur_pos, rng):
+        kv_axis = ctx.dist.data_axis if ctx.parallel.kv_seq_shard else None
+        tokens = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+        logits, caches, _ = M.forward(
+            params, tokens, ctx, caches=caches, cur_pos=cur_pos,
+            kv_seq_axis=kv_axis, last_only=True, seq_sharded=False,
+        )
+        nxt = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        return nxt, caches
+
+    return decode_step
+
+
+@dataclass
+class Engine:
+    """Host-side serving engine over a local (or production) mesh."""
+
+    cfg: ModelConfig
+    parallel: ParallelConfig
+    sampling: SamplingConfig
+    mesh: Any
+    max_len: int
+    params: Pytree = None
+    seed: int = 0
+
+    def __post_init__(self):
+        pod = "pod" if "pod" in self.mesh.axis_names else None
+        self.ctx = M.ModelCtx.make(self.cfg, self.parallel, pod_axis=pod)
+        if self.params is None:
+            self.params = M.init_params(self.ctx, jax.random.key(self.seed))
+        self._build()
+
+    # -- sharding specs -----------------------------------------------------
+    def _specs(self):
+        dist = self.ctx.dist
+        d = dist.data_axes if len(dist.data_axes) > 1 else dist.data_axes[0]
+        batch_spec = P(None) if self.parallel.kv_seq_shard else P(d)
+        tok2 = P(*batch_spec, None) if self.cfg.n_codebooks == 1 else P(*batch_spec, None, None)
+        tok1 = P(*batch_spec) if self.cfg.n_codebooks == 1 else P(*batch_spec, None)
+        feat = P(*batch_spec, None, None)
+        cache = kvcache.cache_pspecs(self.ctx, kv_seq_shard=self.parallel.kv_seq_shard)
+        return batch_spec, tok2, tok1, feat, cache
+
+    def _build(self):
+        pspecs = M.param_specs(self.ctx)
+        batch_spec, tok2, tok1, feat, cache_spec = self._specs()
+        sm = partial(jax.shard_map, mesh=self.mesh, check_vma=False)
+
+        pre = make_prefill_step(self.ctx, self.sampling)
+        if self.cfg.frontend is None:
+            pre_nofeat = lambda p, t, c, r: pre(p, t, None, c, r)
+            self._prefill_raw = jax.jit(
+                sm(pre_nofeat, in_specs=(pspecs, tok2, cache_spec, P()),
+                   out_specs=(tok1, cache_spec)),
+                donate_argnums=(2,) if self.parallel.zero_copy else (),
+            )
+            self._prefill = lambda p, t, f, c, r: self._prefill_raw(p, t, c, r)
+        else:
+            self._prefill = jax.jit(
+                sm(pre, in_specs=(pspecs, tok2, feat, cache_spec, P()),
+                   out_specs=(tok1, cache_spec)),
+                donate_argnums=(3,) if self.parallel.zero_copy else (),
+            )
+        dec = make_decode_step(self.ctx, self.sampling)
+        self._decode = jax.jit(
+            sm(dec, in_specs=(pspecs, tok1, cache_spec, P(), P()),
+               out_specs=(tok1, cache_spec)),
+            donate_argnums=(2,) if self.parallel.zero_copy else (),
+        )
+
+        # §Perf H4: fused multi-token decode — lax.scan over n steps inside
+        # ONE jitted program removes the per-token dispatch + host-sync
+        # overhead of the token loop (the paper's §3 metric IS this loop).
+        def decode_n(params, tok, caches, cur_pos, rng, *, n):
+            def body(carry, i):
+                tok, caches = carry
+                nxt, caches = dec(params, tok, caches,
+                                  cur_pos + i, jax.random.fold_in(rng, i))
+                return (nxt, caches), nxt
+
+            (tok, caches), toks = jax.lax.scan(
+                body, (tok, caches), jnp.arange(n, dtype=jnp.int32))
+            return toks, caches
+
+        tokn = P(None, *tuple(tok1))
+        self._decode_n = {
+            n: jax.jit(
+                sm(partial(decode_n, n=n),
+                   in_specs=(pspecs, tok1, cache_spec, P(), P()),
+                   out_specs=(tokn, cache_spec)),
+                donate_argnums=(2,) if self.parallel.zero_copy else (),
+            )
+            for n in (8, 16, 32)
+        }
+
+    # -- API ------------------------------------------------------------
+    def init_caches(self, batch: int):
+        """Create the cache pytree as properly-sharded global arrays: each
+        shard builds its LOCAL buffers inside shard_map and the runtime
+        assembles the global arrays per the cache specs."""
+        dp_total = self.ctx.dist.dp * self.ctx.dist.pods
+        if self.parallel.kv_seq_shard:
+            b_local, kv_dp = batch, self.ctx.dist.dp
+        else:
+            b_local, kv_dp = batch // dp_total, 1
+        cspecs = kvcache.cache_pspecs(self.ctx,
+                                      kv_seq_shard=self.parallel.kv_seq_shard)
+        make = jax.jit(jax.shard_map(
+            lambda: M.init_caches(self.ctx, b_local, self.max_len,
+                                  kv_seq_shard_dp=kv_dp),
+            mesh=self.mesh, in_specs=(), out_specs=cspecs, check_vma=False,
+        ))
+        return make()
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 features: Optional[np.ndarray] = None,
+                 *, multi_step: bool = True) -> np.ndarray:
+        """prompts (b, prompt_len [, ncb]) -> generated tokens (b, max_new [, ncb]).
+
+        multi_step=True uses the fused n-token decode programs (§Perf H4);
+        set False to force the one-jit-call-per-token baseline loop."""
+        b, plen = prompts.shape[0], prompts.shape[1]
+        caches = self.init_caches(b)
+        if features is None and self.cfg.frontend is not None:
+            f = self.cfg.frontend
+            features = np.zeros((b, f.prefix_len, f.feature_dim), np.float32)
+        rng = jax.random.key(self.seed + 1)
+        prefix = self.cfg.frontend.prefix_len if self.cfg.frontend else 0
+        tok, caches = self._prefill(self.params, jnp.asarray(prompts),
+                                    features, caches, rng)
+        outs = [tok[None] if tok.ndim == 1 else tok[None, ...]]
+        cur = plen + prefix  # next position to write
+        remaining = max_new - 1
+        while remaining > 0:
+            n = next((n for n in (32, 16, 8)
+                      if multi_step and remaining >= n), 0)
+            rng = jax.random.fold_in(rng, cur)
+            if n:
+                toks, caches = self._decode_n[n](self.params, tok, caches,
+                                                 jnp.int32(cur), rng)
+                tok = toks[-1]
+                outs.append(toks)
+                cur += n
+                remaining -= n
+            else:
+                tok, caches = self._decode(self.params, tok, caches,
+                                           jnp.int32(cur), rng)
+                outs.append(tok[None])
+                cur += 1
+                remaining -= 1
+        return np.asarray(jnp.concatenate(outs, axis=0)).swapaxes(0, 1)

@@ -1,0 +1,90 @@
+"""Cache partition specs + cache utilities.
+
+Cache pytrees are built by ``models.model.init_caches``; leaves are named
+dict keys with fixed layouts, so partition specs are assigned by key:
+
+  k/v      (b, local_kv, S, hd)   -> (data*, model, None, None)
+  ckv      (b, S, rank)           -> (data*, None, None)      [MLA latent]
+  krope    (b, S, rope)           -> (data*, None, None)
+  pos      (S,)                   -> (None,)
+  h (ssd)  (b, heads, P, N)       -> (data*, model, None, None)
+  h (lru)  (b, width)             -> (data*, model)
+  conv     (b, W-1, channels)     -> (data*, None, model)
+
+With ``kv_seq_shard`` (long_500k: batch 1, cache sequence sharded over the
+data axis) the attention-cache sequence dim takes "data" and batch is
+replicated; recurrent state stays tiny and batch-replicated.
+Scanned groups prepend a None (layer-stack) axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import transformer as tfm
+
+Pytree = Any
+
+
+def _leaf_spec(key: str, ndim: int, dist, kv_seq_shard: bool, stacked: bool,
+               replicate_batch: bool = False):
+    d = None if (kv_seq_shard or replicate_batch) else (
+        dist.data_axes if len(dist.data_axes) > 1 else dist.data_axes[0]
+    )
+    seq = dist.data_axis if kv_seq_shard else None
+    m = dist.model_axis
+    if key in ("k", "v"):
+        spec = (d, m, seq, None)
+    elif key in ("k_scale", "v_scale"):
+        spec = (d, m, seq)
+    elif key in ("ckv", "krope"):
+        spec = (d, seq, None)
+    elif key == "pos":
+        spec = (seq,)
+    elif key == "h":                       # recurrent state: always batch-major
+        spec = (d, m, None, None)[:ndim]
+    elif key == "conv":
+        spec = (d, None, m)
+    else:
+        raise KeyError(f"unknown cache leaf {key!r}")
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def cache_pspecs(ctx: M.ModelCtx, *, kv_seq_shard: bool = False,
+                 replicate_batch: bool = False) -> Tuple:
+    """Spec tree matching ``init_caches`` exactly (same treedef)."""
+    groups = tfm.build_groups(ctx.cfg)
+    # build a template (tiny batch) to mirror structure + ndims
+    template = jax.eval_shape(lambda: M.init_caches(ctx, 1, 2, kv_seq_shard_dp=1))
+    out = []
+    for g, gc in zip(groups, template):
+        stacked = g.n > 1
+
+        def spec_of(subtree):
+            return {
+                k: (
+                    spec_of(v)
+                    if isinstance(v, dict)
+                    else _leaf_spec(k, v.ndim - (1 if stacked else 0), ctx.dist,
+                                   kv_seq_shard, stacked, replicate_batch)
+                )
+                for k, v in subtree.items()
+            }
+
+        out.append(spec_of(gc))
+    return tuple(out)
+
+
+def cache_shapes(ctx: M.ModelCtx, batch_local: int, cache_len: int,
+                 *, kv_seq_shard_dp: int = 1) -> Tuple:
+    """ShapeDtypeStructs of the GLOBAL cache arrays (for the dry-run)."""
+    local = jax.eval_shape(
+        lambda: M.init_caches(ctx, batch_local, cache_len,
+                              kv_seq_shard_dp=kv_seq_shard_dp)
+    )
+    return local

@@ -1,0 +1,38 @@
+"""Sampling on vocab-sharded logits — the serving face of paper §2.1.
+
+``sample_tokens`` consumes the model's LOCAL logits (b, [ncb,] V_local) and
+returns replicated token ids; the §2.1b topk-sync path keeps the wire cost at
+O(k·tp) instead of O(vocab).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplingConfig
+from repro.core import topk_sync
+from repro.models.common import Dist, ShardPlan
+
+
+def sample_tokens(
+    local_logits: jax.Array,      # (b, V_local) or (b, ncb, V_local) fp32
+    rng: jax.Array,
+    sampling: SamplingConfig,
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    topk_sync_enabled: bool = True,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """-> (b,) or (b, ncb) int32 token ids, replicated on all shards."""
+    squeeze = local_logits.ndim == 2
+    if squeeze:
+        local_logits = local_logits[:, None]
+    b, ncb, vl = local_logits.shape
+    flat = local_logits.reshape(b * ncb, vl)
+    tok = topk_sync.sample(
+        flat, rng, sampling, plan, dist,
+        topk_sync=topk_sync_enabled, use_pallas=use_pallas,
+    )
+    tok = tok.reshape(b, ncb)
+    return tok[:, 0] if squeeze else tok

@@ -1,0 +1,88 @@
+"""Batch-wave request scheduler (continuous-batching lite).
+
+Requests queue up; the scheduler forms *waves* of up to ``batch_size``
+requests with a shared (padded) prompt length, runs prefill once and decodes
+until every request in the wave reaches its ``max_new`` (per-request early
+stop on ``eos_id``).  Decode positions stay batch-aligned, which keeps the
+decode step a single shared-``cur_pos`` program — the same simplification
+real engines make per "generation group".  Slot-level stats (queue time,
+tokens/s) are recorded per request.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.engine import Engine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) or (prompt_len, ncb)
+    max_new: int
+    eos_id: Optional[int] = None
+    submitted_at: float = field(default_factory=time.monotonic)
+    output: Optional[np.ndarray] = None
+    stats: Dict = field(default_factory=dict)
+
+
+class WaveScheduler:
+    def __init__(self, engine: Engine, batch_size: int, pad_id: int = 0):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.pad_id = pad_id
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._next_id = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt), max_new, eos_id))
+        return rid
+
+    def _form_wave(self) -> List[Request]:
+        wave = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        return wave
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns completed requests in completion order."""
+        while self.queue:
+            wave = self._form_wave()
+            self._run_wave(wave)
+        return self.done
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        b = self.batch_size
+        plen = max(len(r.prompt) for r in wave)
+        max_new = max(r.max_new for r in wave)
+        ncb = self.engine.cfg.n_codebooks
+        shape = (b, plen) if ncb == 1 else (b, plen, ncb)
+        prompts = np.full(shape, self.pad_id, dtype=np.int32)
+        for i, r in enumerate(wave):
+            # left-align; short prompts are right-padded (positions aligned)
+            prompts[i, : len(r.prompt)] = r.prompt
+        t0 = time.monotonic()
+        out = self.engine.generate(prompts, max_new)       # (b, max_new[, ncb])
+        dt = time.monotonic() - t0
+        for i, r in enumerate(wave):
+            toks = out[i, : r.max_new]
+            if r.eos_id is not None:
+                flat = toks if toks.ndim == 1 else toks[..., 0]
+                hits = np.nonzero(flat == r.eos_id)[0]
+                if hits.size:
+                    toks = toks[: hits[0] + 1]
+            r.output = toks
+            r.stats = {
+                "wave_batch": len(wave),
+                "queue_s": t0 - r.submitted_at,
+                "wave_s": dt,
+                "tok_per_s": max_new * len(wave) / dt if dt > 0 else float("inf"),
+            }
+            self.done.append(r)

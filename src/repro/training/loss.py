@@ -1,0 +1,129 @@
+"""Vocab-parallel cross-entropy (logits sharded over the model axis).
+
+Never materialises the gathered (b, s, V) logits: local max / sum-exp /
+label-pick are psum'd — the training-side sibling of the paper's
+"reduce k values, not the vocab row" principle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as cc
+from repro.models.common import Dist, ShardPlan
+
+
+def vocab_parallel_xent(
+    local_logits: jax.Array,      # (b, s, V_local) fp32 (or (b,s,ncb,V_local))
+    labels: jax.Array,            # (b, s) or (b, s, ncb) global vocab ids
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    mask: Optional[jax.Array] = None,  # (b, s) 1.0 = count this position
+) -> jax.Array:
+    """Mean CE over all tokens of the GLOBAL batch (psum over data axes)."""
+    if local_logits.ndim == 4:      # codebook models: fold ncb into seq
+        b, s, ncb, v = local_logits.shape
+        local_logits = local_logits.reshape(b, s * ncb, v)
+        labels = labels.reshape(b, s * ncb)
+        if mask is not None:
+            mask = jnp.repeat(mask, ncb, axis=1)
+    lo = (dist.model_idx() if dist.tp > 1 else jnp.int32(0)) * plan.local_vocab
+
+    # stable LSE over the sharded vocab
+    # the subtracted max is a numerical-stability constant (zero true
+    # gradient); pmax has no AD rule, so stop_gradient BEFORE the collective
+    local_max = jax.lax.stop_gradient(local_logits.max(axis=-1))
+    if dist.tp > 1:
+        gmax = jax.lax.pmax(local_max, dist.model_axis)
+    else:
+        gmax = local_max
+    sumexp = jnp.exp(local_logits - gmax[..., None]).sum(axis=-1)
+    if dist.tp > 1:
+        sumexp = cc.psum(sumexp, dist.model_axis, tag="xent_sumexp")
+    lse = jnp.log(sumexp) + gmax
+
+    # label logit: only the owning shard contributes
+    lid = labels - lo
+    ok = (lid >= 0) & (lid < plan.local_vocab)
+    lid = jnp.clip(lid, 0, plan.local_vocab - 1)
+    picked = jnp.take_along_axis(local_logits, lid[..., None], axis=-1)[..., 0]
+    picked = jnp.where(ok, picked, 0.0)
+    if dist.tp > 1:
+        picked = cc.psum(picked, dist.model_axis, tag="xent_label")
+
+    nll = lse - picked                                    # (b, s')
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    tot = (nll * mask).sum()
+    cnt = mask.sum()
+    tot = cc.psum(tot, dist.data_axes, tag="xent_mean") if dist.dp * dist.pods > 1 else tot
+    cnt = cc.psum(cnt, dist.data_axes, tag="xent_mean") if dist.dp * dist.pods > 1 else cnt
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def chunked_vocab_parallel_xent(
+    hidden: jax.Array,            # (b, s, d) final-norm hidden states
+    head_fn,                      # (b, c, d) -> local logits (b, c, [ncb,] V_local) fp32
+    labels: jax.Array,            # (b, s[, ncb]) global vocab ids
+    plan: ShardPlan,
+    dist: Dist,
+    *,
+    chunk: int = 512,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Sequence-chunked vocab-parallel CE: the (b, s, V_local) fp32 logits are
+    never materialised — each chunk's logits live only inside a checkpointed
+    scan step (recomputed in backward).  All cross-shard collectives happen
+    ONCE, after the scan, on (b, s)-sized statistics."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by xent chunk {c}")
+    nc = s // c
+    lo = (dist.model_idx() if dist.tp > 1 else jnp.int32(0)) * plan.local_vocab
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    ncb = labels.shape[2] if labels.ndim == 3 else 1
+    lab = labels.reshape(b, nc, c * ncb).transpose(1, 0, 2)        # (nc, b, c*ncb)
+    hid = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)        # (nc, b, c, d)
+    msk = jnp.repeat(mask, ncb, axis=1).reshape(b, nc, c * ncb).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, lab_c, _ = xs
+        logits = head_fn(h_c)                                      # fp32
+        if logits.ndim == 4:
+            logits = logits.reshape(b, c * ncb, plan.local_vocab)
+        lmax = jax.lax.stop_gradient(logits.max(axis=-1))          # (b, c*ncb)
+        sexp = jnp.exp(logits - lmax[..., None]).sum(axis=-1)
+        lid = lab_c - lo
+        ok = (lid >= 0) & (lid < plan.local_vocab)
+        lid = jnp.clip(lid, 0, plan.local_vocab - 1)
+        picked = jnp.take_along_axis(logits, lid[..., None], axis=-1)[..., 0]
+        picked = jnp.where(ok, picked, 0.0)
+        return carry, (lmax, sexp, picked)
+
+    from repro.models.common import maybe_scan
+    _, (lmax, sexp, picked) = maybe_scan(body, (), (hid, lab, msk))
+    # (nc, b, c*ncb) -> (b, s*ncb)
+    tos = lambda t: t.transpose(1, 0, 2).reshape(b, s * ncb)
+    lmax, sexp, picked, msk = tos(lmax), tos(sexp), tos(picked), tos(msk)
+
+    if dist.tp > 1:
+        gmax = jax.lax.pmax(lmax, dist.model_axis)
+        sexp = cc.psum(sexp * jnp.exp(lmax - gmax), dist.model_axis, tag="xent_sumexp")
+        picked = cc.psum(picked, dist.model_axis, tag="xent_label")
+    else:
+        gmax = lmax
+    lse = jnp.log(sexp) + gmax
+    nll = lse - picked
+    tot = (nll * msk).sum()
+    cnt = msk.sum()
+    if dist.dp * dist.pods > 1:
+        tot = cc.psum(tot, dist.data_axes, tag="xent_mean")
+        cnt = cc.psum(cnt, dist.data_axes, tag="xent_mean")
+    return tot / jnp.maximum(cnt, 1.0)

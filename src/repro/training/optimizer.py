@@ -1,0 +1,75 @@
+"""AdamW in pure JAX, sharded identically to the params it updates."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Pytree) -> Pytree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step: jax.Array, c: AdamWConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, c.warmup_steps))
+    t = jnp.clip((step - c.warmup_steps) / max(1, c.total_steps - c.warmup_steps), 0.0, 1.0)
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return c.lr * warm * cos
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: Pytree, grads: Pytree, state: Pytree, c: AdamWConfig
+) -> Tuple[Pytree, Pytree, jax.Array]:
+    """-> (new_params, new_state, grad_norm). fp32 moments, bf16 params."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(state["step"], c)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = c.b1 * m + (1 - c.b1) * g
+        v_new = c.b2 * v + (1 - c.b2) * g * g
+        mh = m_new / (1 - c.b1 ** step.astype(jnp.float32))
+        vh = v_new / (1 - c.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

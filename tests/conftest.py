@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device (the dry-run sets its own 512-device flag in its own process,
+and multi-device collective tests run via subprocess in test_distributed.py).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def run_sharded(mesh, fn, in_specs, out_specs, *args):
+    import functools
+
+    return jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+    )(*args)

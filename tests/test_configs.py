@@ -1,0 +1,67 @@
+"""Config registry + parameter accounting tests."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config, get_shape
+from repro.configs.base import INPUT_SHAPES
+from repro.models.common import ShardPlan
+
+ADVERTISED_B = {
+    "recurrentgemma-9b": 9.0,
+    "qwen2.5-32b": 32.5,
+    "musicgen-medium": 1.5,
+    "minicpm3-4b": 4.0,
+    "mixtral-8x7b": 46.7,
+    "yi-9b": 8.8,
+    "qwen2.5-14b": 14.7,
+    "deepseek-moe-16b": 16.4,
+    "mamba2-1.3b": 1.3,
+    "qwen-72b": 72.0,
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(INPUT_SHAPES) == 4
+    for a in ALL_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+@pytest.mark.parametrize("arch,b", sorted(ADVERTISED_B.items()))
+def test_param_counts_near_advertised(arch, b):
+    n = get_config(arch).param_count() / 1e9
+    assert abs(n - b) / b < 0.35, f"{arch}: {n:.2f}B vs advertised {b}B"
+
+
+def test_moe_active_params():
+    mix = get_config("mixtral-8x7b")
+    assert mix.active_param_count() < 0.35 * mix.param_count()
+    ds = get_config("deepseek-moe-16b")
+    assert ds.active_param_count() < 0.25 * ds.param_count()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 4 and r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_shard_plan_tp16(arch):
+    """Every assigned arch must lay out on the production TP=16 axis."""
+    cfg = get_config(arch)
+    plan = ShardPlan.make(cfg, 16)
+    assert plan.n_heads_p % 16 == 0
+    assert plan.vocab_p % 16 == 0
+    assert plan.local_q >= 1
+    # padding never drops real heads
+    assert plan.n_heads_p >= cfg.n_heads
+    assert plan.n_kv_p >= min(cfg.n_kv_heads, plan.tp) or cfg.mla
+
+
+def test_shapes_table():
+    assert get_shape("train_4k").global_batch == 256
+    assert get_shape("long_500k").seq_len == 524288
+    assert get_shape("decode_32k").kind == "decode"

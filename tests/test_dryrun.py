@@ -1,0 +1,35 @@
+"""Integration test for the multi-pod dry-run launcher (deliverable e).
+
+Runs in a subprocess (dryrun.py forces 512 virtual devices before importing
+jax) for one cheap combo per mesh and checks the recorded artifact schema.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
+def test_dryrun_one_combo(tmp_path, flags):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-1.3b", "--shape", "decode_32k",
+         "--out", str(tmp_path)] + flags,
+        capture_output=True, text=True, timeout=800, env=env,
+        cwd=os.path.join(HERE, ".."),
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "All dry-run combinations compiled successfully" in r.stdout
+    tag = "pod2x16x16" if flags else "pod16x16"
+    rec = json.load(open(tmp_path / f"mamba2-1.3b__decode_32k__{tag}.json"))
+    assert rec["chips"] == (512 if flags else 256)
+    assert rec["flops"] > 0 and rec["bytes_accessed"] > 0
+    assert rec["memory"]["alias_bytes"] > 0          # donated caches (§2.3)
+    assert "collectives" in rec and rec["copies"]["copy"] >= 0

@@ -1,0 +1,240 @@
+"""Module-level correctness: RoPE, attention caches, SSD/RG-LRU vs naive
+recurrence oracles, MoE dispatch, group building."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RGLRUConfig, SSMConfig
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import Dist, apply_rope, materialize, rms_norm
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.key(0), (2, 4, 16, 64))
+    pos = jnp.arange(16)[None, None, :]
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5,
+    )
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 64))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[[i]]]), 10000.0)
+        kj = apply_rope(k, jnp.array([[[j]]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-5
+
+
+def test_rms_norm_scale_invariant_direction():
+    x = jax.random.normal(jax.random.key(0), (4, 32))
+    g = jnp.zeros((32,))
+    y1 = rms_norm(x, g, 1e-6)
+    y2 = rms_norm(3.0 * x, g, 1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD vs naive recurrence oracle
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(x, log_a, B, C, D, h0):
+    """x (b,s,h,P), log_a (b,s,h), B/C (b,s,N) -> per-definition recurrence."""
+    b, s, h, Pd = x.shape
+    N = B.shape[-1]
+    H = h0.copy()
+    ys = []
+    for t in range(s):
+        a = np.exp(log_a[:, t])                        # (b,h)
+        H = H * a[..., None, None] + np.einsum("bhp,bn->bhpn", x[:, t], B[:, t])
+        ys.append(np.einsum("bhpn,bn->bhp", H, C[:, t]) + D[None, :, None] * 0.0)
+    return np.stack(ys, 1), H
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive_recurrence(chunk):
+    cfg = dataclasses.replace(
+        get_config("mamba2-1.3b").reduced(),
+        ssm=SSMConfig(state_dim=16, head_dim=8, expand=2, chunk=chunk, conv_width=4),
+        d_model=32,
+    )
+    dist = Dist(tp=1, dp=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.models.common import specs_of
+
+    defs = ssm_mod.ssd_defs(cfg, dist)
+    params = materialize(defs, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model), jnp.float32)
+
+    def f(params, x):
+        out, _ = ssm_mod.ssd_forward(params, x, cfg, dist)
+        return out
+
+    outs = {}
+    for c in [chunk, 32]:
+        cfg_c = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=c))
+
+        def fc(params, x, cfg_c=cfg_c):
+            out, _ = ssm_mod.ssd_forward(params, x, cfg_c, dist)
+            return out
+
+        outs[c] = np.asarray(
+            jax.jit(jax.shard_map(fc, mesh=mesh, in_specs=(specs_of(defs), P()),
+                                  out_specs=P(), check_vma=False))(params, x)
+        )
+    # chunk-size invariance == the chunked algebra matches the recurrence
+    np.testing.assert_allclose(outs[chunk], outs[32], atol=2e-3, rtol=1e-3)
+
+
+def test_ssd_decode_matches_prefill():
+    cfg = dataclasses.replace(
+        get_config("mamba2-1.3b").reduced(), d_model=32,
+        ssm=SSMConfig(state_dim=16, head_dim=8, expand=2, chunk=8, conv_width=4),
+    )
+    dist = Dist(tp=1, dp=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.models.common import specs_of
+
+    defs = ssm_mod.ssd_defs(cfg, dist)
+    params = materialize(defs, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 17, cfg.d_model), jnp.float32)
+
+    def full(params, x):
+        out, _ = ssm_mod.ssd_forward(params, x[:, :16], cfg, dist)
+        return out
+
+    def stepwise(params, x):
+        st = ssm_mod.init_ssd_state(cfg, dist, 2)
+        ys = []
+        for t in range(16):
+            y, st = ssm_mod.ssd_forward(params, x[:, t : t + 1], cfg, dist, state=st)
+            ys.append(y)
+        return jnp.concatenate(ys, 1)
+
+    run = lambda f: np.asarray(
+        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
+                              out_specs=P(), check_vma=False))(params, x)
+    )
+    np.testing.assert_allclose(run(full), run(stepwise), atol=2e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU vs sequential loop
+# ---------------------------------------------------------------------------
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = dataclasses.replace(
+        get_config("recurrentgemma-9b").reduced(), d_model=64, n_heads=4,
+        rglru=RGLRUConfig(lru_width=0, conv_width=4),
+    )
+    dist = Dist(tp=1, dp=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.models.common import specs_of
+
+    defs = rglru_mod.rglru_defs(cfg, dist)
+    params = materialize(defs, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 12, cfg.d_model), jnp.float32)
+
+    def full(params, x):
+        st = rglru_mod.init_rglru_state(cfg, dist, 2)
+        out, _ = rglru_mod.rglru_forward(params, x, cfg, dist, state=st)
+        return out
+
+    def stepwise(params, x):
+        st = rglru_mod.init_rglru_state(cfg, dist, 2)
+        ys = []
+        for t in range(12):
+            y, st = rglru_mod.rglru_forward(params, x[:, t : t + 1], cfg, dist, state=st)
+            ys.append(y)
+        return jnp.concatenate(ys, 1)
+
+    run = lambda f: np.asarray(
+        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
+                              out_specs=P(), check_vma=False))(params, x)
+    )
+    np.testing.assert_allclose(run(full), run(stepwise), atol=2e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Group building
+# ---------------------------------------------------------------------------
+
+
+def test_build_groups_recurrentgemma():
+    cfg = get_config("recurrentgemma-9b")
+    groups = tfm.build_groups(cfg)
+    assert groups[0].n == 12 and len(groups[0].subs) == 3
+    kinds = [s.kind for s in groups[0].subs]
+    assert kinds == ["rglru", "rglru", "local_attn"]
+    # 38 = 12*3 + 2 trailing rglru singles
+    assert sum(g.n * len(g.subs) for g in groups) == 38
+
+
+def test_build_groups_deepseek():
+    cfg = get_config("deepseek-moe-16b")
+    groups = tfm.build_groups(cfg)
+    assert groups[0].n == 1 and not groups[0].subs[0].is_moe  # dense layer 0
+    assert groups[1].n == 27 and groups[1].subs[0].is_moe
+    assert sum(g.n * len(g.subs) for g in groups) == 28
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "mixtral-8x7b", "mamba2-1.3b"])
+def test_build_groups_homogeneous(arch):
+    cfg = get_config(arch)
+    groups = tfm.build_groups(cfg)
+    assert len(groups) == 1 and groups[0].n == cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Banded sliding-window prefill (§Perf H6) and maybe_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,W,cq", [(2048, 256, 512), (4096, 512, 1024),
+                                    (2048, 700, 512)])
+def test_banded_attention_matches_masked_full(S, W, cq):
+    from repro.models.attention import (banded_causal_attention,
+                                        chunked_causal_attention)
+
+    ks = jax.random.split(jax.random.key(S + W), 3)
+    q = jax.random.normal(ks[0], (1, 4, S, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, S, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, S, 32), jnp.float32)
+    pos = jnp.arange(S)
+    a = banded_causal_attention(q, k, v, pos, W, 0.18, q_chunk=cq)
+    b = chunked_causal_attention(q, k, v, pos, pos, W, 0.18)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=1e-5)
+
+
+def test_maybe_scan_unrolled_equals_scan():
+    from repro.models.common import UNROLL_SCANS, maybe_scan
+
+    xs = jnp.arange(12.0).reshape(6, 2)
+
+    def body(c, x):
+        return c + x.sum(), c * 2
+
+    a = maybe_scan(body, 1.0, xs)
+    token = UNROLL_SCANS.set(True)
+    try:
+        b = maybe_scan(body, 1.0, xs)
+    finally:
+        UNROLL_SCANS.reset(token)
+    assert jnp.allclose(a[0], b[0]) and jnp.allclose(a[1], b[1])

@@ -1,0 +1,144 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.collectives import CommStats
+from repro.core.zero_copy import count_copies
+from repro.kernels import ops, ref
+from repro.models.common import causal_mask, pad_to, window_mask
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# §2.1b invariant: distributed top-k over vocab shards == global top-k
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    st.integers(1, 4),                  # batch
+    st.integers(2, 16).map(lambda x: 2 * x),  # vocab per shard
+    st.sampled_from([1, 2, 4, 8]),      # shards
+    st.integers(1, 8),                  # k
+    st.randoms(use_true_random=False),
+)
+def test_local_topk_then_merge_equals_global_topk(b, vs, shards, k, rnd):
+    if k > vs:
+        k = vs
+    x = np.array([[rnd.gauss(0, 1) for _ in range(vs * shards)] for _ in range(b)],
+                 dtype=np.float32)
+    # simulate the per-shard local top-k + k-candidate merge
+    cand_v, cand_i = [], []
+    for s in range(shards):
+        sl = x[:, s * vs:(s + 1) * vs]
+        idx = np.argsort(-sl, axis=1)[:, :k]
+        cand_i.append(idx + s * vs)
+        cand_v.append(np.take_along_axis(sl, idx, 1))
+    cand_v = np.concatenate(cand_v, 1)
+    cand_i = np.concatenate(cand_i, 1)
+    order = np.argsort(-cand_v, axis=1)[:, :k]
+    merged_v = np.take_along_axis(cand_v, order, 1)
+    # ground truth
+    gt_idx = np.argsort(-x, axis=1)[:, :k]
+    gt_v = np.take_along_axis(x, gt_idx, 1)
+    np.testing.assert_allclose(merged_v, gt_v, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.integers(130, 600), st.integers(1, 16))
+def test_pallas_topk_matches_lax(b, v, k):
+    x = jax.random.normal(jax.random.key(b * 7919 + v), (b, v))
+    vals, idx = ops.topk(x, k)
+    rv, ri = ref.topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 32), st.integers(1, 48), st.integers(0, 16), st.integers(1, 24))
+def test_window_mask_subset_of_causal(q, kv, off, w):
+    cm = np.asarray(causal_mask(q, kv, off))
+    wm = np.asarray(window_mask(q, kv, off, w))
+    assert not (wm & ~cm).any()                 # window ⊂ causal
+    # each row allows at most w positions
+    assert wm.sum(axis=1).max() <= w
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 1000), st.integers(1, 128))
+def test_pad_to(x, m):
+    p = pad_to(x, m)
+    assert p >= x and p % m == 0 and p - x < m
+
+
+# ---------------------------------------------------------------------------
+# flash-decode LSE merge: splitting the cache must not change the result
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(1, 4), st.randoms(use_true_random=False))
+def test_lse_merge_split_invariance(splits, heads, rnd):
+    S = splits * 16
+    q = jax.random.normal(jax.random.key(1), (1, heads, 1, 32))
+    k = jax.random.normal(jax.random.key(2), (1, heads, S, 32))
+    v = jax.random.normal(jax.random.key(3), (1, heads, S, 32))
+    valid = jnp.ones(S, bool)
+    m, l, acc = ref.decode_attention_ref(q, k, v, valid, 0.2)
+    full = np.asarray(acc / l[..., None])
+    # split shards, merge with the LSE rule
+    parts = []
+    for s in range(splits):
+        sl = slice(s * 16, (s + 1) * 16)
+        parts.append(ref.decode_attention_ref(q, k[:, :, sl], v[:, :, sl],
+                                              valid[sl], 0.2))
+    ms = np.stack([np.asarray(p[0]) for p in parts])
+    gm = ms.max(0)
+    num = sum(np.asarray(p[2]) * np.exp(np.asarray(p[0]) - gm)[..., None] for p in parts)
+    den = sum(np.asarray(p[1]) * np.exp(np.asarray(p[0]) - gm) for p in parts)
+    np.testing.assert_allclose(num / den[..., None], full, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# comm accounting
+# ---------------------------------------------------------------------------
+
+
+def test_comm_stats_accounting():
+    from repro.core import collectives as cc
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from jax.sharding import PartitionSpec as P
+
+    def f(x):
+        y = cc.psum(x, "model", tag="t1")
+        z = cc.all_gather(y, "model", gather_axis=0, tag="t2")
+        return z
+
+    with cc.comm_stats() as stats:
+        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                              check_vma=False)).lower(
+            jax.ShapeDtypeStruct((8, 4), jnp.float32))
+    assert stats.count("all_reduce") == 1
+    assert stats.count("all_gather") == 1
+    assert stats.total_bytes("all_reduce") == 2 * 8 * 4 * 4   # wire factor 2x
+    assert stats.total_bytes("all_gather") == 8 * 4 * 4
+
+
+def test_count_copies_parser():
+    hlo = """
+  %copy.1 = f32[4]{0} copy(%x)
+  %transpose.2 = f32[4,2]{1,0} transpose(%y), dimensions={1,0}
+  %add.3 = f32[4] add(%a, %b)
+    """
+    c = count_copies(hlo)
+    assert c["copy"] == 1 and c["transpose"] == 1

@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's system: train a small model,
+serve batched requests through the scheduler, verify determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import WaveScheduler
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("yi-9b").reduced()
+    return Engine(
+        cfg=cfg,
+        parallel=ParallelConfig(tp=1, dp=1, remat=False),
+        sampling=SamplingConfig(top_k=8),
+        mesh=make_local_mesh(1, 1),
+        max_len=96,
+    )
+
+
+def test_generate_shapes(engine):
+    prompts = np.random.default_rng(0).integers(
+        0, engine.cfg.vocab_size, (2, 8)).astype(np.int32)
+    out = engine.generate(prompts, max_new=6)
+    assert out.shape == (2, 6)
+    assert (out >= 0).all() and (out < engine.cfg.vocab_size).all()
+
+
+def test_greedy_determinism():
+    cfg = get_config("yi-9b").reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=64)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    a = eng.generate(prompts, max_new=5)
+    b = eng.generate(prompts, max_new=5)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_scheduler_drains_queue(engine):
+    sched = WaveScheduler(engine, batch_size=3)
+    rng = np.random.default_rng(2)
+    rids = [sched.submit(rng.integers(0, engine.cfg.vocab_size,
+                                      rng.integers(3, 9)).astype(np.int32),
+                         max_new=4)
+            for _ in range(7)]
+    done = sched.run()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    for r in done:
+        assert r.output is not None and len(r.output) == 4
+        assert r.stats["wave_batch"] <= 3
+
+
+def test_scheduler_eos_cut(engine):
+    sched = WaveScheduler(engine, batch_size=2)
+    prompt = np.arange(4, dtype=np.int32)
+    sched.submit(prompt, max_new=8, eos_id=None)
+    done = sched.run()
+    assert len(done[0].output) == 8
+
+
+def test_train_driver_end_to_end():
+    """The quickstart path: a few hundred steps would run the same code;
+    here 12 steps must not diverge and must track the synthetic stream."""
+    from repro.launch.train import main as train_main
+
+    hist = train_main(["--arch", "mamba2-1.3b", "--steps", "12",
+                       "--global-batch", "4", "--seq-len", "64",
+                       "--lr", "5e-3", "--log-every", "1"])
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.05
+    assert np.isfinite(hist[-1]["grad_norm"])
+
+
+def test_serve_driver_end_to_end():
+    from repro.launch.serve import main as serve_main
+
+    done = serve_main(["--arch", "qwen2.5-14b", "--requests", "4",
+                       "--batch", "2", "--max-new", "4", "--prompt-len", "8"])
+    assert len(done) == 4
+
+
+def test_multi_step_decode_matches_per_token(engine):
+    """§Perf H4: fused n-token decode == the per-token loop (greedy)."""
+    import numpy as np
+
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config("mamba2-1.3b").reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=64)
+    prompts = np.random.default_rng(3).integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    a = eng.generate(prompts, max_new=12, multi_step=False)
+    b = eng.generate(prompts, max_new=12, multi_step=True)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,176 @@
+"""Training substrate: losses, optimizers, checkpointing, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.models.common import Dist, ShardPlan, specs_of
+from repro.training import checkpoint, data
+from repro.training.loss import chunked_vocab_parallel_xent, vocab_parallel_xent
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from repro.training.train_loop import make_train_step
+from repro.training.zero import init_zero_state, zero_state_defs
+
+
+def test_vocab_parallel_xent_matches_reference(mesh11):
+    b, s, v = 2, 8, 64
+    logits = jax.random.normal(jax.random.key(0), (b, s, v))
+    labels = jax.random.randint(jax.random.key(1), (b, s), 0, v)
+    dist = Dist(tp=1, dp=1)
+    cfg = get_config("yi-9b").reduced()
+    import dataclasses
+
+    plan = ShardPlan.make(dataclasses.replace(cfg, vocab_size=v), 1)
+
+    def f(logits, labels):
+        return vocab_parallel_xent(logits, labels, plan, dist)
+
+    got = float(jax.jit(jax.shard_map(
+        f, mesh=mesh11, in_specs=(P(), P()), out_specs=P(), check_vma=False))(
+        logits, labels))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    expect = float(jnp.mean(lse - picked))
+    assert abs(got - expect) < 1e-4
+
+
+def test_chunked_xent_matches_unchunked(mesh11):
+    b, s, d, v = 2, 16, 32, 64
+    hidden = jax.random.normal(jax.random.key(0), (b, s, d))
+    w = jax.random.normal(jax.random.key(1), (d, v)) * 0.1
+    labels = jax.random.randint(jax.random.key(2), (b, s), 0, v)
+    dist = Dist(tp=1, dp=1)
+    import dataclasses
+
+    plan = ShardPlan.make(dataclasses.replace(get_config("yi-9b").reduced(),
+                                              vocab_size=v), 1)
+    head = lambda h: (h @ w).astype(jnp.float32)
+
+    def f(hidden, labels):
+        a = chunked_vocab_parallel_xent(hidden, head, labels, plan, dist, chunk=4)
+        bfull = vocab_parallel_xent(head(hidden), labels, plan, dist)
+        return a, bfull
+
+    a, bfull = jax.jit(jax.shard_map(f, mesh=mesh11, in_specs=(P(), P()),
+                                     out_specs=(P(), P()), check_vma=False))(
+        hidden, labels)
+    assert abs(float(a) - float(bfull)) < 1e-4
+
+
+def test_chunked_xent_gradient_matches(mesh11):
+    b, s, d, v = 2, 8, 16, 32
+    hidden = jax.random.normal(jax.random.key(0), (b, s, d))
+    w = jax.random.normal(jax.random.key(1), (d, v)) * 0.1
+    labels = jax.random.randint(jax.random.key(2), (b, s), 0, v)
+    dist = Dist(tp=1, dp=1)
+    import dataclasses
+
+    plan = ShardPlan.make(dataclasses.replace(get_config("yi-9b").reduced(),
+                                              vocab_size=v), 1)
+
+    def run(loss_kind):
+        def f(w, hidden, labels):
+            head = lambda h: (h @ w).astype(jnp.float32)
+            if loss_kind == "chunked":
+                return chunked_vocab_parallel_xent(hidden, head, labels, plan,
+                                                   dist, chunk=4)
+            return vocab_parallel_xent(head(hidden), labels, plan, dist)
+
+        g = jax.grad(f)
+        return np.asarray(jax.jit(jax.shard_map(
+            g, mesh=mesh11, in_specs=(P(), P(), P()), out_specs=P(),
+            check_vma=False))(w, hidden, labels))
+
+    np.testing.assert_allclose(run("chunked"), run("plain"), atol=1e-5, rtol=1e-4)
+
+
+def test_lr_schedule_shape():
+    c = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_schedule(jnp.int32(s), c)) for s in [0, 9, 10, 55, 99, 200]]
+    assert lrs[0] < lrs[1] <= lrs[2] == max(lrs)        # warmup up to peak
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]          # cosine down
+    assert abs(lrs[5] - 0.1) < 0.02                     # floor
+
+
+def test_loss_decreases_training(mesh11):
+    cfg = get_config("qwen2.5-14b").reduced()
+    ctx = M.ModelCtx.make(cfg, ParallelConfig(tp=1, dp=1, remat=True))
+    params = M.init_params(ctx, jax.random.key(0))
+    opt = init_opt_state(params)
+    pspecs = M.param_specs(ctx)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    step_fn = make_train_step(ctx, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    jstep = jax.jit(jax.shard_map(
+        step_fn, mesh=mesh11,
+        in_specs=(pspecs, ospecs, {"tokens": P("data", None), "labels": P("data", None)}),
+        out_specs=(pspecs, ospecs, P()), check_vma=False), donate_argnums=(0, 1))
+    dc = data.DataConfig(global_batch=8, seq_len=32)
+    losses = []
+    for i in range(30):
+        b = data.make_batch(cfg, dc, i)
+        params, opt, m = jstep(params, opt,
+                               {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert min(losses[-5:]) < losses[0] - 0.15, losses[:3] + losses[-3:]
+
+
+def test_zero1_equals_adamw_dp1(mesh11):
+    cfg = get_config("yi-9b").reduced()
+    ctx = M.ModelCtx.make(cfg, ParallelConfig(tp=1, dp=1, remat=False))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    dc = data.DataConfig(global_batch=4, seq_len=16)
+    outs = {}
+    for zero1 in (False, True):
+        params = M.init_params(ctx, jax.random.key(0))
+        pspecs = M.param_specs(ctx)
+        if zero1:
+            opt = init_zero_state(M.model_defs(ctx), ctx.dist)
+            ospecs = specs_of(zero_state_defs(M.model_defs(ctx), ctx.dist))
+        else:
+            opt = init_opt_state(params)
+            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        step_fn = make_train_step(ctx, opt_cfg, zero1=zero1)
+        jstep = jax.jit(jax.shard_map(
+            step_fn, mesh=mesh11,
+            in_specs=(pspecs, ospecs,
+                      {"tokens": P("data", None), "labels": P("data", None)}),
+            out_specs=(pspecs, ospecs, P()), check_vma=False))
+        for i in range(3):
+            b = data.make_batch(cfg, dc, i)
+            params, opt, m = jstep(params, opt,
+                                   {k: jnp.asarray(v) for k, v in b.items()})
+        outs[zero1] = params
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("mamba2-1.3b").reduced()
+    ctx = M.ModelCtx.make(cfg, ParallelConfig(tp=1, dp=1))
+    params = M.init_params(ctx, jax.random.key(0))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    checkpoint.save(path, params, step=42, meta={"arch": cfg.name})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    restored, step = checkpoint.restore(path, like)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_data_determinism_and_structure():
+    cfg = get_config("internvl2-26b").reduced()
+    dc = data.DataConfig(global_batch=2, seq_len=24)
+    b1 = data.make_batch(cfg, dc, 7)
+    b2 = data.make_batch(cfg, dc, 7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (2, 24 - cfg.frontend.prefix_len)
+    assert "features" in b1
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
