@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core.zero_copy import count_copies, fused_out_projection
 
 
@@ -29,7 +31,7 @@ def _decode_step_alias(donate: bool) -> int:
     caches = M.init_caches(ctx, 2, 64)
     cspecs = kvcache.cache_pspecs(ctx)
     step = make_decode_step(ctx, SamplingConfig(top_k=8))
-    f = jax.shard_map(step, mesh=mesh,
+    f = compat.shard_map(step, mesh=mesh,
                       in_specs=(M.param_specs(ctx), P("data"), cspecs, P(), P()),
                       out_specs=(P("data"), cspecs), check_vma=False)
     jf = jax.jit(f, donate_argnums=(2,) if donate else ())

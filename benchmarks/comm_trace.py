@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.core import collectives as cc
 from repro.launch.inputs import _globalize, _sds, rng_spec
@@ -29,8 +31,7 @@ def trace_decode(arch: str, tp: int, **flags):
     cfg = get_config(arch).reduced()
     par = ParallelConfig(tp=tp, dp=1, remat=False, **flags)
     ctx = M.ModelCtx.make(cfg, par)
-    mesh = jax.make_mesh((1, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, tp), ("data", "model"))
     pspecs = M.param_specs(ctx)
     p_in = jax.tree.map(
         lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
@@ -45,7 +46,7 @@ def trace_decode(arch: str, tp: int, **flags):
     tok = _sds(tshape, jnp.int32, mesh, tok_spec)
     cur = _sds((), jnp.int32, mesh, P())
     with cc.comm_stats() as stats:
-        jax.jit(jax.shard_map(
+        jax.jit(compat.shard_map(
             step, mesh=mesh,
             in_specs=(pspecs, tok_spec, cspecs, P(), P()),
             out_specs=(tok_spec, cspecs), check_vma=False,

@@ -4,6 +4,7 @@
   sync_minimization   — paper Fig. 1 (§2.1a token-ID broadcast, §2.1b top-k)
   one_shot            — paper Fig. 2 (§2.2 one sync per decoder layer)
   zero_copy           — paper Fig. 3 (§2.3 zero-copy handoff)
+  continuous_batching — slot engine vs wave baseline on a straggler-heavy mix
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -28,14 +29,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_one_shot, bench_sync_minimization,
-                            bench_token_latency, bench_zero_copy)
+    from benchmarks import (bench_continuous_batching, bench_one_shot,
+                            bench_sync_minimization, bench_token_latency,
+                            bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
         ("sync_minimization", bench_sync_minimization.main),
         ("one_shot", bench_one_shot.main),
         ("zero_copy", bench_zero_copy.main),
+        ("continuous_batching", bench_continuous_batching.main),
     ]
     failures = []
     for name, fn in benches:

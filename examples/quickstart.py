@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
@@ -37,7 +39,7 @@ def step(params, tokens):
     return logits
 
 
-logits = jax.jit(jax.shard_map(
+logits = jax.jit(compat.shard_map(
     step, mesh=mesh, in_specs=(M.param_specs(ctx), P("data", None)),
     out_specs=P("data", None, "model"), check_vma=False))(params, tokens)
 print("logits:", logits.shape, "finite:", bool(jnp.isfinite(logits).all()))

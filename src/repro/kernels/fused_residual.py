@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
+
 
 def _fused_kernel(a_ref, wa_ref, b_ref, wb_ref, o_ref, acc_ref, *, n_k: int):
     kdx = pl.program_id(2)
@@ -81,7 +83,7 @@ def fused_dual_matmul(
         out_specs=pl.BlockSpec((bt, bd), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Tp, Dp), a.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
+
 
 def _lru_kernel(a_ref, b_ref, h0_ref, out_ref, hT_ref, *, seq: int):
     h = h0_ref[...].astype(jnp.float32)                  # (1, bw)
@@ -64,7 +66,7 @@ def lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
             jax.ShapeDtypeStruct((bsz, s, Wp), jnp.float32),
             jax.ShapeDtypeStruct((bsz, Wp), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

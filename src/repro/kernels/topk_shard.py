@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
+
 NEG = -3.0e38  # sentinel below any real logit (fp32)
 
 
@@ -92,7 +94,7 @@ def topk(x: jax.Array, k: int, *, block_b: int = 8, block_v: int = 512,
             pltpu.VMEM((bb, k), jnp.float32),
             pltpu.VMEM((bb, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

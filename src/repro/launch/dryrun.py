@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import ASSIGNED_ARCHS, get_config, get_shape
 from repro.configs.base import INPUT_SHAPES, SamplingConfig
 from repro.launch import inputs as I
@@ -146,8 +147,7 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
     else:  # same chip count, different geometry (perf experiments)
         shp = (2, dp, tp) if multi_pod else (dp, tp)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        mesh = jax.make_mesh(shp, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shp))
+        mesh = compat.make_mesh(shp, axes)
     pods = 2 if multi_pod else 1
     par = I.parallel_for(cfg, shape, tp=tp, dp=dp, pods=pods, use_pallas=use_pallas)
     if overrides:
@@ -157,7 +157,7 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
     ctx = M.ModelCtx.make(cfg, par, pod_axis="pod" if multi_pod else None)
     pspecs = M.param_specs(ctx)
     p_in = I.param_input_specs(ctx, mesh)
-    sm = partial(jax.shard_map, mesh=mesh, check_vma=False)
+    sm = partial(compat.shard_map, mesh=mesh, check_vma=False)
     rep_b = I.replicate_batch_for(ctx, shape)
     b_ax = None if rep_b else I.batch_axes(ctx)
     text_len = I.text_len_for(cfg, shape)
@@ -219,7 +219,7 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
 
 def analyze(lowered, compiled, ctx, shape, *, t_compile: float) -> dict:
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     from repro.core.zero_copy import count_copies
@@ -262,7 +262,7 @@ def _cost_probe(arch, shape_name, multi_pod, n_layers, overrides):
         compiled = lowered.compile()
     finally:
         UNROLL_SCANS.reset(token)
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": cost.get("flops", 0.0),

@@ -2,11 +2,7 @@
 jax device state."""
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,9 +12,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     before any jax import so these shapes materialise on CPU."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(dp: int = 1, tp: int = 1):
     """Test/example mesh over however many (virtual) devices exist."""
-    return jax.make_mesh((dp, tp), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((dp, tp), ("data", "model"))

@@ -2,7 +2,20 @@
 
 Runs the batched-request serving example on a local mesh with the paper's
 optimizations on; reports per-token latency (the paper's §3 metric) and
-per-request stats from the wave scheduler.
+per-request stats from the selected scheduler.
+
+Schedulers (``--scheduler``):
+
+  wave        drain-and-restart baseline: waves of ``--batch`` requests pad
+              to the longest prompt and decode to the wave's max ``--max-new``.
+  continuous  slot engine: ``--slots`` fixed slots, per-slot positions,
+              finished slots masked in-program, arrivals admitted in-flight
+              by prefilling into free slots (no batch restart).  Extra knobs:
+              ``--block-steps`` fused masked decode steps per host round
+              trip, ``--arrival-every`` staggers request arrivals on the
+              virtual decode-step clock, ``--max-new-spread`` draws each
+              request's budget from [max_new/spread, max_new] to create the
+              straggler-heavy mix continuous batching wins on.
 """
 from __future__ import annotations
 
@@ -15,14 +28,60 @@ import numpy as np
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.engine import Engine
-from repro.runtime.scheduler import WaveScheduler
+from repro.runtime.scheduler import ContinuousScheduler, WaveScheduler
+
+
+def build_engine(args):
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh(args.dp, args.tp)
+    par = ParallelConfig(tp=args.tp, dp=args.dp, remat=False,
+                         topk_sync=not args.no_topk_sync)
+    return Engine(cfg=cfg, parallel=par,
+                  sampling=SamplingConfig(top_k=args.top_k),
+                  mesh=mesh, max_len=args.max_len)
+
+
+def make_scheduler(eng, args):
+    if args.scheduler == "continuous":
+        return ContinuousScheduler(eng, n_slots=args.slots,
+                                   block_steps=args.block_steps,
+                                   responsive_blocks=args.responsive_blocks)
+    return WaveScheduler(eng, batch_size=args.batch)
+
+
+def submit_workload(sched, cfg, args):
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
+        max_new = args.max_new
+        if args.max_new_spread > 1:
+            max_new = int(rng.integers(max(1, args.max_new // args.max_new_spread),
+                                       args.max_new + 1))
+        sched.submit(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
+                     max_new=max_new, arrival_step=i * args.arrival_every)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--scheduler", choices=("wave", "continuous"), default="wave")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="wave scheduler: requests per wave")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous scheduler: fixed slot count")
+    ap.add_argument("--block-steps", type=int, default=8,
+                    help="continuous scheduler: fused decode steps per round trip")
+    ap.add_argument("--responsive-blocks", action="store_true",
+                    help="end fused blocks at the shortest active budget while "
+                         "requests wait (fewer total steps, more dispatches)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="stagger arrivals by N decode steps per request")
+    ap.add_argument("--max-new-spread", type=int, default=1,
+                    help=">1 draws per-request max_new from [max_new/spread, max_new]")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--dp", type=int, default=1)
@@ -34,30 +93,23 @@ def main(argv=None):
                     help="disable paper §2.1b (baseline full-vocab gather)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = cfg.reduced()
-    mesh = make_local_mesh(args.dp, args.tp)
-    par = ParallelConfig(tp=args.tp, dp=args.dp, remat=False,
-                         topk_sync=not args.no_topk_sync)
-    eng = Engine(cfg=cfg, parallel=par,
-                 sampling=SamplingConfig(top_k=args.top_k),
-                 mesh=mesh, max_len=args.max_len)
-
-    rng = np.random.default_rng(0)
-    sched = WaveScheduler(eng, batch_size=args.batch)
-    for _ in range(args.requests):
-        plen = int(rng.integers(4, args.prompt_len + 1))
-        shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
-        sched.submit(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
-                     max_new=args.max_new)
+    eng = build_engine(args)
+    cfg = eng.cfg
+    sched = make_scheduler(eng, args)
+    submit_workload(sched, cfg, args)
     t0 = time.monotonic()
     done = sched.run()
     dt = time.monotonic() - t0
     total_tokens = sum(len(r.output) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s -> {1000*dt/max(total_tokens,1):.1f} ms/token "
-          f"(batched; arch={cfg.name}, tp={args.tp})")
+          f"({args.scheduler}; arch={cfg.name}, tp={args.tp})")
+    if args.scheduler == "continuous":
+        s = sched.stats
+        util = s["active_slot_steps"] / max(1, s["slot_steps"])
+        print(f"  decode steps {s['decode_steps']}, slot util {util:.0%}, "
+              f"admission rounds {s['admission_rounds']} "
+              f"({s['in_flight_admissions']} requests admitted in-flight)")
     for r in done[:4]:
         out = r.output if r.output.ndim == 1 else r.output[..., 0]
         print(f"  req {r.rid}: {len(r.output)} tokens, first 8: {out[:8].tolist()}")

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs import ParallelConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
@@ -66,8 +67,8 @@ def main(argv=None):
 
     step_fn = make_train_step(ctx, opt_cfg, zero1=args.zero1)
     jstep = jax.jit(
-        jax.shard_map(step_fn, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
-                      out_specs=(pspecs, ospecs, P()), check_vma=False),
+        shard_map(step_fn, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
+                  out_specs=(pspecs, ospecs, P()), check_vma=False),
         donate_argnums=(0, 1),
     )
 

@@ -84,17 +84,24 @@ def init_cache(
     kind: str,
     dtype=jnp.bfloat16,
     quant: bool = False,
+    batched_pos: bool = False,
 ) -> Dict[str, jax.Array]:
     """Per-shard cache buffers for one layer (stacked by the scan outside).
 
     quant=True stores K/V as int8 with a per-(batch, head, slot) bf16 absmax
-    scale — halves cache HBM residency + read traffic (beyond-paper)."""
+    scale — halves cache HBM residency + read traffic (beyond-paper).
+
+    batched_pos=True gives every batch row (slot) its own position array —
+    the continuous-batching engine decodes with a per-slot position vector,
+    so validity masks must be trackable per row."""
+    pos_shape = (batch_local, cache_len_local) if batched_pos else (cache_len_local,)
+    pos = jnp.full(pos_shape, -1, jnp.int32)
     if cfg.mla is not None:
         m = cfg.mla   # latent cache is already 10-30x smaller; no quant
         return {
             "ckv": jnp.zeros((batch_local, cache_len_local, m.kv_lora_rank), dtype),
             "krope": jnp.zeros((batch_local, cache_len_local, m.qk_rope_head_dim), dtype),
-            "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+            "pos": pos,
         }
     hd = cfg.resolved_head_dim
     shape = (batch_local, plan.local_kv, cache_len_local, hd)
@@ -104,12 +111,12 @@ def init_cache(
             "v": jnp.zeros(shape, jnp.int8),
             "k_scale": jnp.zeros(shape[:3], dtype),
             "v_scale": jnp.zeros(shape[:3], dtype),
-            "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+            "pos": pos,
         }
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
-        "pos": jnp.full((cache_len_local,), -1, jnp.int32),
+        "pos": pos,
     }
 
 
@@ -280,8 +287,8 @@ def decode_attention_shardable(
     q: jax.Array,                 # (b, hq, 1, hd)
     k: jax.Array,                 # (b, hkv, S_local, hd) cache slice
     v: jax.Array,
-    kv_positions: jax.Array,      # (S_local,)
-    cur_pos: jax.Array,           # scalar int32: position of the query token
+    kv_positions: jax.Array,      # (S_local,) shared or (b, S_local) per-slot
+    cur_pos: jax.Array,           # int32 query position: scalar or (b,) per-slot
     window: int,
     scale: float,
     dist: Dist,
@@ -294,17 +301,31 @@ def decode_attention_shardable(
     When ``seq_axis`` is given, each shard holds a slice of the cache
     sequence; partials are merged with a log-sum-exp psum of (num, denom) —
     O(b·h·hd) bytes instead of gathering the O(S) cache.
+
+    With per-slot positions (continuous batching) ``cur_pos`` is a (b,)
+    vector and ``kv_positions`` is (b, S): every slot masks against its own
+    progress, so slots at different depths decode in one program.
     """
-    valid = (kv_positions >= 0) & (kv_positions <= cur_pos)
-    if window:
-        valid &= kv_positions > cur_pos - window
-    if use_pallas and q.shape[-1] % 128 == 0 and k.shape[2] % 128 == 0:
+    batched = cur_pos.ndim == 1
+    if batched:
+        kvp = kv_positions if kv_positions.ndim == 2 else kv_positions[None, :]
+        valid = (kvp >= 0) & (kvp <= cur_pos[:, None])
+        if window:
+            valid &= kvp > cur_pos[:, None] - window
+        vmask = valid[:, None, None, :]                          # (b,1,1,S)
+    else:
+        valid = (kv_positions >= 0) & (kv_positions <= cur_pos)
+        if window:
+            valid &= kv_positions > cur_pos - window
+        vmask = valid[None, None, None, :]
+    if (use_pallas and not batched and q.shape[-1] % 128 == 0
+            and k.shape[2] % 128 == 0):
         from repro.kernels import ops as kops
 
         m, l, acc = kops.decode_attention_partial(q, k, v, valid, scale)
     else:
         s = _grouped_scores(q, k) * scale                        # (b,hq,1,S)
-        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        s = jnp.where(vmask, s, -jnp.inf)
         m = s.max(axis=-1)                                       # (b,hq,1)
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
         p = jnp.exp(s - m_safe[..., None])
@@ -335,7 +356,9 @@ def _write_prefill(cache_side: jax.Array, new: jax.Array, positions: jax.Array, 
     new = new.astype(cache_side.dtype)
     s = new.shape[2]
     if seq_axis is not None:
-        ns = jax.lax.axis_size(seq_axis)
+        from repro import compat
+
+        ns = compat.axis_size(seq_axis)
         if s > S * ns:
             raise ValueError(f"seq-sharded prefill needs s <= S*shards ({s} > {S}*{ns})")
         if s < S * ns:  # pad; padded slots keep pos = -1 (masked, decode-writable)
@@ -392,6 +415,32 @@ def _write_pos(pos_arr: jax.Array, cur_pos: jax.Array, S: int, ring: bool,
     return jnp.where(mine, updated, pos_arr)
 
 
+def _slot_index(pos: jax.Array, S: int, ring: bool) -> jax.Array:
+    """Per-slot write index from a (b,) position vector.
+
+    Empty/overrun slots are clamped in range; their rows are either masked
+    (pos entry -1) or already retired, so the clamped write is harmless and
+    keeps the gather/scatter free of out-of-bounds semantics."""
+    slot = jnp.maximum(pos, 0)
+    return slot % S if ring else jnp.minimum(slot, S - 1)
+
+
+def _write_decode_batched(cache_side: jax.Array, new: jax.Array,
+                          pos: jax.Array, S: int, ring: bool):
+    """Write one token (b,h,1,hd) with EACH row at its own slot pos[b]."""
+    new = new.astype(cache_side.dtype)
+    slot = _slot_index(pos, S, ring)
+    b = cache_side.shape[0]
+    return cache_side.at[jnp.arange(b), :, slot, :].set(new[:, :, 0, :])
+
+
+def _write_pos_batched(pos_arr: jax.Array, pos: jax.Array, S: int, ring: bool):
+    """pos_arr (b,S): record each row's absolute position at its own slot."""
+    slot = _slot_index(pos, S, ring)
+    b = pos_arr.shape[0]
+    return pos_arr.at[jnp.arange(b), slot].set(pos.astype(jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -442,8 +491,9 @@ def gqa_forward(
     q = q.reshape(b, s, plan.local_q, hd).transpose(0, 2, 1, 3)
     k = k.reshape(b, s, plan.local_kv, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, plan.local_kv, hd).transpose(0, 2, 1, 3)
-    q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
-    k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    rope_pos = positions[None, None, :] if positions.ndim == 1 else positions[:, None, :]
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
+    k = apply_rope(k, rope_pos, cfg.rope_theta)
 
     new_cache = None
     if cache is not None:
@@ -451,25 +501,33 @@ def gqa_forward(
         ring = bool(window) and kv_seq_axis is None
         quant = "k_scale" in cache
         if decode:
+            batched = cur_pos.ndim == 1        # per-slot positions (cont. batching)
+            if batched and kv_seq_axis is not None:
+                raise ValueError("per-slot decode positions are incompatible "
+                                 "with kv_seq_shard (batch=1 long-context path)")
             seq_shard = (kv_seq_axis, S) if kv_seq_axis else None
+            if batched:
+                wd = lambda side, new: _write_decode_batched(side, new, cur_pos, S, ring)
+                wp = lambda pa: _write_pos_batched(pa, cur_pos, S, ring)
+            else:
+                wd = lambda side, new: _write_decode(side, new, cur_pos, S, ring, seq_shard)
+                wp = lambda pa: _write_pos(pa, cur_pos, S, ring, seq_shard)
             if quant:
                 kq, ksc = _quantize_kv(k)
                 vq, vsc = _quantize_kv(v)
-                ck = _write_decode(cache["k"], kq, cur_pos, S, ring, seq_shard)
-                cv = _write_decode(cache["v"], vq, cur_pos, S, ring, seq_shard)
-                cks = _write_decode(cache["k_scale"][..., None], ksc[..., None],
-                                    cur_pos, S, ring, seq_shard)[..., 0]
-                cvs = _write_decode(cache["v_scale"][..., None], vsc[..., None],
-                                    cur_pos, S, ring, seq_shard)[..., 0]
-                cpos = _write_pos(cache["pos"], cur_pos, S, ring, seq_shard)
+                ck = wd(cache["k"], kq)
+                cv = wd(cache["v"], vq)
+                cks = wd(cache["k_scale"][..., None], ksc[..., None])[..., 0]
+                cvs = wd(cache["v_scale"][..., None], vsc[..., None])[..., 0]
+                cpos = wp(cache["pos"])
                 new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
                              "pos": cpos}
                 k_read = _dequantize_kv(ck, cks)
                 v_read = _dequantize_kv(cv, cvs)
             else:
-                ck = _write_decode(cache["k"], k, cur_pos, S, ring, seq_shard)
-                cv = _write_decode(cache["v"], v, cur_pos, S, ring, seq_shard)
-                cpos = _write_pos(cache["pos"], cur_pos, S, ring, seq_shard)
+                ck = wd(cache["k"], k)
+                cv = wd(cache["v"], v)
+                cpos = wp(cache["pos"])
                 new_cache = {"k": ck, "v": cv, "pos": cpos}
                 k_read, v_read = ck, cv
             out = decode_attention_shardable(
@@ -477,6 +535,7 @@ def gqa_forward(
                 seq_axis=kv_seq_axis, use_pallas=use_pallas,
             )
         else:
+            batched_pos_cache = cache["pos"].ndim == 2
             if quant:
                 kq, ksc = _quantize_kv(k)
                 vq, vsc = _quantize_kv(v)
@@ -486,11 +545,15 @@ def gqa_forward(
                                         ksc[..., None], positions, S, kv_seq_axis)
                 cvs, _ = _write_prefill(cache["v_scale"][..., None],
                                         vsc[..., None], positions, S, kv_seq_axis)
+                if batched_pos_cache:
+                    cpos = jnp.broadcast_to(cpos[None], (b, S))
                 new_cache = {"k": ck, "v": cv, "k_scale": cks[..., 0],
                              "v_scale": cvs[..., 0], "pos": cpos}
             else:
                 ck, cpos = _write_prefill(cache["k"], k, positions, S, kv_seq_axis)
                 cv, _ = _write_prefill(cache["v"], v, positions, S, kv_seq_axis)
+                if batched_pos_cache:
+                    cpos = jnp.broadcast_to(cpos[None], (b, S))
                 new_cache = {"k": ck, "v": cv, "pos": cpos}
             out = _prefill_attention(q, k, v, positions, window, scale)
     else:
@@ -528,10 +591,11 @@ def mla_forward(
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
 
     # --- queries ---------------------------------------------------------
+    rope_pos = positions[None, None, :] if positions.ndim == 1 else positions[:, None, :]
     q_lat = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps)
     q = (q_lat @ params["w_uq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
-    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions[None, None, :],
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), rope_pos,
                         cfg.rope_theta)                       # (b,h,s,rope)
     # absorb W_uk into q: (b,s,h,nope) @ (rank, h, nope) -> (b,h,s,rank)
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
@@ -542,19 +606,30 @@ def mla_forward(
     dkv = x @ params["w_dkv"]
     ckv_new, krope_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     ckv_new = rms_norm(ckv_new, params["kv_norm"], cfg.rms_eps)
-    krope_new = apply_rope(krope_new[:, None], positions[None, None, :],
+    krope_new = apply_rope(krope_new[:, None], rope_pos,
                            cfg.rope_theta)[:, 0]              # (b,s,rope)
 
     if cache is not None:
         S = cache["ckv"].shape[1]
         if decode:
+            batched = cur_pos.ndim == 1
+            if batched and kv_seq_axis is not None:
+                raise ValueError("per-slot decode positions are incompatible "
+                                 "with kv_seq_shard (batch=1 long-context path)")
             seq_shard = (kv_seq_axis, S) if kv_seq_axis else None
             # reuse the generic writers via a dummy head axis
-            ckv = _write_decode(cache["ckv"][:, None], ckv_new[:, None], cur_pos,
-                                S, False, seq_shard)[:, 0]
-            krope = _write_decode(cache["krope"][:, None], krope_new[:, None],
-                                  cur_pos, S, False, seq_shard)[:, 0]
-            cpos = _write_pos(cache["pos"], cur_pos, S, False, seq_shard)
+            if batched:
+                ckv = _write_decode_batched(cache["ckv"][:, None],
+                                            ckv_new[:, None], cur_pos, S, False)[:, 0]
+                krope = _write_decode_batched(cache["krope"][:, None],
+                                              krope_new[:, None], cur_pos, S, False)[:, 0]
+                cpos = _write_pos_batched(cache["pos"], cur_pos, S, False)
+            else:
+                ckv = _write_decode(cache["ckv"][:, None], ckv_new[:, None], cur_pos,
+                                    S, False, seq_shard)[:, 0]
+                krope = _write_decode(cache["krope"][:, None], krope_new[:, None],
+                                      cur_pos, S, False, seq_shard)[:, 0]
+                cpos = _write_pos(cache["pos"], cur_pos, S, False, seq_shard)
         else:
             ckv, cpos = _write_prefill(cache["ckv"][:, None], ckv_new[:, None],
                                        positions, S, kv_seq_axis)
@@ -562,6 +637,8 @@ def mla_forward(
             krope, _ = _write_prefill(cache["krope"][:, None], krope_new[:, None],
                                       positions, S, kv_seq_axis)
             krope = krope[:, 0]
+            if cache["pos"].ndim == 2:
+                cpos = jnp.broadcast_to(cpos[None], (b, S))
         new_cache = {"ckv": ckv, "krope": krope, "pos": cpos}
         if decode:
             kv_src, krope_src, kv_pos = ckv, krope, cpos
@@ -583,8 +660,13 @@ def mla_forward(
         s_rope = jnp.einsum("bhse,bte->bhst", qr, krope_src,
                             preferred_element_type=jnp.float32)
         sc = (s_nope + s_rope) * scale                              # (b,h,1,t)
-        valid = (kv_pos >= 0) & (kv_pos <= cur_pos)
-        sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+        if cur_pos.ndim == 1:                  # per-slot positions: (b,S) mask
+            kvp = kv_pos if kv_pos.ndim == 2 else kv_pos[None, :]
+            valid = (kvp >= 0) & (kvp <= cur_pos[:, None])
+            sc = jnp.where(valid[:, None, None, :], sc, -jnp.inf)
+        else:
+            valid = (kv_pos >= 0) & (kv_pos <= cur_pos)
+            sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
         mx = sc.max(axis=-1)
         mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
         p = jnp.exp(sc - mx_safe[..., None])

@@ -202,6 +202,22 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     return out.astype(x.dtype)
 
 
+def conv_tail(ext: jax.Array, W: int, valid_len: Optional[jax.Array],
+              tail: jax.Array) -> jax.Array:
+    """Carried depthwise-conv history from the extended input ``ext``
+    (b, s+W-1, ch) = [old tail ; new inputs].
+
+    ``valid_len`` (b,) ends each row's tail at its own last REAL input
+    (right-padded admission prefill); rows where valid_len == s reduce to
+    the plain last-(W-1) slice."""
+    if W == 1:
+        return tail
+    if valid_len is not None:
+        idx = valid_len[:, None] + jnp.arange(W - 1, dtype=jnp.int32)[None, :]
+        return jnp.take_along_axis(ext, idx[..., None], axis=1)
+    return ext[:, -(W - 1):]
+
+
 def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
     """(q_len, kv_len) bool mask; q position i is at absolute q_offset + i."""
     qi = jnp.arange(q_len)[:, None] + q_offset

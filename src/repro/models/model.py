@@ -117,12 +117,13 @@ def forward(
     *,
     features: Optional[jax.Array] = None,   # (b_local, prefix, feat) stub output
     caches: Optional[Tuple] = None,
-    cur_pos: Optional[jax.Array] = None,    # scalar int32 (decode)
+    cur_pos: Optional[jax.Array] = None,    # int32 (decode): scalar, or (b,) per-slot
     kv_seq_axis: Optional[str] = None,
     seq_sharded: bool = False,
     last_only: bool = False,
     id_broadcast: Optional[bool] = None,
     skip_head: bool = False,
+    length_mask: Optional[jax.Array] = None,  # (b, s) bool, right-padded prefill
 ) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
     """-> (local logits, new_caches, aux_loss). Logits are vocab-sharded.
 
@@ -142,7 +143,9 @@ def forward(
 
     s_total = x.shape[1]
     if decode:
-        positions = cur_pos[None]
+        # per-slot decode (continuous batching): each row rotates/masks at
+        # its own position; shared decode keeps the (1,) broadcast form.
+        positions = cur_pos[:, None] if cur_pos.ndim == 1 else cur_pos[None]
     else:
         positions = jnp.arange(s_total, dtype=jnp.int32)
 
@@ -156,6 +159,7 @@ def forward(
             params["groups"][gi], x, positions, cfg, plan, dist, policy, g,
             caches=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
             use_pallas=ctx.parallel.use_pallas, remat=ctx.parallel.remat and not decode,
+            length_mask=length_mask,
         )
         aux = aux + a
         if new_caches is not None:
@@ -176,11 +180,12 @@ def lm_head_local(params, x, ctx: ModelCtx) -> jax.Array:
 
 
 def init_caches(ctx: ModelCtx, batch_local: int, cache_len: int,
-                *, kv_seq_shard_dp: int = 1) -> Tuple:
+                *, kv_seq_shard_dp: int = 1, batched_pos: bool = False) -> Tuple:
     groups = tfm.build_groups(ctx.cfg)
     return tuple(
         tfm.group_cache(ctx.cfg, ctx.plan, ctx.dist, g, batch_local, cache_len,
-                        kv_seq_shard_dp, quant=ctx.parallel.kv_quant)
+                        kv_seq_shard_dp, quant=ctx.parallel.kv_quant,
+                        batched_pos=batched_pos)
         for g in groups
     )
 

@@ -64,14 +64,16 @@ def init_rglru_state(cfg: ModelConfig, dist: Dist, batch_local: int) -> Dict[str
     }
 
 
-def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array],
+                 valid_len: Optional[jax.Array] = None):
+    from repro.models.common import conv_tail
+
     W = w.shape[0]
     if tail is None:
         tail = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
     ext = jnp.concatenate([tail, u], axis=1)
     out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
-    new_tail = ext[:, -(W - 1):] if W > 1 else tail
-    return out, new_tail
+    return out, conv_tail(ext, W, valid_len, tail)
 
 
 def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
@@ -91,13 +93,19 @@ def rglru_forward(
     *,
     state: Optional[Dict[str, jax.Array]] = None,
     use_pallas: bool = False,
+    length_mask: Optional[jax.Array] = None,   # (b, s) bool: True = real token
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
-    """Returns (UNREDUCED partial (b,s,d), new_state or None)."""
+    """Returns (UNREDUCED partial (b,s,d), new_state or None).
+
+    ``length_mask`` makes padding steps exact identities (a = 1, input term
+    0) so the carried recurrent state equals an unpadded per-row prefill."""
     c = cfg.rglru.c_constant
     gate = activation("gelu")(x_in @ params["w_gate"])   # (b,s,w_local)
     u = x_in @ params["w_x"]
     tail = state["conv"] if state is not None else None
-    u, new_tail = _causal_conv(u, params["conv_w"], tail)
+    valid_len = (length_mask.sum(-1).astype(jnp.int32)
+                 if length_mask is not None else None)
+    u, new_tail = _causal_conv(u, params["conv_w"], tail, valid_len)
 
     r = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"], params["gate_a_b"]))
     i = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"], params["gate_x_b"]))
@@ -105,6 +113,10 @@ def rglru_forward(
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
     bx = beta * i * u.astype(jnp.float32)                # (b,s,w_local)
+    if length_mask is not None:
+        lm = length_mask[..., None]
+        a = jnp.where(lm, a, 1.0)
+        bx = jnp.where(lm, bx, 0.0)
 
     h0 = state["h"] if state is not None else jnp.zeros(
         (x_in.shape[0], u.shape[-1]), jnp.float32

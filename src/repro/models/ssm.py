@@ -90,16 +90,22 @@ def _conv_weight_local(params, cfg: ModelConfig, dist: Dist):
     return jnp.concatenate([wx, w[:, d_in:]], axis=1)   # (W, loc + 2gn)
 
 
-def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+def _causal_conv(u: jax.Array, w: jax.Array, tail: Optional[jax.Array],
+                 valid_len: Optional[jax.Array] = None):
     """u (b,s,ch), w (W,ch) depthwise; tail (b,W-1,ch) carries history.
 
+    ``valid_len`` (b,) makes the carried tail end at each row's own last REAL
+    input (right-padded admission prefill) instead of the padded end.
+
     Returns (silu(conv(u)) (b,s,ch), new_tail)."""
+    from repro.models.common import conv_tail
+
     W = w.shape[0]
     if tail is None:
         tail = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
     ext = jnp.concatenate([tail, u], axis=1)            # (b, s+W-1, ch)
     out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
-    new_tail = ext[:, -(W - 1):] if W > 1 else tail
+    new_tail = conv_tail(ext, W, valid_len, tail)
     return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_tail
 
 
@@ -128,8 +134,14 @@ def ssd_forward(
     dist: Dist,
     *,
     state: Optional[Dict[str, jax.Array]] = None,
+    length_mask: Optional[jax.Array] = None,   # (b, s) bool: True = real token
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
-    """Returns (UNREDUCED partial (b,s,d), new_state or None)."""
+    """Returns (UNREDUCED partial (b,s,d), new_state or None).
+
+    ``length_mask`` (right-padded admission prefill) turns padding steps into
+    exact identity updates — dt is zeroed there, so a = exp(0·A) = 1 and the
+    input contribution dt·x vanishes; the conv tail ends at each row's true
+    length.  The carried state then matches an unpadded per-row prefill."""
     s_cfg = cfg.ssm
     b, s, d = x_in.shape
     d_in, n_heads, local_h = _dims(cfg, dist.tp)
@@ -143,13 +155,17 @@ def ssd_forward(
     conv_in = jnp.concatenate([xr, bc], axis=-1)
     w_conv = _conv_weight_local(params, cfg, dist)
     tail = state["conv"] if state is not None else None
-    conv_out, new_tail = _causal_conv(conv_in, w_conv, tail)
+    valid_len = (length_mask.sum(-1).astype(jnp.int32)
+                 if length_mask is not None else None)
+    conv_out, new_tail = _causal_conv(conv_in, w_conv, tail, valid_len)
     loc = xr.shape[-1]
     xr = conv_out[..., :loc]
     Bm, Cm = jnp.split(conv_out[..., loc:], 2, axis=-1)  # (b,s,gn) each
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     dt = jnp.clip(dt, s_cfg.dt_min, 10.0)                # (b,s,local_h)
+    if length_mask is not None:
+        dt = jnp.where(length_mask[..., None], dt, 0.0)
     A = -jnp.exp(params["A_log"].astype(jnp.float32))    # (local_h,) negative
     log_a = dt * A                                       # (b,s,local_h)
     xh = xr.reshape(b, s, local_h, P_dim).astype(jnp.float32)

@@ -141,12 +141,13 @@ def sub_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, sub: SubLayer,
 
 def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
                 batch_local: int, cache_len_local: int,
-                kv_seq_shard_dp: int = 1, quant: bool = False) -> Dict[str, Any]:
+                kv_seq_shard_dp: int = 1, quant: bool = False,
+                batched_pos: bool = False) -> Dict[str, Any]:
     def one(sub: SubLayer):
         if sub.kind in ATTN_KINDS:
             clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, kv_seq_shard_dp)
             return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
-                                   quant=quant)
+                                   quant=quant, batched_pos=batched_pos)
         return sub_cache(cfg, plan, dist, sub, batch_local, cache_len_local)
 
     caches = {f"sub{i}": one(s) for i, s in enumerate(g.subs)}
@@ -163,8 +164,10 @@ def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
 
 
 def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
-                   cur_pos, kv_seq_axis, use_pallas):
+                   cur_pos, kv_seq_axis, use_pallas, length_mask=None):
     if sub.kind in ATTN_KINDS:
+        # attention needs no length mask: padded K/V entries are dead by
+        # position masking (pos = -1) in the cache
         if cfg.mla is not None:
             return attn.mla_forward(
                 p, xa, positions, cfg, plan, dist, cache=cache, cur_pos=cur_pos,
@@ -175,10 +178,12 @@ def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
             cur_pos=cur_pos, kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
         )
     if sub.kind == "ssd":
-        return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache)
+        return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache,
+                                   length_mask=length_mask)
     if sub.kind == "rglru":
         return rglru_mod.rglru_forward(p, xa, cfg, dist, state=cache,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       length_mask=length_mask)
     raise ValueError(sub.kind)
 
 
@@ -196,6 +201,7 @@ def sublayer_forward(
     cur_pos=None,
     kv_seq_axis=None,
     use_pallas=False,
+    length_mask=None,
 ):
     """-> (x', new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -205,7 +211,7 @@ def sublayer_forward(
         # paper §2.2: attention + FFN read the same normed input
         attn_p, new_cache = _mixer_forward(
             p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-            kv_seq_axis, use_pallas,
+            kv_seq_axis, use_pallas, length_mask,
         )
         ffn_p = mlp_mod.mlp_forward(p["ffn"], xa, cfg)
         if policy.one_shot:
@@ -217,7 +223,7 @@ def sublayer_forward(
 
     mix_p, new_cache = _mixer_forward(
         p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-        kv_seq_axis, use_pallas,
+        kv_seq_axis, use_pallas, length_mask,
     )
     x = x + policy.reduce_out(mix_p, tag="mixer_reduce")
     if sub.has_ffn:
@@ -245,6 +251,7 @@ def group_forward(
     kv_seq_axis=None,
     use_pallas=False,
     remat=False,
+    length_mask=None,
 ):
     """-> (x', new_caches, aux)."""
 
@@ -255,7 +262,7 @@ def group_forward(
             x, c_new, a = sublayer_forward(
                 p_layer[f"sub{i}"], x, positions, cfg, plan, dist, policy, sub,
                 cache=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
-                use_pallas=use_pallas,
+                use_pallas=use_pallas, length_mask=length_mask,
             )
             if c_new is not None:
                 new_caches[f"sub{i}"] = c_new

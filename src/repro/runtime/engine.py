@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ParallelConfig, SamplingConfig
 from repro.models import model as M
 from repro.runtime import kvcache
@@ -71,6 +72,95 @@ def make_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
     return decode_step
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching (slot engine)
+#
+# The wave model above decodes a whole batch at one shared ``cur_pos``.  The
+# slot engine instead runs a fixed-capacity batch where every row is an
+# independent *slot* at its own position ``pos[b]``: finished/empty slots are
+# masked inside the jitted step, and new requests are admitted in-flight by
+# prefilling into free slots of the live cache — no batch restart, no
+# recompile (prompt lengths are bucketed by the scheduler).
+# ---------------------------------------------------------------------------
+
+
+def make_slot_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig):
+    """Per-shard in-flight admission step.
+
+    (params, tokens (b,Lp), caches, admit (b,) bool, plens (b,), rng)
+      -> (tok (b,), caches)
+
+    Runs a full-width prefill over the padded token batch, then merges ONLY
+    the admitted slots back into the live cache; un-admitted rows keep their
+    cache/state bit-for-bit (their forward results are discarded).  Each
+    admitted slot samples its first token from its own last *real* prompt
+    position (padding never conditions the sample — per-request semantics are
+    identical to running the request alone)."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+
+    def prefill_slots(params, tokens, caches, admit, plens, rng):
+        # fresh requests integrate recurrent state from t=0 and must not see
+        # stale positions, so their slots reset before the forward
+        caches_r = kvcache.reset_slots(caches, groups, admit)
+        lmask = (jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+                 < plens[:, None])                              # (b, Lp)
+        hidden, new_caches, _ = M.forward(
+            params, tokens, ctx, caches=caches_r, last_only=False,
+            skip_head=True, seq_sharded=True, length_mask=lmask,
+        )
+        idx = jnp.clip(plens - 1, 0, tokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = M.lm_head_local(params, h_last, ctx)
+        tok = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        new_caches = kvcache.mask_prompt_padding(new_caches, groups, plens)
+        merged = kvcache.merge_slots(caches, new_caches, groups, admit)
+        return tok, merged
+
+    return prefill_slots
+
+
+def make_slot_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
+    """Per-shard masked decode step with per-slot positions.
+
+    (params, tok, caches, pos, done, remaining, eos, rng)
+      -> (nxt, caches, pos', done', remaining')
+
+    ``pos`` (b,) is the cache index the incoming token is written at (== its
+    absolute position); done/remaining implement per-slot stopping (eos or
+    budget) INSIDE the program, so a fused multi-step scan never overruns a
+    slot: finished rows freeze their token/position and their (harmless,
+    row-local) cache write lands at the frozen index."""
+
+    def slot_decode(params, tok, caches, pos, done, remaining, eos, rng):
+        tokens = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+        logits, caches, _ = M.forward(
+            params, tokens, ctx, caches=caches, cur_pos=pos,
+            kv_seq_axis=None, last_only=True, seq_sharded=False,
+        )
+        nxt = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        active = (~done) & (remaining > 0)
+        amask = active if nxt.ndim == 1 else active[:, None]
+        nxt = jnp.where(amask, nxt, tok)
+        new_pos = jnp.where(active, pos + 1, pos)
+        flat = nxt if nxt.ndim == 1 else nxt[..., 0]
+        hit_eos = active & (eos >= 0) & (flat == eos)
+        new_remaining = jnp.where(active, remaining - 1, remaining)
+        new_done = done | hit_eos | (new_remaining <= 0)
+        return nxt, caches, new_pos, new_done, new_remaining
+
+    return slot_decode
+
+
 @dataclass
 class Engine:
     """Host-side serving engine over a local (or production) mesh."""
@@ -104,7 +194,7 @@ class Engine:
     def _build(self):
         pspecs = M.param_specs(self.ctx)
         batch_spec, tok2, tok1, feat, cache_spec = self._specs()
-        sm = partial(jax.shard_map, mesh=self.mesh, check_vma=False)
+        sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
 
         pre = make_prefill_step(self.ctx, self.sampling)
         if self.cfg.frontend is None:
@@ -153,21 +243,111 @@ class Engine:
             for n in (8, 16, 32)
         }
 
+    # -- continuous batching (slot engine) --------------------------------
+    def _cb(self):
+        """Lazily-built slot-engine programs (prefill_into_slots + fused
+        masked decode).  Separate from the wave programs so wave-only users
+        pay no extra compile time."""
+        if getattr(self, "_cb_built", None) is None:
+            if self.cfg.frontend is not None:
+                raise NotImplementedError(
+                    "slot engine does not support frontend features yet")
+            if self.parallel.kv_seq_shard:
+                raise ValueError("slot engine is incompatible with kv_seq_shard")
+            pspecs = M.param_specs(self.ctx)
+            batch_spec, tok2, tok1, _, _ = self._specs()
+            cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                         batched_pos=True)
+            sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+            slot = P(*batch_spec)
+            donate = (2,) if self.parallel.zero_copy else ()
+
+            pre = make_slot_prefill_step(self.ctx, self.sampling)
+            prefill = jax.jit(
+                sm(pre, in_specs=(pspecs, tok2, cspec, slot, slot, P()),
+                   out_specs=(tok1, cspec)),
+                donate_argnums=donate,
+            )
+
+            dec = make_slot_decode_step(self.ctx, self.sampling)
+
+            def decode_n(params, tok, caches, pos, done, remaining, eos, rng, *, n):
+                def body(carry, i):
+                    tok, caches, pos, done, remaining = carry
+                    nxt, caches, pos, done, remaining = dec(
+                        params, tok, caches, pos, done, remaining, eos,
+                        jax.random.fold_in(rng, i))
+                    return (nxt, caches, pos, done, remaining), nxt
+
+                (tok, caches, pos, done, remaining), toks = jax.lax.scan(
+                    body, (tok, caches, pos, done, remaining),
+                    jnp.arange(n, dtype=jnp.int32))
+                return toks, caches, pos, done, remaining
+
+            tokn = P(None, *tuple(tok1))
+
+            def build_decode(n):
+                return jax.jit(
+                    sm(partial(decode_n, n=n),
+                       in_specs=(pspecs, tok1, cspec, slot, slot, slot, slot, P()),
+                       out_specs=(tokn, cspec, slot, slot, slot)),
+                    donate_argnums=donate,
+                )
+
+            self._cb_built = {"prefill": prefill, "decode": {},
+                              "build_decode": build_decode}
+        return self._cb_built
+
+    def init_slot_caches(self, n_slots: int):
+        dp_total = self.ctx.dist.dp * self.ctx.dist.pods
+        if n_slots % dp_total:
+            raise ValueError(f"n_slots {n_slots} must divide dp*pods {dp_total}")
+        return self.init_caches(n_slots, batched_pos=True)
+
+    def prefill_into_slots(self, caches, tokens, admit, plens, rng):
+        """Admit requests in-flight: prefill ``tokens`` (B, Lp[, ncb]) into
+        the slots flagged by ``admit`` (B,) of a LIVE cache; other slots are
+        untouched.  Returns (first sampled token (B,[ncb]), caches).
+
+        jit retraces per distinct Lp — callers bucket prompt lengths (the
+        scheduler pads to powers of two) to bound compilation."""
+        cb = self._cb()
+        return cb["prefill"](
+            self.params, jnp.asarray(tokens), caches,
+            jnp.asarray(admit, bool), jnp.asarray(plens, jnp.int32), rng)
+
+    def decode_slots(self, caches, tok, pos, done, remaining, eos, rng, *, n=1):
+        """Run ``n`` fused masked decode steps over all slots.
+
+        Returns (toks (n, B[, ncb]), caches, pos, done, remaining)."""
+        cb = self._cb()
+        if n not in cb["decode"]:
+            cb["decode"][n] = cb["build_decode"](n)
+        return cb["decode"][n](
+            self.params, tok, caches, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
+            jnp.asarray(eos, jnp.int32), rng)
+
     # -- API ------------------------------------------------------------
-    def init_caches(self, batch: int):
+    def init_caches(self, batch: int, *, batched_pos: bool = False):
         """Create the cache pytree as properly-sharded global arrays: each
         shard builds its LOCAL buffers inside shard_map and the runtime
         assembles the global arrays per the cache specs."""
         dp_total = self.ctx.dist.dp * self.ctx.dist.pods
         if self.parallel.kv_seq_shard:
+            if batched_pos:
+                raise ValueError("continuous batching (batched_pos) is "
+                                 "incompatible with kv_seq_shard")
             b_local, kv_dp = batch, self.ctx.dist.dp
         else:
             b_local, kv_dp = batch // dp_total, 1
         cspecs = kvcache.cache_pspecs(self.ctx,
-                                      kv_seq_shard=self.parallel.kv_seq_shard)
-        make = jax.jit(jax.shard_map(
+                                      kv_seq_shard=self.parallel.kv_seq_shard,
+                                      batched_pos=batched_pos)
+        make = jax.jit(compat.shard_map(
             lambda: M.init_caches(self.ctx, b_local, self.max_len,
-                                  kv_seq_shard_dp=kv_dp),
+                                  kv_seq_shard_dp=kv_dp,
+                                  batched_pos=batched_pos),
             mesh=self.mesh, in_specs=(), out_specs=cspecs, check_vma=False,
         ))
         return make()

@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import model as M
@@ -43,7 +44,8 @@ def _leaf_spec(key: str, ndim: int, dist, kv_seq_shard: bool, stacked: bool,
     elif key in ("ckv", "krope"):
         spec = (d, seq, None)
     elif key == "pos":
-        spec = (seq,)
+        # (S,) shared positions, or (b, S) per-slot (continuous batching)
+        spec = (seq,) if ndim == 1 else (d, seq)
     elif key == "h":                       # recurrent state: always batch-major
         spec = (d, m, None, None)[:ndim]
     elif key == "conv":
@@ -56,11 +58,14 @@ def _leaf_spec(key: str, ndim: int, dist, kv_seq_shard: bool, stacked: bool,
 
 
 def cache_pspecs(ctx: M.ModelCtx, *, kv_seq_shard: bool = False,
-                 replicate_batch: bool = False) -> Tuple:
+                 replicate_batch: bool = False,
+                 batched_pos: bool = False) -> Tuple:
     """Spec tree matching ``init_caches`` exactly (same treedef)."""
     groups = tfm.build_groups(ctx.cfg)
     # build a template (tiny batch) to mirror structure + ndims
-    template = jax.eval_shape(lambda: M.init_caches(ctx, 1, 2, kv_seq_shard_dp=1))
+    template = jax.eval_shape(
+        lambda: M.init_caches(ctx, 1, 2, kv_seq_shard_dp=1,
+                              batched_pos=batched_pos))
     out = []
     for g, gc in zip(groups, template):
         stacked = g.n > 1
@@ -88,3 +93,86 @@ def cache_shapes(ctx: M.ModelCtx, batch_local: int, cache_len: int,
                               kv_seq_shard_dp=kv_seq_shard_dp)
     )
     return local
+
+
+# ---------------------------------------------------------------------------
+# Slot-level utilities (continuous batching)
+#
+# Caches built with ``batched_pos=True`` treat every batch row as an
+# independent *slot*: a request occupies one row, its per-slot position
+# array masks validity, and recurrent state lives in the same row.  The
+# helpers below operate on whole slots inside a jitted program: reset before
+# an in-flight admission, mask prompt padding out of the position arrays,
+# and merge freshly-prefilled slots into a live cache.
+# ---------------------------------------------------------------------------
+
+
+def _map_by_key(caches: Tuple, groups, fn) -> Tuple:
+    """Apply ``fn(key, leaf, stacked)`` to every leaf, keyed by cache name."""
+
+    def walk(subtree, stacked):
+        return {
+            k: walk(v, stacked) if isinstance(v, dict) else fn(k, v, stacked)
+            for k, v in subtree.items()
+        }
+
+    return tuple(walk(gc, g.n > 1) for g, gc in zip(groups, caches))
+
+
+def _expand_over(mask, leaf, stacked):
+    """Broadcast a (b,) mask against the leaf's batch axis (1 if stacked)."""
+    ax = 1 if stacked else 0
+    shape = (1,) * ax + (mask.shape[0],) + (1,) * (leaf.ndim - ax - 1)
+    return mask.reshape(shape)
+
+
+def reset_slots(caches: Tuple, groups, mask: jax.Array) -> Tuple:
+    """Clear the slots selected by ``mask`` (b,) bool for a fresh request.
+
+    Positions go to -1 (masking every stale K/V entry without touching the
+    K/V bytes) and recurrent state (SSM h, LRU h, conv tails) zeroes, since
+    prefill integrates state from t=0.  K/V payloads stay: they are dead by
+    position masking and get overwritten as the new request progresses."""
+
+    def f(key, leaf, stacked):
+        if key == "pos":
+            if leaf.ndim - (1 if stacked else 0) != 2:
+                raise ValueError("reset_slots needs batched_pos caches")
+            return jnp.where(_expand_over(mask, leaf, stacked), -1, leaf)
+        if key in ("h", "conv"):
+            return jnp.where(_expand_over(mask, leaf, stacked),
+                             jnp.zeros((), leaf.dtype), leaf)
+        return leaf
+
+    return _map_by_key(caches, groups, f)
+
+
+def mask_prompt_padding(caches: Tuple, groups, plens: jax.Array) -> Tuple:
+    """Invalidate position entries at/after each slot's true prompt length.
+
+    Admission prefills a whole (b, Lp) padded batch; K/V written for padding
+    tokens must never be attended, so their pos entries drop to -1.  Decode
+    then overwrites index plen, plen+1, ... with real generated tokens."""
+
+    def f(key, leaf, stacked):
+        if key != "pos":
+            return leaf
+        S = leaf.shape[-1]
+        idx = jnp.arange(S, dtype=jnp.int32)
+        keep = idx[None, :] < plens[:, None]                 # (b, S)
+        if stacked:
+            keep = keep[None]
+        return jnp.where(keep, leaf, -1)
+
+    return _map_by_key(caches, groups, f)
+
+
+def merge_slots(old: Tuple, new: Tuple, groups, mask: jax.Array) -> Tuple:
+    """Per-slot select: rows where ``mask`` is True come from ``new``."""
+
+    def walk(o, n, stacked):
+        if isinstance(o, dict):
+            return {k: walk(o[k], n[k], stacked) for k in o}
+        return jnp.where(_expand_over(mask, o, stacked), n, o)
+
+    return tuple(walk(go, gn, g.n > 1) for g, go, gn in zip(groups, old, new))

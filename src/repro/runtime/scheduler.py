@@ -1,21 +1,36 @@
-"""Batch-wave request scheduler (continuous-batching lite).
+"""Request schedulers over the serving engine.
 
-Requests queue up; the scheduler forms *waves* of up to ``batch_size``
-requests with a shared (padded) prompt length, runs prefill once and decodes
-until every request in the wave reaches its ``max_new`` (per-request early
-stop on ``eos_id``).  Decode positions stay batch-aligned, which keeps the
-decode step a single shared-``cur_pos`` program — the same simplification
-real engines make per "generation group".  Slot-level stats (queue time,
-tokens/s) are recorded per request.
+Two serving cores share one request/stats vocabulary:
+
+``WaveScheduler`` (baseline) — drain-and-restart: forms *waves* of up to
+``batch_size`` requests with a shared (padded) prompt length, runs prefill
+once and decodes every request to the wave's max ``max_new``.  One straggler
+holds the whole wave and finished rows burn full decode FLOPs.
+
+``ContinuousScheduler`` (slot engine) — a fixed-capacity batch of *slots*
+with an admit → step → retire loop: decode runs with a per-slot position
+vector, finished/empty slots are masked inside the jitted step, and new
+requests are admitted **in-flight** by prefilling into free slots of the
+live cache — no batch restart, no recompile (prompt lengths bucket to powers
+of two).  This closes the batch-utilization gap that arXiv 2407.07304 / the
+LIMINAL analysis identify as the dominant decode-throughput lever once
+per-token sync cost is minimized.
+
+Arrivals are measured on a virtual clock of *decode steps* so schedules are
+deterministic and testable: a request with ``arrival_step=s`` becomes
+admissible once ``s`` decode steps have executed.  ``WaveScheduler`` ignores
+arrivals (it drains whatever is queued) — it is the pessimistic baseline.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
+import jax
 import numpy as np
 
+from repro.models.common import pad_to
 from repro.runtime.engine import Engine
 
 
@@ -25,6 +40,7 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) or (prompt_len, ncb)
     max_new: int
     eos_id: Optional[int] = None
+    arrival_step: int = 0         # virtual-clock arrival (decode steps)
     submitted_at: float = field(default_factory=time.monotonic)
     output: Optional[np.ndarray] = None
     stats: Dict = field(default_factory=dict)
@@ -40,10 +56,11 @@ class WaveScheduler:
         self._next_id = 0
 
     def submit(self, prompt: np.ndarray, max_new: int,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, np.asarray(prompt), max_new, eos_id))
+        self.queue.append(Request(rid, np.asarray(prompt), max_new, eos_id,
+                                  arrival_step))
         return rid
 
     def _form_wave(self) -> List[Request]:
@@ -59,7 +76,11 @@ class WaveScheduler:
         return self.done
 
     def _run_wave(self, wave: List[Request]) -> None:
-        b = self.batch_size
+        # honest tail sizing: a partial last wave only pays for the rows it
+        # needs, padded up to data-parallel divisibility (generate shards the
+        # batch over dp), not up to the full configured batch_size
+        dp_total = self.engine.ctx.dist.dp * self.engine.ctx.dist.pods
+        b = pad_to(max(len(wave), 1), dp_total)
         plen = max(len(r.prompt) for r in wave)
         max_new = max(r.max_new for r in wave)
         ncb = self.engine.cfg.n_codebooks
@@ -71,6 +92,7 @@ class WaveScheduler:
         t0 = time.monotonic()
         out = self.engine.generate(prompts, max_new)       # (b, max_new[, ncb])
         dt = time.monotonic() - t0
+        cut = []
         for i, r in enumerate(wave):
             toks = out[i, : r.max_new]
             if r.eos_id is not None:
@@ -78,11 +100,256 @@ class WaveScheduler:
                 hits = np.nonzero(flat == r.eos_id)[0]
                 if hits.size:
                     toks = toks[: hits[0] + 1]
+            cut.append(toks)
+        # throughput from tokens actually delivered: EOS-cut, per-request
+        # max_new — NOT the padded wave_b * wave_max_new the step loop ran
+        emitted = sum(len(t) for t in cut)
+        for r, toks in zip(wave, cut):
             r.output = toks
             r.stats = {
                 "wave_batch": len(wave),
                 "queue_s": t0 - r.submitted_at,
                 "wave_s": dt,
-                "tok_per_s": max_new * len(wave) / dt if dt > 0 else float("inf"),
+                "emitted": len(toks),
+                "tok_per_s": emitted / dt if dt > 0 else float("inf"),
             }
             self.done.append(r)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    toks: List = field(default_factory=list)
+    admitted_step: int = 0
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batching over ``Engine``'s slot programs.
+
+    The loop per iteration: retire finished slots, admit arrived requests
+    into free slots (one bucketed in-flight prefill), then run a fused block
+    of up to ``block_steps`` masked decode steps.  Per-request streaming is
+    available via ``on_token(rid, token)``.
+    """
+
+    def __init__(self, engine: Engine, n_slots: int, pad_id: int = 0,
+                 block_steps: int = 8, min_bucket: int = 8,
+                 responsive_blocks: bool = False,
+                 on_token: Optional[Callable[[int, int], None]] = None):
+        if engine.cfg.n_codebooks != 1:
+            raise NotImplementedError(
+                "ContinuousScheduler serves single-codebook archs "
+                "(multi-codebook stays on WaveScheduler for now)")
+        self.engine = engine
+        self.B = n_slots
+        self.pad_id = pad_id
+        self.block_steps = block_steps
+        self.min_bucket = min_bucket
+        self.responsive_blocks = responsive_blocks
+        self.on_token = on_token
+        # Admission prefill right-pads prompts to a power-of-two bucket.  A
+        # sliding-window (local_attn) ring cache keeps only the LAST S
+        # tokens of that padded batch, so padding past the window would push
+        # real prompt history out of the ring (and the slot-index pad mask
+        # cannot repair a ring layout).  Cap prompts and buckets at the
+        # window cache length so admission always takes the slot==position
+        # write path.
+        cfg = engine.cfg
+        self.prompt_limit = engine.max_len
+        if cfg.window and "local_attn" in cfg.layer_pattern:
+            self.prompt_limit = min(self.prompt_limit, cfg.window)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._next_id = 0
+        self._rng = jax.random.key(engine.seed + 17)
+        self._calls = 0
+        self.caches = None
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.step_count = 0               # virtual clock: decode steps so far
+        self.tok = np.zeros((n_slots,), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.dones = np.ones((n_slots,), bool)
+        self.remaining = np.zeros((n_slots,), np.int32)
+        self.eos = np.full((n_slots,), -1, np.int32)
+        self.stats = {
+            "decode_steps": 0, "slot_steps": 0, "active_slot_steps": 0,
+            "emitted": 0, "admission_rounds": 0, "in_flight_admissions": 0,
+            "prefill_calls": 0,
+        }
+
+    # -- submission -------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
+        prompt = np.asarray(prompt)
+        if len(prompt) + max_new > self.engine.max_len:
+            raise ValueError(
+                f"request needs {len(prompt)}+{max_new} positions > "
+                f"max_len {self.engine.max_len}")
+        if len(prompt) > self.prompt_limit:
+            raise ValueError(
+                f"prompt len {len(prompt)} exceeds the sliding-window cache "
+                f"({self.prompt_limit}); longer-than-window prompts are not "
+                f"admissible in-flight yet — use WaveScheduler")
+        if len(prompt) < 2:
+            raise ValueError("prompts must have >= 2 tokens")
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, prompt, max_new, eos_id, arrival_step))
+        return rid
+
+    # -- internals --------------------------------------------------------
+    def _next_rng(self):
+        self._calls += 1
+        return jax.random.fold_in(self._rng, self._calls)
+
+    def _retire(self) -> None:
+        now = time.monotonic()
+        for i, s in enumerate(self.slots):
+            if s.req is not None and self.dones[i]:
+                r = s.req
+                r.output = np.asarray(s.toks, dtype=np.int32)
+                r.stats.update({
+                    "emitted": len(s.toks),
+                    "finished_at": now,
+                    "decode_steps_held": self.step_count - s.admitted_step,
+                })
+                self.done.append(r)
+                self.slots[i] = _Slot()
+
+    def _bucket(self, plen: int) -> int:
+        b = self.min_bucket
+        while b < plen:
+            b *= 2
+        return min(b, self.prompt_limit)
+
+    def _admit(self) -> int:
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
+        if not free or not arrived:
+            return 0
+        chosen = arrived[: len(free)]
+        for r in chosen:
+            self.queue.remove(r)
+        in_flight = any(s.req is not None and not self.dones[i]
+                        for i, s in enumerate(self.slots))
+        Lp = self._bucket(max(len(r.prompt) for r in chosen))
+        tokens = np.full((self.B, Lp), self.pad_id, np.int32)
+        admit = np.zeros((self.B,), bool)
+        plens = np.ones((self.B,), np.int32)
+        now = time.monotonic()
+        for slot, r in zip(free, chosen):
+            tokens[slot, : len(r.prompt)] = r.prompt
+            admit[slot] = True
+            plens[slot] = len(r.prompt)
+            self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
+            r.stats["queue_s"] = now - r.submitted_at
+            r.stats["admitted_step"] = self.step_count
+        new_tok, self.caches = self.engine.prefill_into_slots(
+            self.caches, tokens, admit, plens, self._next_rng())
+        new_tok = np.array(new_tok)
+        self.tok = np.where(admit, new_tok, self.tok)
+        for slot, r in zip(free, chosen):
+            t = int(new_tok[slot])
+            self.slots[slot].toks.append(t)
+            if self.on_token is not None:
+                self.on_token(r.rid, t)
+            self.pos[slot] = len(r.prompt)
+            self.remaining[slot] = r.max_new - 1
+            self.eos[slot] = -1 if r.eos_id is None else r.eos_id
+            self.dones[slot] = (r.max_new <= 1) or (
+                r.eos_id is not None and t == r.eos_id)
+            r.stats["ttft_s"] = time.monotonic() - r.submitted_at
+            self.stats["emitted"] += 1
+        self.stats["admission_rounds"] += 1
+        self.stats["prefill_calls"] += 1
+        if in_flight:
+            self.stats["in_flight_admissions"] += len(chosen)
+        return len(chosen)
+
+    def _decode_block(self, n: int) -> None:
+        toks, self.caches, pos, done, remaining = self.engine.decode_slots(
+            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.eos, self._next_rng(), n=n)
+        toks = np.asarray(toks)                              # (n, B)
+        # replay the device's masking rule to tell real emissions from
+        # frozen-slot repeats; final state must agree with the device's
+        cur_done = self.dones.copy()
+        cur_rem = self.remaining.copy()
+        for s in range(n):
+            for i, slot in enumerate(self.slots):
+                if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
+                    continue
+                t = int(toks[s, i])
+                slot.toks.append(t)
+                if self.on_token is not None:
+                    self.on_token(slot.req.rid, t)
+                cur_rem[i] -= 1
+                if cur_rem[i] == 0 or (self.eos[i] >= 0 and t == self.eos[i]):
+                    cur_done[i] = True
+                self.stats["emitted"] += 1
+                self.stats["active_slot_steps"] += 1
+        self.tok = toks[-1].copy()
+        self.pos = np.array(pos)
+        self.dones = np.array(done)
+        self.remaining = np.array(remaining)
+        self.step_count += n
+        self.stats["decode_steps"] += n
+        self.stats["slot_steps"] += n * self.B
+
+    def _block_size(self) -> int:
+        """Fused block size in {1,2,4,...,block_steps}.
+
+        A slot that finishes inside a fused block burns masked steps until
+        the block ends: nearly free compute (the batch width is fixed), but
+        the freed slot cannot be refilled until the next host turn.  Two
+        policies, measured head-to-head on the straggler bench:
+
+        * amortizing (default): stretch to the LONGEST active budget —
+          fewest host dispatches; admission waits at most block_steps.
+          Wins wall-clock when per-step compute is cheap relative to
+          dispatch (this CPU container: 1.6x vs 1.4x over the wave
+          baseline).
+        * responsive (``responsive_blocks=True``): while arrived requests
+          wait, bound by the SHORTEST budget (floored at block_steps/4 to
+          cap dispatch thrash) so finished slots refill immediately —
+          fewer total decode steps and higher slot utilization (84% vs
+          77%, 149 vs 163 steps on the bench); wins when a decode step
+          dominates dispatch, i.e. real model scale."""
+        active = self.remaining[(~self.dones) & (self.remaining > 0)]
+        if active.size == 0:
+            return 0
+        waiting = any(r.arrival_step <= self.step_count for r in self.queue)
+        if self.responsive_blocks and waiting:
+            need = max(int(active.min()), max(1, self.block_steps // 4))
+        else:
+            need = int(active.max())
+        n = 1
+        while n * 2 <= min(self.block_steps, need):
+            n *= 2
+        return n
+
+    # -- main loop --------------------------------------------------------
+    def run(self) -> List[Request]:
+        """Serve until queue and slots drain; returns requests in completion
+        order."""
+        if self.caches is None:
+            self.caches = self.engine.init_slot_caches(self.B)
+        while True:
+            self._retire()
+            self._admit()
+            n = self._block_size()
+            if n == 0:
+                pending = [r.arrival_step for r in self.queue]
+                if not pending:
+                    break
+                # idle: jump the virtual clock to the next arrival
+                self.step_count = max(self.step_count, min(pending))
+                continue
+            self._decode_block(n)
+        self._retire()
+        return self.done

@@ -11,17 +11,18 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def run_sharded(mesh, fn, in_specs, out_specs, *args):
     import functools
 
     return jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        compat.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_vma=False)
     )(*args)

@@ -15,14 +15,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.models import model as M
 from repro.models.common import Dist, ShardPlan, specs_of
 
 
 def _mesh(dp, tp):
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((dp, tp), ("data", "model"))
 
 
 def _fp32(tree):
@@ -39,7 +40,7 @@ def _forward_logits(cfg, dp, tp, tokens, seq_sharded=True):
         lg, _, _ = M.forward(params, tokens, ctx, seq_sharded=seq_sharded)
         return lg
 
-    f = jax.jit(jax.shard_map(step, mesh=mesh,
+    f = jax.jit(compat.shard_map(step, mesh=mesh,
                               in_specs=(M.param_specs(ctx), P("data", None)),
                               out_specs=P("data", None, "model"), check_vma=False))
     return np.asarray(f(params, tokens), np.float32)
@@ -77,7 +78,7 @@ def check_train_grads():
         pspecs = M.param_specs(ctx)
         ospecs = {"m": pspecs, "v": pspecs, "step": P()}
         step_fn = make_train_step(ctx, opt_cfg)
-        jstep = jax.jit(jax.shard_map(
+        jstep = jax.jit(compat.shard_map(
             step_fn, mesh=_mesh(dp, tp),
             in_specs=(pspecs, ospecs,
                       {"tokens": P("data", None), "labels": P("data", None)}),
@@ -117,7 +118,7 @@ def check_zero1_multidev():
             opt = init_opt_state(params)
             ospecs = {"m": pspecs, "v": pspecs, "step": P()}
         step_fn = make_train_step(ctx, opt_cfg, zero1=zero1)
-        jstep = jax.jit(jax.shard_map(
+        jstep = jax.jit(compat.shard_map(
             step_fn, mesh=_mesh(dp, tp),
             in_specs=(pspecs, ospecs,
                       {"tokens": P("data", None), "labels": P("data", None)}),
@@ -145,8 +146,7 @@ def check_topk_sync():
     tp = 8
     plan = ShardPlan.make(cfg, tp)
     dist = Dist(tp=tp, dp=1)
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 8), ("data", "model"))
     logits = jax.random.normal(jax.random.key(0), (4, 4096))
     rng = jax.random.key(7)
     sc = SamplingConfig(top_k=16, greedy=False)
@@ -157,7 +157,7 @@ def check_topk_sync():
             return sample(lg, rng, sc, plan, dist, topk_sync=mode)
 
         with cc.comm_stats() as stats:
-            jf = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P()),
+            jf = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P()),
                                        out_specs=P(), check_vma=False))
             t = jf(logits, rng)
         toks[mode] = np.asarray(t)
@@ -187,7 +187,7 @@ def check_one_shot_sync():
             return lg
 
         with cc.comm_stats() as stats:
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(compat.shard_map(
                 step, mesh=mesh, in_specs=(M.param_specs(ctx), P("data", None)),
                 out_specs=P("data", None, "model"), check_vma=False))
             outs[one_shot] = np.asarray(f(params, tokens), np.float32)
@@ -221,7 +221,7 @@ def check_kv_seq_shard():
                                  cur_pos=jnp.int32(16), kv_seq_axis=kv_ax)
             return lg[:, -1]
 
-        f = jax.jit(jax.shard_map(step, mesh=mesh,
+        f = jax.jit(compat.shard_map(step, mesh=mesh,
                                   in_specs=(M.param_specs(ctx), P(None, None)),
                                   out_specs=P(None, "model"), check_vma=False))
         outs[kv_shard] = np.asarray(f(params, tokens), np.float32)
@@ -242,8 +242,7 @@ def check_embed_modes():
     tp = 8
     plan = ShardPlan.make(cfg, tp)
     dist = Dist(tp=tp, dp=1)
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 8), ("data", "model"))
     from repro.models.common import materialize
 
     defs = E.embed_defs(cfg, plan, dist)
@@ -255,7 +254,7 @@ def check_embed_modes():
             return E.embed_lookup(params, tokens, cfg, plan, dist, id_broadcast=idb)
 
         with cc.comm_stats() as stats:
-            jf = jax.jit(jax.shard_map(f, mesh=mesh,
+            jf = jax.jit(compat.shard_map(f, mesh=mesh,
                                        in_specs=(specs_of(defs), P()),
                                        out_specs=P(), check_vma=False))
             outs[idb] = np.asarray(jf(params, tokens), np.float32)

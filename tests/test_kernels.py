@@ -1,6 +1,8 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 import pytest
 
@@ -100,8 +102,7 @@ def test_rglru_pallas_path_matches_scan():
         get_config("recurrentgemma-9b").reduced(), d_model=64, n_heads=4,
         rglru=RGLRUConfig(lru_width=0, conv_width=4))
     dist = Dist(tp=1, dp=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     defs = rglru_mod.rglru_defs(cfg, dist)
     params = materialize(defs, jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model), jnp.float32)
@@ -110,7 +111,7 @@ def test_rglru_pallas_path_matches_scan():
         def f(params, x, up=up):
             out, _ = rglru_mod.rglru_forward(params, x, cfg, dist, use_pallas=up)
             return out
-        outs[up] = np.asarray(jax.jit(jax.shard_map(
+        outs[up] = np.asarray(jax.jit(compat.shard_map(
             f, mesh=mesh, in_specs=(specs_of(defs), P()), out_specs=P(),
             check_vma=False))(params, x))
     np.testing.assert_allclose(outs[True], outs[False], atol=1e-3, rtol=1e-3)

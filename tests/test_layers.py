@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, RGLRUConfig, SSMConfig
 from repro.models import rglru as rglru_mod
@@ -72,8 +74,7 @@ def test_ssd_chunked_matches_naive_recurrence(chunk):
         d_model=32,
     )
     dist = Dist(tp=1, dp=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from repro.models.common import specs_of
 
     defs = ssm_mod.ssd_defs(cfg, dist)
@@ -93,7 +94,7 @@ def test_ssd_chunked_matches_naive_recurrence(chunk):
             return out
 
         outs[c] = np.asarray(
-            jax.jit(jax.shard_map(fc, mesh=mesh, in_specs=(specs_of(defs), P()),
+            jax.jit(compat.shard_map(fc, mesh=mesh, in_specs=(specs_of(defs), P()),
                                   out_specs=P(), check_vma=False))(params, x)
         )
     # chunk-size invariance == the chunked algebra matches the recurrence
@@ -106,8 +107,7 @@ def test_ssd_decode_matches_prefill():
         ssm=SSMConfig(state_dim=16, head_dim=8, expand=2, chunk=8, conv_width=4),
     )
     dist = Dist(tp=1, dp=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from repro.models.common import specs_of
 
     defs = ssm_mod.ssd_defs(cfg, dist)
@@ -127,7 +127,7 @@ def test_ssd_decode_matches_prefill():
         return jnp.concatenate(ys, 1)
 
     run = lambda f: np.asarray(
-        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
+        jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
                               out_specs=P(), check_vma=False))(params, x)
     )
     np.testing.assert_allclose(run(full), run(stepwise), atol=2e-3, rtol=1e-3)
@@ -144,8 +144,7 @@ def test_rglru_scan_matches_stepwise():
         rglru=RGLRUConfig(lru_width=0, conv_width=4),
     )
     dist = Dist(tp=1, dp=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from repro.models.common import specs_of
 
     defs = rglru_mod.rglru_defs(cfg, dist)
@@ -166,7 +165,7 @@ def test_rglru_scan_matches_stepwise():
         return jnp.concatenate(ys, 1)
 
     run = lambda f: np.asarray(
-        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
+        jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(specs_of(defs), P()),
                               out_specs=P(), check_vma=False))(params, x)
     )
     np.testing.assert_allclose(run(full), run(stepwise), atol=2e-3, rtol=1e-3)

@@ -2,6 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+from repro import compat
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -115,8 +121,7 @@ def test_lse_merge_split_invariance(splits, heads, rnd):
 def test_comm_stats_accounting():
     from repro.core import collectives as cc
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from jax.sharding import PartitionSpec as P
 
     def f(x):
@@ -125,7 +130,7 @@ def test_comm_stats_accounting():
         return z
 
     with cc.comm_stats() as stats:
-        jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+        jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
                               check_vma=False)).lower(
             jax.ShapeDtypeStruct((8, 4), jnp.float32))
     assert stats.count("all_reduce") == 1

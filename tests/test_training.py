@@ -7,6 +7,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs import ParallelConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
@@ -31,7 +33,7 @@ def test_vocab_parallel_xent_matches_reference(mesh11):
     def f(logits, labels):
         return vocab_parallel_xent(logits, labels, plan, dist)
 
-    got = float(jax.jit(jax.shard_map(
+    got = float(jax.jit(compat.shard_map(
         f, mesh=mesh11, in_specs=(P(), P()), out_specs=P(), check_vma=False))(
         logits, labels))
     lse = jax.nn.logsumexp(logits, axis=-1)
@@ -57,7 +59,7 @@ def test_chunked_xent_matches_unchunked(mesh11):
         bfull = vocab_parallel_xent(head(hidden), labels, plan, dist)
         return a, bfull
 
-    a, bfull = jax.jit(jax.shard_map(f, mesh=mesh11, in_specs=(P(), P()),
+    a, bfull = jax.jit(compat.shard_map(f, mesh=mesh11, in_specs=(P(), P()),
                                      out_specs=(P(), P()), check_vma=False))(
         hidden, labels)
     assert abs(float(a) - float(bfull)) < 1e-4
@@ -83,7 +85,7 @@ def test_chunked_xent_gradient_matches(mesh11):
             return vocab_parallel_xent(head(hidden), labels, plan, dist)
 
         g = jax.grad(f)
-        return np.asarray(jax.jit(jax.shard_map(
+        return np.asarray(jax.jit(compat.shard_map(
             g, mesh=mesh11, in_specs=(P(), P(), P()), out_specs=P(),
             check_vma=False))(w, hidden, labels))
 
@@ -106,7 +108,7 @@ def test_loss_decreases_training(mesh11):
     pspecs = M.param_specs(ctx)
     ospecs = {"m": pspecs, "v": pspecs, "step": P()}
     step_fn = make_train_step(ctx, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
-    jstep = jax.jit(jax.shard_map(
+    jstep = jax.jit(compat.shard_map(
         step_fn, mesh=mesh11,
         in_specs=(pspecs, ospecs, {"tokens": P("data", None), "labels": P("data", None)}),
         out_specs=(pspecs, ospecs, P()), check_vma=False), donate_argnums=(0, 1))
@@ -136,7 +138,7 @@ def test_zero1_equals_adamw_dp1(mesh11):
             opt = init_opt_state(params)
             ospecs = {"m": pspecs, "v": pspecs, "step": P()}
         step_fn = make_train_step(ctx, opt_cfg, zero1=zero1)
-        jstep = jax.jit(jax.shard_map(
+        jstep = jax.jit(compat.shard_map(
             step_fn, mesh=mesh11,
             in_specs=(pspecs, ospecs,
                       {"tokens": P("data", None), "labels": P("data", None)}),
