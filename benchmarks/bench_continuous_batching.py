@@ -13,12 +13,27 @@ IDENTICAL request set (the wave baseline ignores arrivals — it drains the
 queue, which only helps it).
 
 Run directly:  PYTHONPATH=src python benchmarks/bench_continuous_batching.py
+(writes machine-readable results to BENCH_continuous.json for the
+cross-PR perf trajectory; --no-json to skip)
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_continuous.json")
+
+
+def cache_bytes(caches) -> int:
+    """Persistent cache footprint of a cache pytree (the dense engine's
+    high-water mark: it allocates n_slots x max_len up front)."""
+    import jax
+
+    return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(caches)))
 
 
 def make_requests(cfg, n_requests: int, prompt_max: int, max_new_head: int,
@@ -53,7 +68,18 @@ def run_one(sched_name: str, eng, reqs, batch: int, block_steps: int):
         rec["decode_steps"] = s["decode_steps"]
         rec["slot_util"] = s["active_slot_steps"] / max(1, s["slot_steps"])
         rec["in_flight_admissions"] = s["in_flight_admissions"]
+        rec["prefill_tokens"] = s["prefill_tokens"]
+        rec["latency"] = sched.request_summary()
+        rec["kv_bytes_hwm"] = cache_bytes(sched.caches)
     return rec, done
+
+
+def write_json(path, results, meta):
+    payload = {"meta": meta, "results": results}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(path)}")
 
 
 def run(arch: str = "yi-9b", n_requests: int = 24, batch: int = 4,
@@ -83,7 +109,7 @@ def run(arch: str = "yi-9b", n_requests: int = 24, batch: int = 4,
     return results, outputs
 
 
-def main(emit=None, **kw):
+def main(emit=None, json_path=BENCH_JSON, **kw):
     results, _ = run(**kw)
     for name, rec in results.items():
         extra = ""
@@ -101,12 +127,14 @@ def main(emit=None, **kw):
     print(f"continuous/wave aggregate tokens/s: {speedup:.2f}x", flush=True)
     if emit is not None:
         emit("continuous_batching/speedup", speedup * 1000, f"{speedup:.2f}x")
+    if json_path:
+        write_json(json_path, results,
+                   {"bench": "continuous_batching", "speedup": speedup, **kw})
     return results
 
 
 if __name__ == "__main__":
-    import os
     import sys
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    main()
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

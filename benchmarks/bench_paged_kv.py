@@ -1,0 +1,179 @@
+"""Paged KV pool vs dense slot stripes on shared-system-prompt traffic.
+
+Every request carries the same system preamble (the chat-serving common
+case) plus a private tail.  The dense slot engine re-prefills the preamble
+for every admission and pins ``n_slots x max_len`` cache rows forever; the
+paged backend prefills the shared blocks once, refcounts them across slots
+(copy-on-write sharing), and its memory high-water mark tracks blocks
+actually touched — with the pool deliberately sized BELOW the dense
+footprint to show admission by occupancy.
+
+Metrics land in BENCH_paged.json: aggregate tok/s, KV memory high-water
+mark, prefill tokens computed vs saved by prefix reuse, TTFT / queue-wait
+summaries.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_paged_kv.py
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_paged.json")
+
+
+def paged_bytes_hwm(caches, blocks_hwm: int, n_blocks: int) -> int:
+    """Paged high-water mark: pool leaves scale with blocks actually
+    touched; per-slot leaves (positions, recurrent state) are a fixed
+    resident cost and count at full size."""
+    from repro.runtime.kvcache import POOL_KEYS
+
+    pool = fixed = 0
+
+    def walk(sub):
+        nonlocal pool, fixed
+        for k, v in sub.items():
+            if isinstance(v, dict):
+                walk(v)
+            elif k in POOL_KEYS:
+                pool += v.size * v.dtype.itemsize
+            else:
+                fixed += v.size * v.dtype.itemsize
+
+    for g in caches:
+        walk(g)
+    return int(pool * blocks_hwm / max(1, n_blocks)) + int(fixed)
+
+
+def make_requests(cfg, n_requests: int, sys_len: int, tail_max: int,
+                  max_new_head: int, max_new_tail: int, arrival_every: int,
+                  seed: int = 0):
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, tail_max + 1))).astype(np.int32)
+        max_new = int(rng.integers(max_new_tail, max_new_head + 1))
+        reqs.append((np.concatenate([system, tail]), max_new,
+                     i * arrival_every))
+    return reqs
+
+
+def run_one(sched_name: str, eng, reqs, slots: int, block_steps: int,
+            block_size: int, n_blocks):
+    from repro.runtime.scheduler import (ContinuousScheduler,
+                                         PagedContinuousScheduler)
+
+    try:
+        from benchmarks.bench_continuous_batching import cache_bytes
+    except ImportError:
+        from bench_continuous_batching import cache_bytes
+
+    if sched_name == "paged":
+        sched = PagedContinuousScheduler(eng, n_slots=slots,
+                                         block_steps=block_steps,
+                                         block_size=block_size,
+                                         n_blocks=n_blocks)
+    else:
+        sched = ContinuousScheduler(eng, n_slots=slots,
+                                    block_steps=block_steps)
+    for prompt, max_new, arrival in reqs:
+        sched.submit(prompt, max_new, arrival_step=arrival)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    emitted = sum(len(r.output) for r in done)
+    s = sched.stats
+    rec = {
+        "requests": len(done), "emitted": emitted, "wall_s": dt,
+        "tok_per_s": emitted / dt if dt > 0 else float("inf"),
+        "decode_steps": s["decode_steps"],
+        "slot_util": s["active_slot_steps"] / max(1, s["slot_steps"]),
+        "prefill_tokens": s["prefill_tokens"],
+        "latency": sched.request_summary(),
+        "kv_bytes_hwm": cache_bytes(sched.caches),
+    }
+    if sched_name == "paged":
+        rec.update({
+            "prefill_tokens_saved": s["prefill_tokens_saved"],
+            "shared_block_hits": s["shared_block_hits"],
+            "preemptions": s["preemptions"],
+            "blocks_hwm": s["blocks_hwm"],
+            "pool_blocks": sched.n_blocks,
+            "kv_bytes_hwm": paged_bytes_hwm(sched.caches, s["blocks_hwm"],
+                                            sched.n_blocks),
+        })
+    return rec, {r.rid: r.output for r in done}
+
+
+def run(arch: str = "yi-9b", n_requests: int = 24, slots: int = 4,
+        sys_len: int = 24, tail_max: int = 8, max_new_head: int = 24,
+        max_new_tail: int = 4, arrival_every: int = 2, block_steps: int = 8,
+        block_size: int = 8, max_len: int = 96, pool_frac: float = 0.5):
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=max_len)
+    reqs = make_requests(cfg, n_requests, sys_len, tail_max, max_new_head,
+                         max_new_tail, arrival_every)
+    # overcommitted pool: pool_frac of the dense n_slots x max_len footprint
+    dense_blocks = slots * (-(-max_len // block_size))
+    n_blocks = max(slots + 1, int(dense_blocks * pool_frac)) + 1
+    warm = reqs[: slots + 1]
+    for name in ("dense", "paged"):
+        run_one(name, eng, warm, slots, block_steps, block_size, n_blocks)
+    results = {}
+    outputs = {}
+    for name in ("dense", "paged"):
+        results[name], outputs[name] = run_one(
+            name, eng, reqs, slots, block_steps, block_size, n_blocks)
+    for rid in outputs["dense"]:
+        np.testing.assert_array_equal(outputs["dense"][rid],
+                                      outputs["paged"][rid])
+    results["paged"]["pool_vs_dense_capacity"] = (
+        (n_blocks - 1) * block_size / (slots * max_len))
+    return results
+
+
+def main(emit=None, json_path=BENCH_JSON, **kw):
+    try:
+        from benchmarks.bench_continuous_batching import write_json
+    except ImportError:
+        from bench_continuous_batching import write_json
+
+    results = run(**kw)
+    for name, rec in results.items():
+        line = (f"{rec['requests']} reqs, {rec['emitted']} toks, "
+                f"{rec['wall_s']:.2f}s -> {rec['tok_per_s']:.1f} tok/s, "
+                f"kv_hwm={rec['kv_bytes_hwm'] / 1024:.0f} KiB, "
+                f"prefill={rec['prefill_tokens']}")
+        if name == "paged":
+            line += (f" (saved {rec['prefill_tokens_saved']}; "
+                     f"preempt {rec['preemptions']})")
+        print(f"{name:6s} {line}", flush=True)
+        if emit is not None:
+            emit(f"paged_kv/{name}",
+                 1e6 * rec["wall_s"] / max(1, rec["emitted"]), line)
+    saved = results["paged"]["prefill_tokens_saved"]
+    total = results["dense"]["prefill_tokens"]
+    mem = results["paged"]["kv_bytes_hwm"] / max(1, results["dense"]["kv_bytes_hwm"])
+    print(f"prefix reuse skipped {saved}/{total} prefill tokens; "
+          f"kv high-water {mem:.0%} of dense", flush=True)
+    if json_path:
+        write_json(json_path, results, {"bench": "paged_kv", **kw})
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

@@ -5,6 +5,8 @@
   one_shot            — paper Fig. 2 (§2.2 one sync per decoder layer)
   zero_copy           — paper Fig. 3 (§2.3 zero-copy handoff)
   continuous_batching — slot engine vs wave baseline on a straggler-heavy mix
+  paged_kv            — paged block pool vs dense slot stripes (prefix reuse,
+                        overcommitted pool, memory high-water mark)
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -30,8 +32,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (bench_continuous_batching, bench_one_shot,
-                            bench_sync_minimization, bench_token_latency,
-                            bench_zero_copy)
+                            bench_paged_kv, bench_sync_minimization,
+                            bench_token_latency, bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
@@ -39,6 +41,7 @@ def main() -> None:
         ("one_shot", bench_one_shot.main),
         ("zero_copy", bench_zero_copy.main),
         ("continuous_batching", bench_continuous_batching.main),
+        ("paged_kv", bench_paged_kv.main),
     ]
     failures = []
     for name, fn in benches:

@@ -287,6 +287,13 @@ class ParallelConfig:
     zero_copy: bool = True      # §2.3 donation + fused epilogue
     use_pallas: bool = False    # use Pallas kernels (interpret on CPU)
     kv_quant: bool = False      # int8 KV cache (per-head-per-slot scales)
+    # paged KV cache (slot engine second storage backend; dense remains the
+    # default and the only layout for wave mode).  PagedContinuousScheduler
+    # reads these as its defaults; constructor args override.
+    kv_block_size: int = 16     # tokens per KV block (paged backend)
+    kv_pool_blocks: int = 0     # total pool blocks; 0 = n_slots * blocks/slot
+                                # (i.e. the dense footprint — shrink to
+                                # overcommit capacity vs n_slots x max_seq)
 
 
 @dataclass(frozen=True)

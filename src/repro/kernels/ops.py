@@ -34,6 +34,14 @@ def decode_attention_partial(q, k, v, valid, scale):
                                         interpret=INTERPRET)
 
 
+def paged_decode_attention(q, kp, vp, bt, valid, scale):
+    """Flash partials for one decode token per slot, K/V gathered block-by-
+    block from the paged pool through the slot's block table."""
+    return _da.paged_decode_attention_partial(q, kp, vp, bt, valid,
+                                              float(scale),
+                                              interpret=INTERPRET)
+
+
 def lru_scan(a, b, h0):
     """RG-LRU linear-recurrence scan: h_t = a_t h_{t-1} + b_t."""
     from repro.kernels import lru_scan as _ls

@@ -16,6 +16,13 @@ Schedulers (``--scheduler``):
               virtual decode-step clock, ``--max-new-spread`` draws each
               request's budget from [max_new/spread, max_new] to create the
               straggler-heavy mix continuous batching wins on.
+  paged       slot engine over the paged KV pool: ``--kv-block-size`` tokens
+              per block, ``--kv-pool-blocks`` total pool blocks (0 = the
+              dense n_slots x max_len footprint; shrink to overcommit —
+              allocator exhaustion preempts the youngest request instead of
+              failing), ``--no-prefix-cache`` disables shared-prefix block
+              reuse, ``--shared-prefix N`` prepends one common N-token
+              system prompt to every request so the reuse path is visible.
 """
 from __future__ import annotations
 
@@ -28,7 +35,8 @@ import numpy as np
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.engine import Engine
-from repro.runtime.scheduler import ContinuousScheduler, WaveScheduler
+from repro.runtime.scheduler import (ContinuousScheduler,
+                                     PagedContinuousScheduler, WaveScheduler)
 
 
 def build_engine(args):
@@ -37,13 +45,22 @@ def build_engine(args):
         cfg = cfg.reduced()
     mesh = make_local_mesh(args.dp, args.tp)
     par = ParallelConfig(tp=args.tp, dp=args.dp, remat=False,
-                         topk_sync=not args.no_topk_sync)
+                         topk_sync=not args.no_topk_sync,
+                         kv_block_size=args.kv_block_size,
+                         kv_pool_blocks=args.kv_pool_blocks)
     return Engine(cfg=cfg, parallel=par,
                   sampling=SamplingConfig(top_k=args.top_k),
                   mesh=mesh, max_len=args.max_len)
 
 
 def make_scheduler(eng, args):
+    if args.scheduler == "paged":
+        # block-size / pool-size ride on ParallelConfig (build_engine); the
+        # scheduler reads them as its defaults
+        return PagedContinuousScheduler(
+            eng, n_slots=args.slots, block_steps=args.block_steps,
+            responsive_blocks=args.responsive_blocks,
+            prefix_cache=not args.no_prefix_cache)
     if args.scheduler == "continuous":
         return ContinuousScheduler(eng, n_slots=args.slots,
                                    block_steps=args.block_steps,
@@ -53,6 +70,7 @@ def make_scheduler(eng, args):
 
 def submit_workload(sched, cfg, args):
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).astype(np.int32)
     for i in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))
         shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
@@ -60,14 +78,18 @@ def submit_workload(sched, cfg, args):
         if args.max_new_spread > 1:
             max_new = int(rng.integers(max(1, args.max_new // args.max_new_spread),
                                        args.max_new + 1))
-        sched.submit(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
-                     max_new=max_new, arrival_step=i * args.arrival_every)
+        prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+        if args.shared_prefix and cfg.n_codebooks == 1:
+            prompt = np.concatenate([shared, prompt])
+        sched.submit(prompt, max_new=max_new,
+                     arrival_step=i * args.arrival_every)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
-    ap.add_argument("--scheduler", choices=("wave", "continuous"), default="wave")
+    ap.add_argument("--scheduler", choices=("wave", "continuous", "paged"),
+                    default="wave")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4,
                     help="wave scheduler: requests per wave")
@@ -78,6 +100,16 @@ def main(argv=None):
     ap.add_argument("--responsive-blocks", action="store_true",
                     help="end fused blocks at the shortest active budget while "
                          "requests wait (fewer total steps, more dispatches)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="paged scheduler: tokens per KV block")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="paged scheduler: total pool blocks "
+                         "(0 = dense-equivalent footprint)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged scheduler: disable shared-prefix block reuse")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one common N-token system prompt to every "
+                         "request (makes prefix reuse visible)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals by N decode steps per request")
     ap.add_argument("--max-new-spread", type=int, default=1,
@@ -104,12 +136,24 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s -> {1000*dt/max(total_tokens,1):.1f} ms/token "
           f"({args.scheduler}; arch={cfg.name}, tp={args.tp})")
-    if args.scheduler == "continuous":
+    if args.scheduler in ("continuous", "paged"):
         s = sched.stats
         util = s["active_slot_steps"] / max(1, s["slot_steps"])
         print(f"  decode steps {s['decode_steps']}, slot util {util:.0%}, "
               f"admission rounds {s['admission_rounds']} "
               f"({s['in_flight_admissions']} requests admitted in-flight)")
+        lat = sched.request_summary()
+        if "ttft_s" in lat:
+            print(f"  ttft mean {lat['ttft_s']['mean']*1e3:.0f} ms "
+                  f"(p50 {lat['ttft_s']['p50']*1e3:.0f}, "
+                  f"max {lat['ttft_s']['max']*1e3:.0f}); queue mean "
+                  f"{lat['queue_s']['mean']*1e3:.0f} ms")
+    if args.scheduler == "paged":
+        s = sched.stats
+        print(f"  pool {sched.n_blocks} x {sched.bs}-token blocks, "
+              f"high-water {s['blocks_hwm']} blocks; prefill tokens "
+              f"{s['prefill_tokens']} (+{s['prefill_tokens_saved']} reused), "
+              f"preemptions {s['preemptions']}")
     for r in done[:4]:
         out = r.output if r.output.ndim == 1 else r.output[..., 0]
         print(f"  req {r.rid}: {len(r.output)} tokens, first 8: {out[:8].tolist()}")

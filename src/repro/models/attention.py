@@ -85,6 +85,7 @@ def init_cache(
     dtype=jnp.bfloat16,
     quant: bool = False,
     batched_pos: bool = False,
+    paged: Optional[Tuple[int, int]] = None,
 ) -> Dict[str, jax.Array]:
     """Per-shard cache buffers for one layer (stacked by the scan outside).
 
@@ -93,7 +94,36 @@ def init_cache(
 
     batched_pos=True gives every batch row (slot) its own position array —
     the continuous-batching engine decodes with a per-slot position vector,
-    so validity masks must be trackable per row."""
+    so validity masks must be trackable per row.
+
+    paged=(n_blocks_local, block_size) swaps the dense per-slot K/V stripes
+    for a global block pool addressed through per-slot block tables (see
+    runtime.kvcache): memory scales with blocks actually allocated, not
+    n_slots x max_seq.  Position arrays stay per-slot dense over the padded
+    view length, so validity masking is unchanged."""
+    if paged is not None:
+        n_blocks, bs = paged
+        view = -(-cache_len_local // bs) * bs
+        pos = jnp.full((batch_local, view), -1, jnp.int32)
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "ckv": jnp.zeros((n_blocks, bs, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((n_blocks, bs, m.qk_rope_head_dim), dtype),
+                "pos": pos,
+            }
+        hd = cfg.resolved_head_dim
+        shape = (n_blocks, plan.local_kv, bs, hd)
+        if quant:
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], dtype),
+                "v_scale": jnp.zeros(shape[:3], dtype),
+                "pos": pos,
+            }
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": pos}
     pos_shape = (batch_local, cache_len_local) if batched_pos else (cache_len_local,)
     pos = jnp.full(pos_shape, -1, jnp.int32)
     if cfg.mla is not None:
@@ -177,12 +207,16 @@ def chunked_causal_attention(
     q: jax.Array,                 # (b, hq, Sq, hd) — RoPE already applied
     k: jax.Array,                 # (b, hkv, Sk, hd)
     v: jax.Array,
-    q_positions: jax.Array,       # (Sq,) absolute positions
+    q_positions: jax.Array,       # (Sq,) absolute positions, or (b, Sq) per-row
     kv_positions: jax.Array,      # (Sk,) absolute positions (-1 = empty slot)
     window: int,                  # 0 = full causal
     scale: float,
 ) -> jax.Array:
-    """Flash-style streaming softmax over KV chunks (pure jnp oracle path)."""
+    """Flash-style streaming softmax over KV chunks (pure jnp oracle path).
+
+    Batched ``q_positions`` (b, Sq) serve the paged cached-prefix prefill:
+    each row's suffix queries start at its own absolute offset while
+    attending one shared KV view (view index == absolute position)."""
     b, hq, sq, hd = q.shape
     sk = k.shape[2]
     chunk = min(KV_CHUNK, sk)
@@ -195,15 +229,23 @@ def chunked_causal_attention(
     kc = k.reshape(b, k.shape[1], n_chunks, chunk, k.shape[3]).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, v.shape[1], n_chunks, chunk, v.shape[3]).transpose(2, 0, 1, 3, 4)
     pc = kv_positions.reshape(n_chunks, chunk)
+    batched_q = q_positions.ndim == 2
 
     def step(carry, inputs):
         m, l, acc = carry
         k_i, v_i, p_i = inputs
         s = _grouped_scores(q, k_i) * scale                      # (b,hq,Sq,chunk)
-        valid = (p_i[None, :] >= 0) & (p_i[None, :] <= q_positions[:, None])
-        if window:
-            valid &= p_i[None, :] > q_positions[:, None] - window
-        s = jnp.where(valid[None, None], s, -jnp.inf)
+        if batched_q:
+            qp = q_positions[:, :, None]                         # (b,Sq,1)
+            valid = (p_i[None, None, :] >= 0) & (p_i[None, None, :] <= qp)
+            if window:
+                valid &= p_i[None, None, :] > qp - window
+            s = jnp.where(valid[:, None], s, -jnp.inf)
+        else:
+            valid = (p_i[None, :] >= 0) & (p_i[None, :] <= q_positions[:, None])
+            if window:
+                valid &= p_i[None, :] > q_positions[:, None] - window
+            s = jnp.where(valid[None, None], s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> use where
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -442,6 +484,114 @@ def _write_pos_batched(pos_arr: jax.Array, pos: jax.Array, S: int, ring: bool):
 
 
 # ---------------------------------------------------------------------------
+# Paged addressing (block pool + per-slot block tables)
+#
+# Pool leaves have a leading block dim instead of a batch dim; a slot's view
+# of the cache is the concatenation of its table's blocks, so view index ==
+# absolute position.  Out-of-range or unallocated view positions map to the
+# reserved null block 0 — a write sink that is never validly read (its view
+# entries carry pos = -1).  Gathering the view materialises a dense-shaped
+# TRANSIENT per layer (the jnp reference path); persistent storage is the
+# pool, and the Pallas decode kernel gathers block-by-block instead.
+# ---------------------------------------------------------------------------
+
+
+def _paged_view(pool: jax.Array, bt: jax.Array) -> jax.Array:
+    """K/V pool (nb, h, bs, hd) gathered through bt (b, nbps) -> per-slot
+    dense view (b, h, nbps*bs, hd); view index == absolute position."""
+    b, nbps = bt.shape
+    g = pool[bt].transpose(0, 2, 1, 3, 4)        # (b, h, nbps, bs, hd)
+    return g.reshape(b, g.shape[1], nbps * pool.shape[2], pool.shape[3])
+
+
+def _paged_view_seq(pool: jax.Array, bt: jax.Array) -> jax.Array:
+    """Sequence-major pool (nb, bs, r) -> (b, nbps*bs, r) (MLA latents)."""
+    b, nbps = bt.shape
+    g = pool[bt]                                 # (b, nbps, bs, r)
+    return g.reshape(b, nbps * pool.shape[1], pool.shape[2])
+
+
+def _paged_view_scale(pool: jax.Array, bt: jax.Array) -> jax.Array:
+    """Scale pool (nb, h, bs) -> (b, h, nbps*bs)."""
+    b, nbps = bt.shape
+    g = pool[bt].transpose(0, 2, 1, 3)           # (b, h, nbps, bs)
+    return g.reshape(b, g.shape[1], nbps * pool.shape[2])
+
+
+def _paged_decode_targets(bt: jax.Array, pos: jax.Array, bs: int):
+    """(b,) write positions -> (physical block id, in-block offset); rows
+    whose position falls outside the table (frozen/overrun slots) redirect
+    to the null block."""
+    nbps = bt.shape[1]
+    p = jnp.maximum(pos, 0)
+    vi, off = p // bs, p % bs
+    phys = jnp.where(vi < nbps,
+                     bt[jnp.arange(bt.shape[0]), jnp.minimum(vi, nbps - 1)], 0)
+    return phys, off
+
+
+def _paged_write_decode(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                        pos: jax.Array) -> jax.Array:
+    """One token per row at its own position: pool (nb,h,bs,hd), new (b,h,1,hd)."""
+    phys, off = _paged_decode_targets(bt, pos, pool.shape[2])
+    return pool.at[phys, :, off, :].set(new[:, :, 0, :].astype(pool.dtype))
+
+
+def _paged_write_decode_seq(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                            pos: jax.Array) -> jax.Array:
+    """Sequence-major decode write: pool (nb,bs,r), new (b,1,r)."""
+    phys, off = _paged_decode_targets(bt, pos, pool.shape[1])
+    return pool.at[phys, off, :].set(new[:, 0, :].astype(pool.dtype))
+
+
+def _paged_write_decode_scale(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                              pos: jax.Array) -> jax.Array:
+    """Scale decode write: pool (nb,h,bs), new (b,h,1)."""
+    phys, off = _paged_decode_targets(bt, pos, pool.shape[2])
+    return pool.at[phys, :, off].set(new[:, :, 0].astype(pool.dtype))
+
+
+def _paged_flat_targets(bt: jax.Array, starts: jax.Array, Lp: int, bs: int):
+    """Flattened (b*Lp,) physical block ids + offsets for a prefill whose
+    row b covers view positions [starts[b], starts[b]+Lp)."""
+    nbps = bt.shape[1]
+    vpos = starts[:, None] + jnp.arange(Lp, dtype=jnp.int32)[None, :]  # (b,Lp)
+    vi, off = vpos // bs, vpos % bs
+    phys = jnp.where(vi < nbps,
+                     jnp.take_along_axis(bt, jnp.minimum(vi, nbps - 1), axis=1),
+                     0)
+    return phys.reshape(-1), off.reshape(-1)
+
+
+def _paged_write_prefill(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                         starts: jax.Array) -> jax.Array:
+    """Scatter prefill K/V (b,h,Lp,hd) into the pool at each row's own view
+    offsets.  Padding tokens land in the row's private tail block or the
+    null block — never in a shared (registered, hence full) prefix block."""
+    b, h, Lp, hd = new.shape
+    phys, off = _paged_flat_targets(bt, starts, Lp, pool.shape[2])
+    flat = new.transpose(0, 2, 1, 3).reshape(b * Lp, h, hd)
+    return pool.at[phys, :, off, :].set(flat.astype(pool.dtype))
+
+
+def _paged_write_prefill_seq(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                             starts: jax.Array) -> jax.Array:
+    """Sequence-major prefill scatter: pool (nb,bs,r), new (b,Lp,r)."""
+    b, Lp, r = new.shape
+    phys, off = _paged_flat_targets(bt, starts, Lp, pool.shape[1])
+    return pool.at[phys, off, :].set(new.reshape(b * Lp, r).astype(pool.dtype))
+
+
+def _paged_write_prefill_scale(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                               starts: jax.Array) -> jax.Array:
+    """Scale prefill scatter: pool (nb,h,bs), new (b,h,Lp)."""
+    b, h, Lp = new.shape
+    phys, off = _paged_flat_targets(bt, starts, Lp, pool.shape[2])
+    return pool.at[phys, :, off].set(
+        new.transpose(0, 2, 1).reshape(b * Lp, h).astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
@@ -468,6 +618,7 @@ def gqa_forward(
     cur_pos: Optional[jax.Array] = None,    # scalar, decode only
     kv_seq_axis: Optional[str] = None,
     use_pallas: bool = False,
+    block_tables: Optional[jax.Array] = None,   # (b, nbps) -> paged cache
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Returns (partial out (b,s,d) — UNREDUCED over model axis, new_cache)."""
     b, s, d = x.shape
@@ -496,7 +647,83 @@ def gqa_forward(
     k = apply_rope(k, rope_pos, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # -- paged: scatter/gather K/V through the per-slot block table ----
+        bt = block_tables
+        quant = "k_scale" in cache
+        if decode:
+            if cur_pos.ndim != 1:
+                raise ValueError("paged cache serves the slot engine only "
+                                 "(per-slot decode positions)")
+            S_view = cache["pos"].shape[-1]
+            if quant:
+                kq, ksc = _quantize_kv(k)
+                vq, vsc = _quantize_kv(v)
+                ck = _paged_write_decode(cache["k"], kq, bt, cur_pos)
+                cv = _paged_write_decode(cache["v"], vq, bt, cur_pos)
+                cks = _paged_write_decode_scale(cache["k_scale"], ksc, bt, cur_pos)
+                cvs = _paged_write_decode_scale(cache["v_scale"], vsc, bt, cur_pos)
+                cpos = _write_pos_batched(cache["pos"], cur_pos, S_view, False)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                             "pos": cpos}
+                k_read = _dequantize_kv(_paged_view(ck, bt), _paged_view_scale(cks, bt))
+                v_read = _dequantize_kv(_paged_view(cv, bt), _paged_view_scale(cvs, bt))
+            else:
+                ck = _paged_write_decode(cache["k"], k, bt, cur_pos)
+                cv = _paged_write_decode(cache["v"], v, bt, cur_pos)
+                cpos = _write_pos_batched(cache["pos"], cur_pos, S_view, False)
+                new_cache = {"k": ck, "v": cv, "pos": cpos}
+                k_read, v_read = None, None      # Pallas path gathers per block
+            if not quant and use_pallas:
+                from repro.kernels import ops as kops
+
+                valid = (cpos >= 0) & (cpos <= cur_pos[:, None])
+                if window:
+                    valid &= cpos > cur_pos[:, None] - window
+                m, l, acc = kops.paged_decode_attention(q, ck, cv, bt, valid, scale)
+                out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+            else:
+                if k_read is None:
+                    k_read, v_read = _paged_view(ck, bt), _paged_view(cv, bt)
+                out = decode_attention_shardable(
+                    q, k_read, v_read, cpos, cur_pos, window, scale, dist,
+                    seq_axis=None, use_pallas=False,
+                )
+        else:
+            starts = (positions[:, 0] if positions.ndim == 2
+                      else jnp.zeros((b,), jnp.int32))
+            if quant:
+                kq, ksc = _quantize_kv(k)
+                vq, vsc = _quantize_kv(v)
+                ck = _paged_write_prefill(cache["k"], kq, bt, starts)
+                cv = _paged_write_prefill(cache["v"], vq, bt, starts)
+                cks = _paged_write_prefill_scale(cache["k_scale"], ksc, bt, starts)
+                cvs = _paged_write_prefill_scale(cache["v_scale"], vsc, bt, starts)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                             "pos": cache["pos"]}
+            else:
+                ck = _paged_write_prefill(cache["k"], k, bt, starts)
+                cv = _paged_write_prefill(cache["v"], v, bt, starts)
+                new_cache = {"k": ck, "v": cv, "pos": cache["pos"]}
+            # pos rows are rewritten whole by the engine (set_paged_positions)
+            if positions.ndim == 2:
+                # cached-prefix admission: suffix queries attend the slot's
+                # full view (shared prefix blocks + just-written suffix);
+                # view index == absolute position, so a plain arange is the
+                # KV position vector and causality does all the masking
+                if quant:
+                    k_att = _dequantize_kv(_paged_view(ck, bt), _paged_view_scale(cks, bt))
+                    v_att = _dequantize_kv(_paged_view(cv, bt), _paged_view_scale(cvs, bt))
+                else:
+                    k_att, v_att = _paged_view(ck, bt), _paged_view(cv, bt)
+                kv_pos = jnp.arange(k_att.shape[2], dtype=jnp.int32)
+                out = chunked_causal_attention(q, k_att, v_att, positions,
+                                               kv_pos, window, scale)
+            else:
+                # no shared prefix in the batch: math identical to the dense
+                # slot engine (attend the fresh K/V only)
+                out = _prefill_attention(q, k, v, positions, window, scale)
+    elif cache is not None:
         S = cache["k"].shape[2]
         ring = bool(window) and kv_seq_axis is None
         quant = "k_scale" in cache
@@ -575,6 +802,7 @@ def mla_forward(
     cur_pos: Optional[jax.Array] = None,
     kv_seq_axis: Optional[str] = None,
     use_pallas: bool = False,
+    block_tables: Optional[jax.Array] = None,   # (b, nbps) -> paged cache
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Multi-head latent attention (DeepSeek-V2 style, absorbed matmuls).
 
@@ -609,7 +837,34 @@ def mla_forward(
     krope_new = apply_rope(krope_new[:, None], rope_pos,
                            cfg.rope_theta)[:, 0]              # (b,s,rope)
 
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # -- paged: sequence-major latent pools through the block table ----
+        bt = block_tables
+        S_view = cache["pos"].shape[-1]
+        if decode:
+            if cur_pos.ndim != 1:
+                raise ValueError("paged cache serves the slot engine only")
+            ckv = _paged_write_decode_seq(cache["ckv"], ckv_new, bt, cur_pos)
+            krope = _paged_write_decode_seq(cache["krope"], krope_new, bt, cur_pos)
+            cpos = _write_pos_batched(cache["pos"], cur_pos, S_view, False)
+            new_cache = {"ckv": ckv, "krope": krope, "pos": cpos}
+            kv_src = _paged_view_seq(ckv, bt)
+            krope_src = _paged_view_seq(krope, bt)
+            kv_pos = cpos
+        else:
+            starts = (positions[:, 0] if positions.ndim == 2
+                      else jnp.zeros((b,), jnp.int32))
+            ckv = _paged_write_prefill_seq(cache["ckv"], ckv_new, bt, starts)
+            krope = _paged_write_prefill_seq(cache["krope"], krope_new, bt, starts)
+            # pos rows rewritten whole by the engine (set_paged_positions)
+            new_cache = {"ckv": ckv, "krope": krope, "pos": cache["pos"]}
+            if positions.ndim == 2:   # cached-prefix admission: use the view
+                kv_src = _paged_view_seq(ckv, bt)
+                krope_src = _paged_view_seq(krope, bt)
+                kv_pos = jnp.arange(S_view, dtype=jnp.int32)
+            else:                     # fresh latents only — dense-identical
+                kv_src, krope_src, kv_pos = ckv_new, krope_new, positions
+    elif cache is not None:
         S = cache["ckv"].shape[1]
         if decode:
             batched = cur_pos.ndim == 1

@@ -124,6 +124,9 @@ def forward(
     id_broadcast: Optional[bool] = None,
     skip_head: bool = False,
     length_mask: Optional[jax.Array] = None,  # (b, s) bool, right-padded prefill
+    block_tables: Optional[jax.Array] = None, # (b, nbps): paged KV addressing
+    start_pos: Optional[jax.Array] = None,    # (b,): per-slot prefill offset
+                                              # (cached-prefix admission)
 ) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
     """-> (local logits, new_caches, aux_loss). Logits are vocab-sharded.
 
@@ -146,6 +149,11 @@ def forward(
         # per-slot decode (continuous batching): each row rotates/masks at
         # its own position; shared decode keeps the (1,) broadcast form.
         positions = cur_pos[:, None] if cur_pos.ndim == 1 else cur_pos[None]
+    elif start_pos is not None:
+        # paged cached-prefix admission: each row's prompt suffix starts at
+        # its own absolute offset (tokens 0..start-1 are already resident)
+        positions = (start_pos[:, None]
+                     + jnp.arange(s_total, dtype=jnp.int32)[None, :])
     else:
         positions = jnp.arange(s_total, dtype=jnp.int32)
 
@@ -159,7 +167,7 @@ def forward(
             params["groups"][gi], x, positions, cfg, plan, dist, policy, g,
             caches=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
             use_pallas=ctx.parallel.use_pallas, remat=ctx.parallel.remat and not decode,
-            length_mask=length_mask,
+            length_mask=length_mask, block_tables=block_tables,
         )
         aux = aux + a
         if new_caches is not None:
@@ -180,12 +188,16 @@ def lm_head_local(params, x, ctx: ModelCtx) -> jax.Array:
 
 
 def init_caches(ctx: ModelCtx, batch_local: int, cache_len: int,
-                *, kv_seq_shard_dp: int = 1, batched_pos: bool = False) -> Tuple:
+                *, kv_seq_shard_dp: int = 1, batched_pos: bool = False,
+                paged: Optional[Tuple[int, int]] = None) -> Tuple:
+    """``paged=(n_blocks_local, block_size)`` builds the paged layout:
+    attention layers get block pools, recurrent layers keep their per-slot
+    constant-size state unchanged."""
     groups = tfm.build_groups(ctx.cfg)
     return tuple(
         tfm.group_cache(ctx.cfg, ctx.plan, ctx.dist, g, batch_local, cache_len,
                         kv_seq_shard_dp, quant=ctx.parallel.kv_quant,
-                        batched_pos=batched_pos)
+                        batched_pos=batched_pos, paged=paged)
         for g in groups
     )
 

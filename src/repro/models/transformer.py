@@ -142,12 +142,14 @@ def sub_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, sub: SubLayer,
 def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
                 batch_local: int, cache_len_local: int,
                 kv_seq_shard_dp: int = 1, quant: bool = False,
-                batched_pos: bool = False) -> Dict[str, Any]:
+                batched_pos: bool = False,
+                paged: Optional[Tuple[int, int]] = None) -> Dict[str, Any]:
     def one(sub: SubLayer):
         if sub.kind in ATTN_KINDS:
             clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, kv_seq_shard_dp)
             return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
-                                   quant=quant, batched_pos=batched_pos)
+                                   quant=quant, batched_pos=batched_pos,
+                                   paged=paged)
         return sub_cache(cfg, plan, dist, sub, batch_local, cache_len_local)
 
     caches = {f"sub{i}": one(s) for i, s in enumerate(g.subs)}
@@ -164,7 +166,8 @@ def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
 
 
 def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
-                   cur_pos, kv_seq_axis, use_pallas, length_mask=None):
+                   cur_pos, kv_seq_axis, use_pallas, length_mask=None,
+                   block_tables=None):
     if sub.kind in ATTN_KINDS:
         # attention needs no length mask: padded K/V entries are dead by
         # position masking (pos = -1) in the cache
@@ -172,10 +175,12 @@ def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
             return attn.mla_forward(
                 p, xa, positions, cfg, plan, dist, cache=cache, cur_pos=cur_pos,
                 kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
+                block_tables=block_tables,
             )
         return attn.gqa_forward(
             p, xa, positions, cfg, plan, dist, kind=sub.kind, cache=cache,
             cur_pos=cur_pos, kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
+            block_tables=block_tables,
         )
     if sub.kind == "ssd":
         return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache,
@@ -202,6 +207,7 @@ def sublayer_forward(
     kv_seq_axis=None,
     use_pallas=False,
     length_mask=None,
+    block_tables=None,
 ):
     """-> (x', new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -211,7 +217,7 @@ def sublayer_forward(
         # paper §2.2: attention + FFN read the same normed input
         attn_p, new_cache = _mixer_forward(
             p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-            kv_seq_axis, use_pallas, length_mask,
+            kv_seq_axis, use_pallas, length_mask, block_tables,
         )
         ffn_p = mlp_mod.mlp_forward(p["ffn"], xa, cfg)
         if policy.one_shot:
@@ -223,7 +229,7 @@ def sublayer_forward(
 
     mix_p, new_cache = _mixer_forward(
         p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-        kv_seq_axis, use_pallas, length_mask,
+        kv_seq_axis, use_pallas, length_mask, block_tables,
     )
     x = x + policy.reduce_out(mix_p, tag="mixer_reduce")
     if sub.has_ffn:
@@ -252,6 +258,7 @@ def group_forward(
     use_pallas=False,
     remat=False,
     length_mask=None,
+    block_tables=None,
 ):
     """-> (x', new_caches, aux)."""
 
@@ -263,6 +270,7 @@ def group_forward(
                 p_layer[f"sub{i}"], x, positions, cfg, plan, dist, policy, sub,
                 cache=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
                 use_pallas=use_pallas, length_mask=length_mask,
+                block_tables=block_tables,
             )
             if c_new is not None:
                 new_caches[f"sub{i}"] = c_new

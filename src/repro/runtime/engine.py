@@ -137,11 +137,13 @@ def make_slot_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
     slot: finished rows freeze their token/position and their (harmless,
     row-local) cache write lands at the frozen index."""
 
-    def slot_decode(params, tok, caches, pos, done, remaining, eos, rng):
+    def slot_decode(params, tok, caches, pos, done, remaining, eos, rng,
+                    block_tables=None):
         tokens = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
         logits, caches, _ = M.forward(
             params, tokens, ctx, caches=caches, cur_pos=pos,
             kv_seq_axis=None, last_only=True, seq_sharded=False,
+            block_tables=block_tables,
         )
         nxt = sample_tokens(
             logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
@@ -159,6 +161,65 @@ def make_slot_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
         return nxt, caches, new_pos, new_done, new_remaining
 
     return slot_decode
+
+
+def make_paged_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig,
+                            *, with_prefix: bool):
+    """Paged in-flight admission: like the dense slot prefill, but K/V lands
+    in the block pool through a write block table and (with_prefix=True)
+    each row's tokens are only its prompt SUFFIX — the shared-prefix blocks
+    are already resident and are attended through the slot's view.
+
+    (params, tokens (b,Lp), caches, admit, plens, starts, total_lens,
+     block_tables, rng) -> (tok (b,), caches)
+
+    ``plens`` are suffix lengths, ``starts`` the per-slot absolute offset of
+    the suffix (0 without sharing), ``total_lens = starts + plens`` the full
+    prompt length.  The un-admitted rows' table entries are the null block,
+    which confines their scatter writes to a dead sink; merge_slots then
+    row-selects only the per-slot leaves (pos, recurrent state)."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+
+    def prefill_paged(params, tokens, caches, admit, plens, starts,
+                      total_lens, bt, rng):
+        caches_r = kvcache.reset_slots(caches, groups, admit, paged=True)
+        lmask = (jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+                 < plens[:, None])                              # (b, Lp)
+        hidden, new_caches, _ = M.forward(
+            params, tokens, ctx, caches=caches_r, last_only=False,
+            skip_head=True, seq_sharded=True, length_mask=lmask,
+            block_tables=bt, start_pos=starts if with_prefix else None,
+        )
+        idx = jnp.clip(plens - 1, 0, tokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = M.lm_head_local(params, h_last, ctx)
+        tok = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        new_caches = kvcache.set_paged_positions(new_caches, groups, total_lens)
+        merged = kvcache.merge_slots(caches, new_caches, groups, admit,
+                                     paged=True)
+        return tok, merged
+
+    return prefill_paged
+
+
+def make_paged_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
+    """Masked per-slot decode over the paged pool: the dense slot-decode
+    body with cache reads/writes routed through the block table.
+    (params, tok, caches, pos, done, remaining, eos, bt, rng) ->
+    (nxt, caches, pos', done', remaining')."""
+    dec = make_slot_decode_step(ctx, sampling)
+
+    def paged_decode(params, tok, caches, pos, done, remaining, eos, bt, rng):
+        return dec(params, tok, caches, pos, done, remaining, eos, rng,
+                   block_tables=bt)
+
+    return paged_decode
 
 
 @dataclass
@@ -244,16 +305,59 @@ class Engine:
         }
 
     # -- continuous batching (slot engine) --------------------------------
+    def _slot_gate(self):
+        if self.cfg.frontend is not None:
+            raise NotImplementedError(
+                "slot engine does not support frontend features yet")
+        if self.parallel.kv_seq_shard:
+            raise ValueError("slot engine is incompatible with kv_seq_shard")
+
+    def _slot_decode_builder(self, dec, cspec, extra_specs=()):
+        """``build_decode(n)`` factory shared by the dense and paged slot
+        engines: a lax.scan of ``n`` fused masked steps.  ``extra_specs``
+        appends trailing sharded operands (the paged block table) that are
+        threaded into every step between ``eos`` and the rng."""
+        pspecs = M.param_specs(self.ctx)
+        batch_spec, _, tok1, _, _ = self._specs()
+        sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+        slot = P(*batch_spec)
+        donate = (2,) if self.parallel.zero_copy else ()
+
+        def decode_n(params, tok, caches, pos, done, remaining, eos, *rest,
+                     n):
+            *extra, rng = rest
+
+            def body(carry, i):
+                tok, caches, pos, done, remaining = carry
+                nxt, caches, pos, done, remaining = dec(
+                    params, tok, caches, pos, done, remaining, eos, *extra,
+                    jax.random.fold_in(rng, i))
+                return (nxt, caches, pos, done, remaining), nxt
+
+            (tok, caches, pos, done, remaining), toks = jax.lax.scan(
+                body, (tok, caches, pos, done, remaining),
+                jnp.arange(n, dtype=jnp.int32))
+            return toks, caches, pos, done, remaining
+
+        tokn = P(None, *tuple(tok1))
+
+        def build_decode(n):
+            return jax.jit(
+                sm(partial(decode_n, n=n),
+                   in_specs=(pspecs, tok1, cspec, slot, slot, slot, slot,
+                             *extra_specs, P()),
+                   out_specs=(tokn, cspec, slot, slot, slot)),
+                donate_argnums=donate,
+            )
+
+        return build_decode
+
     def _cb(self):
         """Lazily-built slot-engine programs (prefill_into_slots + fused
         masked decode).  Separate from the wave programs so wave-only users
         pay no extra compile time."""
         if getattr(self, "_cb_built", None) is None:
-            if self.cfg.frontend is not None:
-                raise NotImplementedError(
-                    "slot engine does not support frontend features yet")
-            if self.parallel.kv_seq_shard:
-                raise ValueError("slot engine is incompatible with kv_seq_shard")
+            self._slot_gate()
             pspecs = M.param_specs(self.ctx)
             batch_spec, tok2, tok1, _, _ = self._specs()
             cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
@@ -270,32 +374,10 @@ class Engine:
             )
 
             dec = make_slot_decode_step(self.ctx, self.sampling)
-
-            def decode_n(params, tok, caches, pos, done, remaining, eos, rng, *, n):
-                def body(carry, i):
-                    tok, caches, pos, done, remaining = carry
-                    nxt, caches, pos, done, remaining = dec(
-                        params, tok, caches, pos, done, remaining, eos,
-                        jax.random.fold_in(rng, i))
-                    return (nxt, caches, pos, done, remaining), nxt
-
-                (tok, caches, pos, done, remaining), toks = jax.lax.scan(
-                    body, (tok, caches, pos, done, remaining),
-                    jnp.arange(n, dtype=jnp.int32))
-                return toks, caches, pos, done, remaining
-
-            tokn = P(None, *tuple(tok1))
-
-            def build_decode(n):
-                return jax.jit(
-                    sm(partial(decode_n, n=n),
-                       in_specs=(pspecs, tok1, cspec, slot, slot, slot, slot, P()),
-                       out_specs=(tokn, cspec, slot, slot, slot)),
-                    donate_argnums=donate,
-                )
-
-            self._cb_built = {"prefill": prefill, "decode": {},
-                              "build_decode": build_decode}
+            self._cb_built = {
+                "prefill": prefill, "decode": {},
+                "build_decode": self._slot_decode_builder(dec, cspec),
+            }
         return self._cb_built
 
     def init_slot_caches(self, n_slots: int):
@@ -327,6 +409,92 @@ class Engine:
             self.params, tok, caches, jnp.asarray(pos, jnp.int32),
             jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
             jnp.asarray(eos, jnp.int32), rng)
+
+    # -- paged KV backend (slot engine, second storage layout) -------------
+    def _cb_paged(self):
+        """Lazily-built paged slot programs.  Same gating and decode
+        scaffolding as the dense slot engine; the block table rides as an
+        extra sharded operand."""
+        if getattr(self, "_cbp_built", None) is None:
+            self._slot_gate()
+            pspecs = M.param_specs(self.ctx)
+            batch_spec, tok2, tok1, _, _ = self._specs()
+            cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                         batched_pos=True)
+            sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+            slot = P(*batch_spec)
+            btspec = P(*batch_spec, None)
+            donate = (2,) if self.parallel.zero_copy else ()
+
+            prefill = {
+                wp: jax.jit(
+                    sm(make_paged_prefill_step(self.ctx, self.sampling,
+                                               with_prefix=wp),
+                       in_specs=(pspecs, tok2, cspec, slot, slot, slot, slot,
+                                 btspec, P()),
+                       out_specs=(tok1, cspec)),
+                    donate_argnums=donate,
+                )
+                for wp in (False, True)
+            }
+
+            dec = make_paged_decode_step(self.ctx, self.sampling)
+            self._cbp_built = {
+                "prefill": prefill, "decode": {},
+                "build_decode": self._slot_decode_builder(
+                    dec, cspec, extra_specs=(btspec,)),
+            }
+        return self._cbp_built
+
+    def init_paged_caches(self, n_slots: int, n_blocks: int, block_size: int):
+        """Paged cache pytree: per-shard block pools assembled into global
+        arrays.  The pool's block dim shards over the data axis (each shard
+        owns an independent block namespace incl. its null block 0)."""
+        dp_total = self.ctx.dist.dp * self.ctx.dist.pods
+        if n_slots % dp_total:
+            raise ValueError(f"n_slots {n_slots} must divide dp*pods {dp_total}")
+        if n_blocks % dp_total:
+            raise ValueError(f"n_blocks {n_blocks} must divide dp*pods {dp_total}")
+        b_local, nb_local = n_slots // dp_total, n_blocks // dp_total
+        cspecs = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                      batched_pos=True)
+        make = jax.jit(compat.shard_map(
+            lambda: M.init_caches(self.ctx, b_local, self.max_len,
+                                  batched_pos=True,
+                                  paged=(nb_local, block_size)),
+            mesh=self.mesh, in_specs=(), out_specs=cspecs, check_vma=False,
+        ))
+        return make()
+
+    def prefill_into_slots_paged(self, caches, tokens, admit, plens, starts,
+                                 total_lens, block_tables, rng):
+        """Paged admission.  ``tokens`` (B, Lp) hold each row's prompt
+        SUFFIX (the whole prompt when nothing is cached); ``starts`` (B,)
+        the absolute offset of that suffix; ``block_tables`` (B, nbps) the
+        write tables (null rows for un-admitted slots).  Two jitted
+        variants: the no-prefix program's attention math is identical to the
+        dense slot engine; the with-prefix program attends each slot's
+        gathered view."""
+        cb = self._cb_paged()
+        starts = jnp.asarray(starts, jnp.int32)
+        with_prefix = bool(np.asarray(starts).any())
+        return cb["prefill"][with_prefix](
+            self.params, jnp.asarray(tokens), caches,
+            jnp.asarray(admit, bool), jnp.asarray(plens, jnp.int32), starts,
+            jnp.asarray(total_lens, jnp.int32),
+            jnp.asarray(block_tables, jnp.int32), rng)
+
+    def decode_slots_paged(self, caches, tok, pos, done, remaining, eos,
+                           block_tables, rng, *, n=1):
+        """``n`` fused masked decode steps through the block tables."""
+        cb = self._cb_paged()
+        if n not in cb["decode"]:
+            cb["decode"][n] = cb["build_decode"](n)
+        return cb["decode"][n](
+            self.params, tok, caches, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
+            jnp.asarray(eos, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+            rng)
 
     # -- API ------------------------------------------------------------
     def init_caches(self, batch: int, *, batched_pos: bool = False):

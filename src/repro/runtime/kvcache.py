@@ -1,4 +1,4 @@
-"""Cache partition specs + cache utilities.
+"""Cache partition specs + cache utilities + the paged-KV block allocator.
 
 Cache pytrees are built by ``models.model.init_caches``; leaves are named
 dict keys with fixed layouts, so partition specs are assigned by key:
@@ -15,10 +15,25 @@ With ``kv_seq_shard`` (long_500k: batch 1, cache sequence sharded over the
 data axis) the attention-cache sequence dim takes "data" and batch is
 replicated; recurrent state stays tiny and batch-replicated.
 Scanned groups prepend a None (layer-stack) axis.
+
+Paged layout (second storage backend, slot engine only) keeps the SAME leaf
+keys but pool shapes: k/v become a global block pool
+(n_blocks, local_kv, block_size, hd) (ckv/krope: (n_blocks, block_size, r)),
+addressed through a per-slot block table (b, blocks_per_slot) carried
+OUTSIDE the cache pytree (it is host-managed and changes per call).  Since
+the pool's block dim shards over the data axis exactly like the dense batch
+dim, and every leaf keeps its ndim, the dense pspecs apply verbatim —
+``cache_pspecs(batched_pos=True)`` covers both layouts.  Position arrays
+stay per-slot dense (b, S_view), so validity masking is identical to the
+dense engine.  Blocks are handed out, refcounted, and freed by the
+host-side :class:`BlockAllocator`; block 0 of every data shard is reserved
+as the *null block* — a write sink for empty/out-of-range rows that is
+never validly read (dead by position masking).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +43,12 @@ from repro.models import model as M
 from repro.models import transformer as tfm
 
 Pytree = Any
+
+NULL_BLOCK = 0   # reserved per-shard write sink; never allocated, never valid
+
+# pool-shaped leaves (paged layout): selected whole from the scatter-written
+# `new` tree by merge_slots(paged=True) instead of per-row merging
+POOL_KEYS = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
 
 
 def _leaf_spec(key: str, ndim: int, dist, kv_seq_shard: bool, stacked: bool,
@@ -126,13 +147,22 @@ def _expand_over(mask, leaf, stacked):
     return mask.reshape(shape)
 
 
-def reset_slots(caches: Tuple, groups, mask: jax.Array) -> Tuple:
+def reset_slots(caches: Tuple, groups, mask: jax.Array,
+                *, paged: bool = False) -> Tuple:
     """Clear the slots selected by ``mask`` (b,) bool for a fresh request.
 
     Positions go to -1 (masking every stale K/V entry without touching the
     K/V bytes) and recurrent state (SSM h, LRU h, conv tails) zeroes, since
     prefill integrates state from t=0.  K/V payloads stay: they are dead by
-    position masking and get overwritten as the new request progresses."""
+    position masking and get overwritten as the new request progresses.
+    Dense int8 scale leaves zero alongside: a dead dequantized entry then
+    reads exactly 0 instead of stale-scale garbage (masked either way, but
+    bounded values keep the score matmul's masked lanes tame — and a fresh
+    slot starts bit-identical to a fresh wave cache).
+
+    ``paged=True``: position/recurrent leaves are per-slot rows there too,
+    but scale (and K/V) leaves are block pools — their stale blocks become
+    unreachable by table surgery on the host, so they are left alone."""
 
     def f(key, leaf, stacked):
         if key == "pos":
@@ -140,6 +170,9 @@ def reset_slots(caches: Tuple, groups, mask: jax.Array) -> Tuple:
                 raise ValueError("reset_slots needs batched_pos caches")
             return jnp.where(_expand_over(mask, leaf, stacked), -1, leaf)
         if key in ("h", "conv"):
+            return jnp.where(_expand_over(mask, leaf, stacked),
+                             jnp.zeros((), leaf.dtype), leaf)
+        if key in ("k_scale", "v_scale") and not paged:
             return jnp.where(_expand_over(mask, leaf, stacked),
                              jnp.zeros((), leaf.dtype), leaf)
         return leaf
@@ -167,12 +200,160 @@ def mask_prompt_padding(caches: Tuple, groups, plens: jax.Array) -> Tuple:
     return _map_by_key(caches, groups, f)
 
 
-def merge_slots(old: Tuple, new: Tuple, groups, mask: jax.Array) -> Tuple:
-    """Per-slot select: rows where ``mask`` is True come from ``new``."""
+def merge_slots(old: Tuple, new: Tuple, groups, mask: jax.Array,
+                *, paged: bool = False) -> Tuple:
+    """Per-slot select: rows where ``mask`` is True come from ``new``.
 
-    def walk(o, n, stacked):
+    ``paged=True``: pool-shaped leaves (k/v/scales/ckv/krope) have no batch
+    axis to row-select — the prefill scatter already confined their writes
+    to the admitted slots' blocks (un-admitted rows write through a
+    null-block table), so the new pool is taken whole.  Per-slot leaves
+    (pos, recurrent h/conv) merge per row exactly as in the dense layout."""
+
+    def walk(key, o, n, stacked):
         if isinstance(o, dict):
-            return {k: walk(o[k], n[k], stacked) for k in o}
+            return {k: walk(k, o[k], n[k], stacked) for k in o}
+        if paged and key in POOL_KEYS:
+            return n
         return jnp.where(_expand_over(mask, o, stacked), n, o)
 
-    return tuple(walk(go, gn, g.n > 1) for g, go, gn in zip(groups, old, new))
+    return tuple(walk(None, go, gn, g.n > 1)
+                 for g, go, gn in zip(groups, old, new))
+
+
+def set_paged_positions(caches: Tuple, groups, total_lens: jax.Array) -> Tuple:
+    """Rewrite every pos leaf row to [0..total_lens[b]) valid, -1 beyond.
+
+    In the paged layout a slot's view index IS its absolute position, and
+    after an admission prefill (shared prefix blocks + freshly-written
+    suffix) exactly the first ``total_lens[b]`` view positions hold real
+    K/V.  This replaces the dense path's _write_prefill position writes +
+    mask_prompt_padding in one shot; merge_slots then keeps the rewritten
+    rows only for admitted slots."""
+
+    def f(key, leaf, stacked):
+        if key != "pos":
+            return leaf
+        S = leaf.shape[-1]
+        idx = jnp.arange(S, dtype=jnp.int32)
+        row = jnp.where(idx[None, :] < total_lens[:, None], idx[None, :], -1)
+        return jnp.broadcast_to(row if not stacked else row[None], leaf.shape)
+
+    return _map_by_key(caches, groups, f)
+
+
+# ---------------------------------------------------------------------------
+# Host-side block allocator (paged KV)
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Hands out, refcounts, and frees KV blocks; tracks reusable prefixes.
+
+    The pool's block dim is sharded over the data axis, so the allocator
+    manages one independent namespace per data shard: a slot living on
+    shard ``d`` may only reference that shard's local blocks (block-table
+    rows are split by shard_map and index the local pool directly).  Local
+    block 0 of every shard is the reserved null block.
+
+    Prefix reuse is vLLM-style hash chaining: full block ``i`` of a prompt
+    is keyed by ``h_i = hash((h_{i-1}, tokens[i*bs:(i+1)*bs]))``, so a hit
+    guarantees the whole chain matches.  Registered blocks are immutable by
+    construction — decode only ever writes into a request's partial tail
+    block, which is never registered — which is what makes copy-on-write
+    sharing free: a block is either full-and-shared or private-and-mutable,
+    never both.  A cache entry lives exactly as long as its block has a
+    nonzero refcount (freeing the last reference evicts the entry), so a
+    matched block can always be increfed without revalidation.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1):
+        if n_blocks % n_shards:
+            raise ValueError(f"n_blocks {n_blocks} must divide shards {n_shards}")
+        per = n_blocks // n_shards
+        if per < 2:
+            raise ValueError("need >= 2 blocks per shard (one is the null block)")
+        self.block_size = block_size
+        self.n_shards = n_shards
+        self.blocks_per_shard = per
+        self._free = [deque(range(1, per)) for _ in range(n_shards)]
+        self._ref: List[Dict[int, int]] = [{} for _ in range(n_shards)]
+        # (shard, chain_hash) -> (block id, the block's exact tokens);
+        # (shard, block id) -> chain_hash for eviction
+        self._prefix: Dict[Tuple[int, int], Tuple[int, Tuple[int, ...]]] = {}
+        self._prefix_of: Dict[Tuple[int, int], int] = {}
+
+    # -- accounting -------------------------------------------------------
+    def free_count(self, shard: int = 0) -> int:
+        return len(self._free[shard])
+
+    def used_count(self, shard: int = 0) -> int:
+        return len(self._ref[shard])
+
+    def total_used(self) -> int:
+        return sum(len(r) for r in self._ref)
+
+    def refcount(self, shard: int, block: int) -> int:
+        return self._ref[shard].get(block, 0)
+
+    # -- alloc / free -----------------------------------------------------
+    def alloc(self, shard: int, n: int) -> Optional[List[int]]:
+        """n fresh blocks (refcount 1), or None — never a partial grant."""
+        if n > len(self._free[shard]):
+            return None
+        out = [self._free[shard].popleft() for _ in range(n)]
+        for b in out:
+            self._ref[shard][b] = 1
+        return out
+
+    def incref(self, shard: int, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            self._ref[shard][b] += 1
+
+    def free(self, shard: int, blocks: Sequence[int]) -> None:
+        """Drop one reference per block; refcount 0 returns it to the free
+        list and evicts its prefix-cache entry."""
+        for b in blocks:
+            c = self._ref[shard][b] - 1
+            if c:
+                self._ref[shard][b] = c
+                continue
+            del self._ref[shard][b]
+            h = self._prefix_of.pop((shard, b), None)
+            if h is not None:
+                self._prefix.pop((shard, h), None)
+            self._free[shard].append(b)
+
+    # -- prefix cache -----------------------------------------------------
+    @staticmethod
+    def _chain(tokens, block_size: int):
+        """-> (chain hash, this block's exact tokens) per full block."""
+        h = 0
+        for i in range(len(tokens) // block_size):
+            blk = tuple(int(t) for t in
+                        tokens[i * block_size:(i + 1) * block_size])
+            h = hash((h, blk))
+            yield h, blk
+
+    def match_prefix(self, shard: int, tokens) -> Tuple[List[int], int]:
+        """Longest chain of already-resident full blocks covering a prefix
+        of ``tokens`` -> (block ids, tokens covered).  Does NOT incref.
+        Hash hits are verified against the stored block tokens — a hash()
+        collision must never silently serve another prompt's K/V."""
+        blocks: List[int] = []
+        for h, blk in self._chain(tokens, self.block_size):
+            hit = self._prefix.get((shard, h))
+            if hit is None or hit[1] != blk:
+                break
+            blocks.append(hit[0])
+        return blocks, len(blocks) * self.block_size
+
+    def register_prefix(self, shard: int, tokens, blocks: Sequence[int]) -> None:
+        """Publish ``blocks`` (the prompt's full blocks, freshly prefilled
+        or matched) under the token chain; existing entries win (the chain
+        prefix property means they hold identical K/V)."""
+        for (h, blk), b in zip(self._chain(tokens, self.block_size), blocks):
+            if (shard, h) in self._prefix:
+                continue
+            self._prefix[(shard, h)] = (b, blk)
+            self._prefix_of[(shard, b)] = h

@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.models.common import pad_to
+from repro.runtime import kvcache
 from repro.runtime.engine import Engine
 
 
@@ -179,7 +180,7 @@ class ContinuousScheduler:
         self.stats = {
             "decode_steps": 0, "slot_steps": 0, "active_slot_steps": 0,
             "emitted": 0, "admission_rounds": 0, "in_flight_admissions": 0,
-            "prefill_calls": 0,
+            "prefill_calls": 0, "prefill_tokens": 0,
         }
 
     # -- submission -------------------------------------------------------
@@ -251,7 +252,12 @@ class ContinuousScheduler:
             r.stats["admitted_step"] = self.step_count
         new_tok, self.caches = self.engine.prefill_into_slots(
             self.caches, tokens, admit, plens, self._next_rng())
-        new_tok = np.array(new_tok)
+        self.stats["prefill_tokens"] += int(plens[admit].sum())
+        self._finish_admission(free, chosen, admit, np.array(new_tok), in_flight)
+        return len(chosen)
+
+    def _finish_admission(self, free, chosen, admit, new_tok, in_flight) -> None:
+        """Shared post-prefill host bookkeeping (dense and paged)."""
         self.tok = np.where(admit, new_tok, self.tok)
         for slot, r in zip(free, chosen):
             t = int(new_tok[slot])
@@ -269,12 +275,20 @@ class ContinuousScheduler:
         self.stats["prefill_calls"] += 1
         if in_flight:
             self.stats["in_flight_admissions"] += len(chosen)
-        return len(chosen)
 
-    def _decode_block(self, n: int) -> None:
-        toks, self.caches, pos, done, remaining = self.engine.decode_slots(
+    def _run_decode(self, n: int):
+        """Engine dispatch for one fused block (overridden by the paged
+        backend to thread block tables)."""
+        return self.engine.decode_slots(
             self.caches, self.tok, self.pos, self.dones, self.remaining,
             self.eos, self._next_rng(), n=n)
+
+    def _ensure_capacity(self, n: int) -> None:
+        """Pre-decode capacity hook (paged backend: block allocation)."""
+
+    def _decode_block(self, n: int) -> None:
+        self._ensure_capacity(n)
+        toks, self.caches, pos, done, remaining = self._run_decode(n)
         toks = np.asarray(toks)                              # (n, B)
         # replay the device's masking rule to tell real emissions from
         # frozen-slot repeats; final state must agree with the device's
@@ -333,12 +347,30 @@ class ContinuousScheduler:
             n *= 2
         return n
 
+    def request_summary(self) -> Dict:
+        """Aggregate per-request latency stats (TTFT + queue wait) over the
+        completed set — the per-request numbers live in ``Request.stats``."""
+        out: Dict = {"requests": len(self.done)}
+        for key in ("ttft_s", "queue_s"):
+            vals = sorted(r.stats[key] for r in self.done if key in r.stats)
+            if not vals:
+                continue
+            out[key] = {
+                "mean": float(np.mean(vals)),
+                "p50": float(vals[len(vals) // 2]),
+                "max": float(vals[-1]),
+            }
+        return out
+
+    def _init_caches(self) -> None:
+        self.caches = self.engine.init_slot_caches(self.B)
+
     # -- main loop --------------------------------------------------------
     def run(self) -> List[Request]:
         """Serve until queue and slots drain; returns requests in completion
         order."""
         if self.caches is None:
-            self.caches = self.engine.init_slot_caches(self.B)
+            self._init_caches()
         while True:
             self._retire()
             self._admit()
@@ -353,3 +385,268 @@ class ContinuousScheduler:
             self._decode_block(n)
         self._retire()
         return self.done
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous batching (block-table backend)
+# ---------------------------------------------------------------------------
+
+
+class PagedContinuousScheduler(ContinuousScheduler):
+    """Continuous batching over the paged KV backend.
+
+    Same admit -> step -> retire loop as the dense slot engine, plus
+    host-side block management (``kvcache.BlockAllocator``):
+
+    * **block-aware admission** — a request is admitted only when enough
+      free blocks exist for its full prompt (+ matched shared-prefix blocks
+      are referenced instead of re-prefilled: the suffix alone is computed,
+      which is where the prefill-token saving comes from);
+    * **incremental allocation** — decode claims the next block only when a
+      slot's position crosses a block boundary, so resident memory tracks
+      ACTUAL occupancy, not ``n_slots x max_seq``;
+    * **preempt-to-requeue** — if the pool is exhausted mid-decode, the
+      youngest running request is evicted (blocks freed, request requeued
+      for recompute-on-readmission) instead of corrupting the pool;
+    * **prefix reuse** — full prompt blocks are published to the allocator's
+      hash-chained prefix cache after prefill and dropped when their last
+      reference dies.  Only for attention-pure models: recurrent state is
+      position-integrated and cannot be grafted from another slot's history.
+
+    ``n_blocks`` defaults to the dense-equivalent footprint
+    (n_slots x blocks/slot + nulls); size it SMALLER to overcommit capacity
+    against short-request traffic (that is the point of paging).
+    """
+
+    def __init__(self, engine: Engine, n_slots: int, pad_id: int = 0,
+                 block_steps: int = 8, min_bucket: int = 8,
+                 responsive_blocks: bool = False,
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 *, block_size: Optional[int] = None,
+                 n_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 on_preempt: Optional[Callable[[int], None]] = None):
+        super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
+                         responsive_blocks, on_token)
+        cfg = engine.cfg
+        if cfg.window and "local_attn" in cfg.layer_pattern:
+            raise ValueError(
+                "paged KV does not support sliding-window ring caches yet — "
+                "windowed archs stay on the dense slot engine")
+        self.has_attn = any(k in ("attn", "local_attn")
+                            for k in cfg.layer_pattern)
+        block_size = block_size or engine.parallel.kv_block_size
+        self.bs = block_size
+        self.view_blocks = -(-engine.max_len // block_size)
+        self.n_shards = engine.ctx.dist.dp * engine.ctx.dist.pods
+        if n_slots % self.n_shards:
+            raise ValueError(f"n_slots {n_slots} must divide data shards "
+                             f"{self.n_shards}")
+        self.on_preempt = on_preempt
+        if n_blocks is None:
+            n_blocks = engine.parallel.kv_pool_blocks or None
+        if n_blocks is None:
+            n_blocks = n_slots * self.view_blocks + self.n_shards
+        self.alloc = kvcache.BlockAllocator(n_blocks, block_size,
+                                            n_shards=self.n_shards)
+        self.n_blocks = n_blocks
+        self.prefix_cache = (prefix_cache and self.has_attn
+                             and all(k in ("attn", "local_attn")
+                                     for k in cfg.layer_pattern))
+        # per-slot block table (LOCAL ids; shard_map splits rows by shard);
+        # unallocated entries point at the null block 0
+        self.bt = np.zeros((n_slots, self.view_blocks), np.int32)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+        self.stats.update({
+            "prefill_tokens_saved": 0, "preemptions": 0,
+            "shared_block_hits": 0, "blocks_hwm": 0, "blocks_in_use": 0,
+            "deferred_admissions": 0,
+        })
+
+    # -- geometry ---------------------------------------------------------
+    def _shard_of(self, slot: int) -> int:
+        return slot // (self.B // self.n_shards)
+
+    def _note_usage(self) -> None:
+        used = self.alloc.total_used()
+        self.stats["blocks_in_use"] = used
+        self.stats["blocks_hwm"] = max(self.stats["blocks_hwm"], used)
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
+        prompt = np.asarray(prompt)
+        need = -(-(len(prompt) + max_new) // self.bs)
+        usable = self.alloc.blocks_per_shard - 1
+        if self.has_attn and need > usable:
+            raise ValueError(
+                f"request needs {need} blocks > per-shard pool {usable}")
+        return super().submit(prompt, max_new, eos_id, arrival_step)
+
+    def _init_caches(self) -> None:
+        self.caches = self.engine.init_paged_caches(
+            self.B, self.n_blocks, self.bs)
+
+    # -- block management -------------------------------------------------
+    def _release_slot(self, i: int) -> None:
+        if self.slot_blocks[i]:
+            self.alloc.free(self._shard_of(i), self.slot_blocks[i])
+            self.slot_blocks[i] = []
+        self.bt[i, :] = kvcache.NULL_BLOCK
+        self._note_usage()
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s.req is not None and self.dones[i]:
+                self._release_slot(i)
+        super()._retire()
+
+    def _preempt_youngest(self, shard: int) -> bool:
+        """Evict the most recently admitted running request on ``shard``:
+        free its blocks, requeue it (recompute on readmission) at the queue
+        head.  Its generated-so-far tokens are DISCARDED (recompute restarts
+        from the prompt): the emitted counter rolls back, and streaming
+        clients are told via ``on_preempt(rid)`` to drop what they buffered
+        for that request — under stochastic sampling the regenerated stream
+        need not match the discarded one."""
+        cand = [i for i, s in enumerate(self.slots)
+                if s.req is not None and not self.dones[i]
+                and self.remaining[i] > 0 and self._shard_of(i) == shard]
+        if not cand:
+            return False
+        i = max(cand, key=lambda j: (self.slots[j].admitted_step,
+                                     self.slots[j].req.rid))
+        req = self.slots[i].req
+        self.stats["emitted"] -= len(self.slots[i].toks)
+        self._release_slot(i)
+        self.slots[i] = _Slot()
+        self.dones[i] = True
+        self.remaining[i] = 0
+        req.stats["preempted"] = req.stats.get("preempted", 0) + 1
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+        if self.on_preempt is not None:
+            self.on_preempt(req.rid)
+        return True
+
+    def _grow_slot(self, i: int, n_needed: int) -> bool:
+        """Extend slot i's table to cover ``n_needed`` blocks; False if the
+        pool cannot supply them."""
+        have = len(self.slot_blocks[i])
+        if n_needed <= have:
+            return True
+        fresh = self.alloc.alloc(self._shard_of(i), n_needed - have)
+        if fresh is None:
+            return False
+        for j, b in enumerate(fresh, start=have):
+            self.bt[i, j] = b
+        self.slot_blocks[i].extend(fresh)
+        self._note_usage()
+        return True
+
+    def _ensure_capacity(self, n: int) -> None:
+        """Before a fused block of ``n`` decode steps, every active slot
+        must own blocks covering its writes at pos..pos+min(n, remaining)-1
+        (a slot that finishes mid-block freezes; its frozen rewrites are
+        covered or harmlessly redirected to the null block).  Allocation
+        failure preempts the youngest request on the starved shard and
+        retries — the pool is never over-referenced."""
+        if not self.has_attn:       # recurrent-only: no pools, nothing to own
+            return
+        i = 0
+        while i < len(self.slots):
+            s = self.slots[i]
+            if s.req is None or self.dones[i] or self.remaining[i] <= 0:
+                i += 1
+                continue
+            steps = min(n, int(self.remaining[i]))
+            need = -(-(int(self.pos[i]) + steps) // self.bs)
+            if self._grow_slot(i, need):
+                i += 1
+                continue
+            if not self._preempt_youngest(self._shard_of(i)):
+                raise RuntimeError("paged pool exhausted with nothing to preempt")
+            # re-check slot i (it may itself have been the one evicted)
+
+    def _run_decode(self, n: int):
+        return self.engine.decode_slots_paged(
+            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.eos, self.bt, self._next_rng(), n=n)
+
+    # -- admission --------------------------------------------------------
+    def _admit(self) -> int:
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
+        if not free or not arrived:
+            return 0
+        in_flight = any(s.req is not None and not self.dones[i]
+                        for i, s in enumerate(self.slots))
+        # block-aware selection: FIFO over arrivals, stop at the first
+        # request whose blocks don't fit (no reordering under pressure)
+        chosen, starts_of = [], {}
+        for r, slot in zip(arrived, free):
+            if not self.has_attn:   # recurrent-only: no pools to reserve
+                starts_of[r.rid] = 0
+                chosen.append(r)
+                continue
+            shard = self._shard_of(slot)
+            plen = len(r.prompt)
+            shared, n_cached = [], 0
+            if self.prefix_cache:
+                shared, n_cached = self.alloc.match_prefix(shard, r.prompt)
+                while n_cached > plen - 1:   # keep >=1 suffix token to run
+                    shared = shared[:-1]
+                    n_cached -= self.bs
+            need = -(-plen // self.bs) - len(shared)
+            fresh = self.alloc.alloc(shard, need)
+            if fresh is None:
+                self.stats["deferred_admissions"] += 1
+                break
+            if shared:
+                self.alloc.incref(shard, shared)
+                self.stats["shared_block_hits"] += len(shared)
+            blocks = shared + fresh
+            self.slot_blocks[slot] = blocks
+            self.bt[slot, :] = kvcache.NULL_BLOCK
+            self.bt[slot, :len(blocks)] = blocks
+            starts_of[r.rid] = n_cached
+            chosen.append(r)
+        if not chosen:
+            return 0
+        self._note_usage()
+        for r in chosen:
+            self.queue.remove(r)
+        Lp = self._bucket(max(len(r.prompt) - starts_of[r.rid] for r in chosen))
+        tokens = np.full((self.B, Lp), self.pad_id, np.int32)
+        admit = np.zeros((self.B,), bool)
+        plens = np.ones((self.B,), np.int32)
+        starts = np.zeros((self.B,), np.int32)
+        totals = np.ones((self.B,), np.int32)
+        now = time.monotonic()
+        for slot, r in zip(free, chosen):
+            suffix = r.prompt[starts_of[r.rid]:]
+            tokens[slot, : len(suffix)] = suffix
+            admit[slot] = True
+            plens[slot] = len(suffix)
+            starts[slot] = starts_of[r.rid]
+            totals[slot] = len(r.prompt)
+            self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
+            r.stats["queue_s"] = now - r.submitted_at
+            r.stats["admitted_step"] = self.step_count
+            r.stats["prefill_tokens_saved"] = starts_of[r.rid]
+            self.stats["prefill_tokens"] += len(suffix)
+            self.stats["prefill_tokens_saved"] += starts_of[r.rid]
+        # write table: un-admitted rows are nulled so the full-width prefill
+        # scatter cannot touch a live slot's blocks (their pad-token K/V
+        # sinks into the null block; their forward output is discarded)
+        bt_w = np.where(admit[:, None], self.bt, kvcache.NULL_BLOCK).astype(np.int32)
+        new_tok, self.caches = self.engine.prefill_into_slots_paged(
+            self.caches, tokens, admit, plens, starts, totals, bt_w,
+            self._next_rng())
+        # publish the freshly-prefilled full prompt blocks for reuse
+        if self.prefix_cache:
+            for slot, r in zip(free, chosen):
+                n_full = len(r.prompt) // self.bs
+                self.alloc.register_prefix(self._shard_of(slot), r.prompt,
+                                           self.slot_blocks[slot][:n_full])
+        self._finish_admission(free, chosen, admit, np.array(new_tok), in_flight)
+        return len(chosen)

@@ -62,6 +62,41 @@ def test_decode_attention_sweep(b, hq, hkv, S, hd, dtype):
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("b,hq,hkv,bs,nbps,hd", [
+    (1, 4, 4, 16, 4, 64), (2, 8, 2, 8, 6, 64), (3, 4, 1, 32, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_dense_kernel(b, hq, hkv, bs, nbps, hd,
+                                                     dtype):
+    """Pool + block-table gather (scalar-prefetch index maps) must agree
+    with the dense kernel run on the gathered view, including a fully-dead
+    trailing block (per-block masking skips its flash update)."""
+    S = nbps * bs
+    ks = jax.random.split(jax.random.key(b * S + hd), 3)
+    nb = 1 + b * nbps
+    kp = jax.random.normal(ks[0], (nb, hkv, bs, hd)).astype(dtype)
+    vp = jax.random.normal(ks[1], (nb, hkv, bs, hd)).astype(dtype)
+    rng = np.random.default_rng(S)
+    bt = jnp.asarray(rng.permutation(np.arange(1, nb))[: b * nbps]
+                     .reshape(b, nbps).astype(np.int32))
+    q = jax.random.normal(ks[2], (b, hq, 1, hd)).astype(dtype)
+    lens = rng.integers(1, S - bs + 1, size=b)       # last block fully dead
+    valid = jnp.asarray(np.arange(S)[None, :] < lens[:, None])
+    scale = 1.0 / np.sqrt(hd)
+    m1, l1, a1 = ops.paged_decode_attention(q, kp, vp, bt, valid, scale)
+    view = jnp.take(kp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+    vview = jnp.take(vp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+    o1 = np.asarray(a1) / np.maximum(np.asarray(l1)[..., None], 1e-30)
+    tol = 1e-5 if dtype == jnp.float32 else 0.03
+    for bi in range(b):      # dense kernel takes a shared (S,) mask: per row
+        m2, l2, a2 = ops.decode_attention_partial(
+            q[bi:bi + 1], view[bi:bi + 1], vview[bi:bi + 1], valid[bi], scale)
+        o2 = np.asarray(a2) / np.maximum(np.asarray(l2)[..., None], 1e-30)
+        np.testing.assert_allclose(o1[bi:bi + 1], o2, atol=tol, rtol=tol)
+        np.testing.assert_allclose(np.asarray(m1)[bi:bi + 1], np.asarray(m2),
+                                   atol=tol, rtol=tol)
+
+
 def test_decode_attention_fully_masked_shard():
     """Seq-sharded decode: an all-invalid shard must contribute zero weight."""
     q = jnp.ones((1, 2, 1, 64))
