@@ -1,0 +1,190 @@
+"""Chunked prefill: kernel microbench + decode-stall serving bench.
+
+Two measurements, one machine-readable artifact (BENCH_prefill.json):
+
+1. **flash vs scan prefill** — the fused Pallas flash-prefill kernel against
+   the pure-JAX ``chunked_causal_attention`` streaming-softmax scan on one
+   prefill attention shape (tok/s through the attention op).  NOTE: on this
+   CPU container Pallas runs in interpret mode (the kernel body executes in
+   Python), so the scan wins wall-clock here — the number documents the
+   overhead honestly; the kernel's value is the fused single-pass program
+   that lowers to Mosaic on a real TPU.
+
+2. **decode-stall elimination** — a long-prompt/short-decode serving mix on
+   the slot engine, chunked admission (fused mixed prefill/decode steps)
+   vs whole-prompt admission.  The metric is decode inter-token latency
+   DURING ADMISSION WINDOWS (p50/p95/max): whole-prompt admission stalls
+   every in-flight decode for the full prompt's prefill; chunked admission
+   bounds the stall at one chunk.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_prefill.py
+(--no-json to skip writing BENCH_prefill.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_prefill.json")
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel micro: flash vs scan
+# ---------------------------------------------------------------------------
+
+
+def bench_kernel(b=1, hq=8, hkv=2, S=256, hd=64, iters=5):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models.attention import chunked_causal_attention
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, S, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, hkv, S, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, hkv, S, hd), jnp.bfloat16)
+    qpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (b, S))
+    pos1 = jnp.arange(S, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(hd)
+
+    scan = jax.jit(lambda q, k, v: chunked_causal_attention(
+        q, k, v, pos1, pos1, 0, scale))
+
+    def timed(fn, *args):
+        fn(*args).block_until_ready()          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    t_scan = timed(scan, q, k, v)
+    t_flash = timed(lambda q, k, v: ops.flash_prefill(q, k, v, qpos, scale),
+                    q, k, v)
+    toks = b * S
+    rec = {
+        "shape": {"b": b, "hq": hq, "hkv": hkv, "S": S, "hd": hd},
+        "scan_s": t_scan, "flash_s": t_flash,
+        "scan_tok_per_s": toks / t_scan, "flash_tok_per_s": toks / t_flash,
+        "interpret_mode": True,
+    }
+    print(f"kernel     prefill attention {b}x{hq}x{S}x{hd}: "
+          f"scan {toks/t_scan:.0f} tok/s, flash(interpret) "
+          f"{toks/t_flash:.0f} tok/s "
+          f"(interpret-mode Python overhead; flash wins on real TPUs)")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# 2. serving: decode ITL during admission, chunked vs whole-prompt
+# ---------------------------------------------------------------------------
+
+
+def make_requests(cfg, n_requests, prompt_min, prompt_max, max_new,
+                  arrival_every, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(prompt_min, prompt_max + 1)))
+             .astype(np.int32), max_new, i * arrival_every)
+            for i in range(n_requests)]
+
+
+def run_serving(eng, reqs, n_slots, chunk):
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    # block_steps=1: every decode step is its own dispatch, so a prompt's
+    # admission stall lands on exactly one inter-token sample — the honest
+    # per-token-latency setting (fused blocks would dilute the stall across
+    # the block and hide exactly the effect this bench measures)
+    sched = ContinuousScheduler(eng, n_slots=n_slots, block_steps=1,
+                                prefill_chunk=chunk)
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    emitted = sum(len(r.output) for r in done)
+    summ = sched.request_summary()
+    rec = {
+        "prefill_chunk": chunk, "requests": len(done), "emitted": emitted,
+        "wall_s": dt, "tok_per_s": emitted / dt if dt > 0 else float("inf"),
+        "prefill_chunks": sched.stats["prefill_chunks"],
+        "chunked_admissions": sched.stats["chunked_admissions"],
+        "latency": summ,
+    }
+    return rec, {r.rid: r.output for r in done}
+
+
+def run(arch="yi-9b", n_requests=10, n_slots=3, prompt_min=384,
+        prompt_max=512, max_new=10, arrival_every=3, chunk=128, max_len=640):
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=max_len)
+    reqs = make_requests(cfg, n_requests, prompt_min, prompt_max, max_new,
+                         arrival_every)
+    # warm both paths (compile time out of the measurement)
+    warm = reqs[: n_slots + 1]
+    for c in (0, chunk):
+        run_serving(eng, warm, n_slots, c)
+
+    results, outputs = {}, {}
+    for name, c in (("whole", 0), ("chunked", chunk)):
+        results[name], outputs[name] = run_serving(eng, reqs, n_slots, c)
+    # the two admission modes must serve identical tokens
+    for rid in outputs["whole"]:
+        np.testing.assert_array_equal(outputs["whole"][rid],
+                                      outputs["chunked"][rid])
+    return results
+
+
+def main(emit=None, json_path=BENCH_JSON, **kw):
+    kernel_rec = bench_kernel()
+    results = run(**kw)
+    for name, rec in results.items():
+        lat = rec["latency"]
+        adm = lat.get("decode_itl_admission_s", {})
+        line = (f"{rec['requests']} reqs, {rec['emitted']} toks, "
+                f"{rec['wall_s']:.2f}s; decode ITL during admission "
+                f"p50 {adm.get('p50', 0)*1e3:.1f} ms, "
+                f"p95 {adm.get('p95', 0)*1e3:.1f} ms, "
+                f"max {adm.get('max', 0)*1e3:.1f} ms")
+        print(f"{name:8s} {line}", flush=True)
+        if emit is not None:
+            emit(f"prefill/{name}_itl_admission_p95",
+                 1e6 * adm.get("p95", 0), line)
+    w = results["whole"]["latency"]["decode_itl_admission_s"]
+    c = results["chunked"]["latency"]["decode_itl_admission_s"]
+    imp = w["p95"] / c["p95"] if c["p95"] > 0 else float("inf")
+    stall = w["max"] - c["max"]
+    print(f"admission-window decode ITL p95: {imp:.2f}x better chunked; "
+          f"max stall reduced by {stall*1e3:.1f} ms", flush=True)
+    if json_path:
+        payload = {
+            "meta": {"bench": "chunked_prefill",
+                     "itl_admission_p95_improvement": imp,
+                     "decode_stall_max_reduction_s": stall, **kw},
+            "kernel": kernel_rec,
+            "serving": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

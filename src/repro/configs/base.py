@@ -286,7 +286,18 @@ class ParallelConfig:
     one_shot_sync: bool = True  # §2.2 single psum for parallel-residual
     zero_copy: bool = True      # §2.3 donation + fused epilogue
     use_pallas: bool = False    # use Pallas kernels (interpret on CPU)
+    flash_prefill: bool = True  # fused Pallas flash-prefill kernel on the
+                                # prefill hot path (effective with
+                                # use_pallas; the pure-JAX scan remains the
+                                # reference + MLA/windowed fallback)
     kv_quant: bool = False      # int8 KV cache (per-head-per-slot scales)
+    # chunked prefill (continuous-batching schedulers): prompts longer than
+    # this many tokens are admitted chunk-by-chunk through the fused mixed
+    # prefill/decode step, so a long prompt never stalls in-flight decode
+    # for more than one chunk's worth of compute.  0 disables chunking
+    # (whole-prompt admission only); attention-pure GQA archs only — MLA,
+    # windowed, and recurrent families fall back automatically.
+    prefill_chunk: int = 256
     # paged KV cache (slot engine second storage backend; dense remains the
     # default and the only layout for wave mode).  PagedContinuousScheduler
     # reads these as its defaults; constructor args override.

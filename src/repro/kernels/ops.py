@@ -42,6 +42,26 @@ def paged_decode_attention(q, kp, vp, bt, valid, scale):
                                               interpret=INTERPRET)
 
 
+def flash_prefill(q, k, v, q_pos, scale):
+    """Fused causal flash-prefill: a (b, hq, Sq, hd) query block attends a
+    dense K/V stripe, row i valid against kv view index j iff
+    j <= q_pos[b, i].  Normalized output, one fused blockwise pass."""
+    from repro.kernels import prefill_attention as _pa
+
+    return _pa.flash_prefill(q, k, v, q_pos, float(scale),
+                             interpret=INTERPRET)
+
+
+def paged_flash_prefill(q, kp, vp, bt, q_pos, scale):
+    """Fused causal flash-prefill over the paged pool: K/V blocks are
+    dereferenced through the slot's block table (scalar prefetch), so the
+    dense per-slot view is never materialised."""
+    from repro.kernels import prefill_attention as _pa
+
+    return _pa.paged_flash_prefill(q, kp, vp, bt, q_pos, float(scale),
+                                   interpret=INTERPRET)
+
+
 def lru_scan(a, b, h0):
     """RG-LRU linear-recurrence scan: h_t = a_t h_{t-1} + b_t."""
     from repro.kernels import lru_scan as _ls

@@ -1,0 +1,243 @@
+"""Pallas TPU kernel: fused GQA flash-prefill over a causal query block.
+
+The prefill counterpart of ``decode_attention``: a block of query tokens
+attends causally over K/V with one fused blockwise-softmax pass instead of
+the pure-JAX ``chunked_causal_attention`` scan.  arXiv 2407.07304 (the
+sibling single-node paper) measures the fused flash prefill as the single
+largest prefill win on CPUs; this kernel is the TPU/Pallas expression of the
+same fusion, and serves the chunked-prefill serving path where a chunk of C
+prompt tokens attends the slot's cache stripe [0, start + C).
+
+Grid is (batch x kv_head, q_blocks, kv_blocks) with the kv dimension
+innermost: each step loads one (block_k, head_dim) K/V slab into VMEM and
+updates running (m, l, acc) flash statistics for the (block_q, g) query tile
+sharing that KV head.  Causality is positional: query row i (absolute
+position ``q_pos[i]``) attends kv view index j iff ``j <= q_pos[i]`` — on
+the chunked path view index == absolute position, so no separate validity
+mask is carried.  KV blocks that start beyond the tile's maximum query
+position skip their flash update entirely (dead-by-causality blocks cost no
+FLOPs; with chunked prefill that is every block past the chunk's end).
+
+Two variants share the kernel body:
+
+* dense stripe — K/V are (b, hkv, Sk, hd) contiguous stripes (fresh prompt
+  K/V, or the slot engine's dense cache);
+* paged — K/V live in (n_blocks, hkv, block_size, hd) pools addressed
+  through a per-slot block table, dereferenced by scalar-prefetch index
+  maps exactly like the paged decode kernel.
+
+Target: TPU; validated with interpret=True against the
+``chunked_causal_attention`` oracle (tests/test_chunked_prefill.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+NEG = -3.0e38
+
+
+def _flash_update(qp_ref, q_ref, k_ref, v_ref, ms_ref, ls_ref, as_ref,
+                  *, scale: float, kv0, bk: int, kv_limit: int):
+    """One (block_q, g) x (block_k,) flash step against running stats."""
+    qpos = qp_ref[...]                                    # (bq,)
+
+    @pl.when(kv0 <= jnp.max(qpos))
+    def _update():
+        q = q_ref[...].astype(jnp.float32)                # (bq, g, hd)
+        k = k_ref[...].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[...].astype(jnp.float32)
+        bq, g, hd = q.shape
+        s = jnp.dot(q.reshape(bq * g, hd), k.T,
+                    preferred_element_type=jnp.float32)
+        s = (s * scale).reshape(bq, g, bk)
+        kvpos = kv0 + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+        ok = (kvpos <= qpos[:, None, None]) & (kvpos < kv_limit)
+        s = jnp.where(ok, s, NEG)
+        m_prev = ms_ref[...]                              # (bq, g)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # explicit zeroing: on a fully-masked row exp(NEG - NEG) would be 1
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        ls_ref[...] = ls_ref[...] * corr + p.sum(axis=-1)
+        pv = jnp.dot(p.reshape(bq * g, bk), v,
+                     preferred_element_type=jnp.float32).reshape(bq, g, hd)
+        as_ref[...] = as_ref[...] * corr[..., None] + pv
+        ms_ref[...] = m_new
+
+
+def _prefill_kernel(qp_ref, q_ref, k_ref, v_ref, o_ref,
+                    ms_ref, ls_ref, as_ref,
+                    *, scale: float, bk: int, n_k: int, kv_limit: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, NEG)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        as_ref[...] = jnp.zeros_like(as_ref)
+
+    _flash_update(qp_ref, q_ref, k_ref, v_ref, ms_ref, ls_ref, as_ref,
+                  scale=scale, kv0=j * bk, bk=bk, kv_limit=kv_limit)
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        l = ls_ref[...]
+        o_ref[...] = (as_ref[...]
+                      / jnp.maximum(l, 1e-30)[..., None]).astype(o_ref.dtype)
+
+
+def _fold_q(q: jax.Array, hkv: int):
+    """(b, hq, Sq, hd) -> (b*hkv, Sq, g, hd) GQA-grouped query layout."""
+    b, hq, sq, hd = q.shape
+    g = hq // hkv
+    return (q.reshape(b, hkv, g, sq, hd)
+             .transpose(0, 1, 3, 2, 4)
+             .reshape(b * hkv, sq, g, hd))
+
+
+def _unfold_o(o: jax.Array, b: int, hkv: int, sq: int):
+    """(b*hkv, Sq_pad, g, hd) -> (b, hq, Sq, hd)."""
+    _, sqp, g, hd = o.shape
+    return (o.reshape(b, hkv, sqp, g, hd)
+             .transpose(0, 1, 3, 2, 4)
+             .reshape(b, hkv * g, sqp, hd)[:, :, :sq])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_q", "block_k", "interpret"))
+def flash_prefill(
+    q: jax.Array,        # (b, hq, Sq, hd) — RoPE already applied
+    k: jax.Array,        # (b, hkv, Sk, hd) stripe (fresh K/V or cache)
+    v: jax.Array,
+    q_pos: jax.Array,    # (b, Sq) int32 absolute/view position per query
+    scale: float,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """-> normalized attention out (b, hq, Sq, hd) in q.dtype.
+
+    Causal against the kv VIEW index (row i attends j <= q_pos[b, i]); pad
+    query rows carry q_pos = -1 and emit zeros (callers discard them)."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pad_q, pad_k = (-sq) % bq, (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sqp, skp = sq + pad_q, sk + pad_k
+    n_q, n_k = sqp // bq, skp // bk
+    qg = _fold_q(q, hkv)
+    kg = k.reshape(b * hkv, skp, hd)
+    vg = v.reshape(b * hkv, skp, hd)
+
+    o = pl.pallas_call(
+        functools.partial(_prefill_kernel, scale=scale, bk=bk, n_k=n_k,
+                          kv_limit=sk),
+        grid=(b * hkv, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, bq), lambda i, qi, j, hkv=hkv: (i // hkv, qi)),
+            pl.BlockSpec((None, bq, g, hd), lambda i, qi, j: (i, qi, 0, 0)),
+            pl.BlockSpec((None, bk, hd), lambda i, qi, j: (i, j, 0)),
+            pl.BlockSpec((None, bk, hd), lambda i, qi, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, g, hd),
+                               lambda i, qi, j: (i, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, sqp, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g, hd), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), qg, kg, vg)
+    return _unfold_o(o, b, hkv, sq)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q", "interpret"))
+def paged_flash_prefill(
+    q: jax.Array,        # (b, hq, Sq, hd)
+    kp: jax.Array,       # (nb, hkv, block_size, hd) block pool
+    vp: jax.Array,
+    bt: jax.Array,       # (b, nbps) int32 block table (view index -> block)
+    q_pos: jax.Array,    # (b, Sq) int32 view position per query
+    scale: float,
+    *,
+    block_q: int = 128,
+    interpret: bool = True,
+):
+    """Paged variant: K/V gathered block-by-block through the slot's block
+    table via scalar-prefetch index maps (never materialises a dense view).
+    -> (b, hq, Sq, hd) in q.dtype."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    b, hq, sq, hd = q.shape
+    nb, hkv, bs, _ = kp.shape
+    nbps = bt.shape[1]
+    g = hq // hkv
+    bq = min(block_q, sq)
+    pad_q = (-sq) % bq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    sqp = sq + pad_q
+    n_q = sqp // bq
+    qg = _fold_q(q, hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, n_q, nbps),
+        in_specs=[
+            pl.BlockSpec((None, bq),
+                         lambda i, qi, j, bt_ref: (i // hkv, qi)),
+            pl.BlockSpec((None, bq, g, hd),
+                         lambda i, qi, j, bt_ref: (i, qi, 0, 0)),
+            pl.BlockSpec((None, None, bs, hd),
+                         lambda i, qi, j, bt_ref: (bt_ref[i // hkv, j],
+                                                   i % hkv, 0, 0)),
+            pl.BlockSpec((None, None, bs, hd),
+                         lambda i, qi, j, bt_ref: (bt_ref[i // hkv, j],
+                                                   i % hkv, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, g, hd),
+                               lambda i, qi, j, bt_ref: (i, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g), jnp.float32),
+            pltpu.VMEM((bq, g, hd), jnp.float32),
+        ],
+    )
+
+    def kernel(bt_ref, *args):
+        del bt_ref  # consumed by the index maps
+        _prefill_kernel(*args, scale=scale, bk=bs, n_k=nbps,
+                        kv_limit=nbps * bs)
+
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, sqp, g, hd), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), q_pos.astype(jnp.int32), qg, kp, vp)
+    return _unfold_o(o, b, hkv, sq)

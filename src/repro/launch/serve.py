@@ -47,7 +47,9 @@ def build_engine(args):
     par = ParallelConfig(tp=args.tp, dp=args.dp, remat=False,
                          topk_sync=not args.no_topk_sync,
                          kv_block_size=args.kv_block_size,
-                         kv_pool_blocks=args.kv_pool_blocks)
+                         kv_pool_blocks=args.kv_pool_blocks,
+                         prefill_chunk=args.prefill_chunk,
+                         flash_prefill=not args.no_flash_prefill)
     return Engine(cfg=cfg, parallel=par,
                   sampling=SamplingConfig(top_k=args.top_k),
                   mesh=mesh, max_len=args.max_len)
@@ -110,6 +112,16 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one common N-token system prompt to every "
                          "request (makes prefix reuse visible)")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="continuous/paged: prompts longer than this many "
+                         "tokens are admitted chunk-by-chunk through the "
+                         "fused mixed prefill/decode step (decode advances "
+                         "every step during admission); 0 = whole-prompt "
+                         "admission only.  Attention-pure GQA archs only — "
+                         "MLA/windowed/recurrent families fall back")
+    ap.add_argument("--no-flash-prefill", action="store_true",
+                    help="keep prefill attention on the pure-JAX scan even "
+                         "when Pallas kernels are enabled")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals by N decode steps per request")
     ap.add_argument("--max-new-spread", type=int, default=1,
@@ -148,6 +160,14 @@ def main(argv=None):
                   f"(p50 {lat['ttft_s']['p50']*1e3:.0f}, "
                   f"max {lat['ttft_s']['max']*1e3:.0f}); queue mean "
                   f"{lat['queue_s']['mean']*1e3:.0f} ms")
+        if s.get("chunked_admissions"):
+            print(f"  chunked prefill: {s['chunked_admissions']} requests in "
+                  f"{s['prefill_chunks']} chunks of <= {sched.chunk} tokens")
+        if "decode_itl_admission_s" in lat:
+            adm, itl = lat["decode_itl_admission_s"], lat["decode_itl_s"]
+            print(f"  decode inter-token p50/p95 {itl['p50']*1e3:.1f}/"
+                  f"{itl['p95']*1e3:.1f} ms (admission windows "
+                  f"{adm['p50']*1e3:.1f}/{adm['p95']*1e3:.1f} ms)")
     if args.scheduler == "paged":
         s = sched.stats
         print(f"  pool {sched.n_blocks} x {sched.bs}-token blocks, "

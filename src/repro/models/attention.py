@@ -316,10 +316,18 @@ def banded_causal_attention(
     return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, S, hd)
 
 
-def _prefill_attention(q, k, v, positions, window, scale):
-    """Dispatch: banded O(S*window) path for long windowed prefill (§Perf H6),
-    full chunked flash otherwise."""
+def _prefill_attention(q, k, v, positions, window, scale, *,
+                       use_flash: bool = False):
+    """Dispatch: fused Pallas flash-prefill kernel on the hot path
+    (full-causal, fresh K/V: view index == position), banded O(S*window)
+    path for long windowed prefill (§Perf H6), pure-JAX chunked flash scan
+    as the reference + fallback (windowed prefill, MLA)."""
     S = q.shape[2]
+    if use_flash and not window and positions.ndim == 1:
+        from repro.kernels import ops as kops
+
+        qpos = jnp.broadcast_to(positions[None, :], (q.shape[0], S))
+        return kops.flash_prefill(q, k, v, qpos, scale)
     if window and S >= 4 * window and S % min(1024, S) == 0:
         return banded_causal_attention(q, k, v, positions, window, scale)
     return chunked_causal_attention(q, k, v, positions, positions, window, scale)
@@ -423,6 +431,33 @@ def _write_prefill(cache_side: jax.Array, new: jax.Array, positions: jax.Array, 
     out = cache_side.at[:, :, slots, :].set(tail)
     pos = jnp.zeros((S,), jnp.int32).at[slots].set(tail_pos)
     return out, pos
+
+
+def _write_prefill_chunk(cache_side: jax.Array, new: jax.Array,
+                         starts: jax.Array) -> jax.Array:
+    """Scatter a (b,h,C,hd) prefill CHUNK into the dense (b,h,S,hd) slot
+    cache with each row at its own view offset ``starts[b]`` — the resume
+    point of chunked admission (chunk k of a prompt lands at
+    [k*C, k*C + C)).  Rows clamp in range; chunk-tail padding beyond a
+    row's true length writes garbage K/V that stays dead because the
+    engine's position-row rewrite marks only [0, start + len) valid."""
+    b, h, C, hd = new.shape
+    S = cache_side.shape[2]
+    vpos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (b,C)
+    idx = jnp.clip(vpos, 0, S - 1)
+    return cache_side.at[jnp.arange(b)[:, None], :, idx, :].set(
+        new.transpose(0, 2, 1, 3).astype(cache_side.dtype))
+
+
+def _write_prefill_chunk_scale(cache_side: jax.Array, new: jax.Array,
+                               starts: jax.Array) -> jax.Array:
+    """Scale variant: (b,h,C) chunk into the (b,h,S) scale stripe."""
+    b, h, C = new.shape
+    S = cache_side.shape[2]
+    vpos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(vpos, 0, S - 1)
+    return cache_side.at[jnp.arange(b)[:, None], :, idx].set(
+        new.transpose(0, 2, 1).astype(cache_side.dtype))
 
 
 def _write_decode(cache_side: jax.Array, new: jax.Array, cur_pos: jax.Array,
@@ -618,6 +653,7 @@ def gqa_forward(
     cur_pos: Optional[jax.Array] = None,    # scalar, decode only
     kv_seq_axis: Optional[str] = None,
     use_pallas: bool = False,
+    flash_prefill: bool = False,
     block_tables: Optional[jax.Array] = None,   # (b, nbps) -> paged cache
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Returns (partial out (b,s,d) — UNREDUCED over model axis, new_cache)."""
@@ -626,6 +662,7 @@ def gqa_forward(
     window = cfg.window if kind == "local_attn" else 0
     scale = 1.0 / math.sqrt(hd)
     decode = cache is not None and s == 1
+    use_flash = use_pallas and flash_prefill
 
     q = x @ params["w_q"]
     if "b_q" in params:
@@ -705,24 +742,38 @@ def gqa_forward(
                 ck = _paged_write_prefill(cache["k"], k, bt, starts)
                 cv = _paged_write_prefill(cache["v"], v, bt, starts)
                 new_cache = {"k": ck, "v": cv, "pos": cache["pos"]}
-            # pos rows are rewritten whole by the engine (set_paged_positions)
+            # pos rows are rewritten whole by the engine (set_slot_positions)
             if positions.ndim == 2:
-                # cached-prefix admission: suffix queries attend the slot's
-                # full view (shared prefix blocks + just-written suffix);
-                # view index == absolute position, so a plain arange is the
-                # KV position vector and causality does all the masking
-                if quant:
-                    k_att = _dequantize_kv(_paged_view(ck, bt), _paged_view_scale(cks, bt))
-                    v_att = _dequantize_kv(_paged_view(cv, bt), _paged_view_scale(cvs, bt))
+                # cached-prefix / chunked admission: suffix or chunk queries
+                # attend the slot's full view (resident blocks + just-written
+                # tokens); view index == absolute position, so a plain arange
+                # is the KV position vector and causality does all the
+                # masking.  The Pallas path gathers block-by-block through
+                # the table; the jnp path materialises the dense view.
+                if not quant and use_flash and not window:
+                    from repro.kernels import ops as kops
+
+                    out = kops.paged_flash_prefill(q, ck, cv, bt, positions,
+                                                   scale)
                 else:
-                    k_att, v_att = _paged_view(ck, bt), _paged_view(cv, bt)
-                kv_pos = jnp.arange(k_att.shape[2], dtype=jnp.int32)
-                out = chunked_causal_attention(q, k_att, v_att, positions,
-                                               kv_pos, window, scale)
+                    if quant:
+                        k_att = _dequantize_kv(_paged_view(ck, bt), _paged_view_scale(cks, bt))
+                        v_att = _dequantize_kv(_paged_view(cv, bt), _paged_view_scale(cvs, bt))
+                    else:
+                        k_att, v_att = _paged_view(ck, bt), _paged_view(cv, bt)
+                    kv_pos = jnp.arange(k_att.shape[2], dtype=jnp.int32)
+                    out = chunked_causal_attention(q, k_att, v_att, positions,
+                                                   kv_pos, window, scale)
             else:
                 # no shared prefix in the batch: math identical to the dense
-                # slot engine (attend the fresh K/V only)
-                out = _prefill_attention(q, k, v, positions, window, scale)
+                # slot engine (attend the fresh K/V only; int8 attends the
+                # dequantized values — exactly what decode will read back)
+                if quant:
+                    k_att, v_att = _dequantize_kv(kq, ksc), _dequantize_kv(vq, vsc)
+                else:
+                    k_att, v_att = k, v
+                out = _prefill_attention(q, k_att, v_att, positions, window,
+                                         scale, use_flash=use_flash)
     elif cache is not None:
         S = cache["k"].shape[2]
         ring = bool(window) and kv_seq_axis is None
@@ -761,6 +812,43 @@ def gqa_forward(
                 q, k_read, v_read, cpos, cur_pos, window, scale, dist,
                 seq_axis=kv_seq_axis, use_pallas=use_pallas,
             )
+        elif positions.ndim == 2:
+            # -- chunked admission (dense slot cache): scatter this chunk at
+            # each row's own resume offset and attend the row's cache stripe
+            # [0, start + C) — earlier chunks are read back from the cache,
+            # so a chunk resumes exactly where the last one wrote.  Position
+            # rows are rewritten whole by the engine (set_slot_positions);
+            # causality (view index == absolute position) masks both the
+            # not-yet-written tail and chunk-pad garbage.
+            if bool(window) or kv_seq_axis is not None:
+                raise ValueError("chunked prefill serves full-attention "
+                                 "dense slots only (windowed archs fall "
+                                 "back to whole-prompt admission)")
+            starts = positions[:, 0]
+            if quant:
+                kq, ksc = _quantize_kv(k)
+                vq, vsc = _quantize_kv(v)
+                ck = _write_prefill_chunk(cache["k"], kq, starts)
+                cv = _write_prefill_chunk(cache["v"], vq, starts)
+                cks = _write_prefill_chunk_scale(cache["k_scale"], ksc, starts)
+                cvs = _write_prefill_chunk_scale(cache["v_scale"], vsc, starts)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                             "pos": cache["pos"]}
+                k_att = _dequantize_kv(ck, cks)
+                v_att = _dequantize_kv(cv, cvs)
+            else:
+                ck = _write_prefill_chunk(cache["k"], k, starts)
+                cv = _write_prefill_chunk(cache["v"], v, starts)
+                new_cache = {"k": ck, "v": cv, "pos": cache["pos"]}
+                k_att, v_att = ck, cv
+            if use_flash:
+                from repro.kernels import ops as kops
+
+                out = kops.flash_prefill(q, k_att, v_att, positions, scale)
+            else:
+                kv_pos = jnp.arange(S, dtype=jnp.int32)
+                out = chunked_causal_attention(q, k_att, v_att, positions,
+                                               kv_pos, 0, scale)
         else:
             batched_pos_cache = cache["pos"].ndim == 2
             if quant:
@@ -782,9 +870,19 @@ def gqa_forward(
                 if batched_pos_cache:
                     cpos = jnp.broadcast_to(cpos[None], (b, S))
                 new_cache = {"k": ck, "v": cv, "pos": cpos}
-            out = _prefill_attention(q, k, v, positions, window, scale)
+            if quant:
+                # attend the DEQUANTIZED values — exactly what decode reads
+                # back — so prefill and decode see one consistent cache (and
+                # chunked admission, which must read the cache, is
+                # bit-identical to whole-prompt admission under int8)
+                k_att, v_att = _dequantize_kv(kq, ksc), _dequantize_kv(vq, vsc)
+            else:
+                k_att, v_att = k, v
+            out = _prefill_attention(q, k_att, v_att, positions, window, scale,
+                                     use_flash=use_flash)
     else:
-        out = _prefill_attention(q, k, v, positions, window, scale)
+        out = _prefill_attention(q, k, v, positions, window, scale,
+                                 use_flash=use_flash)
 
     partial = fused_out_projection(out, params["w_o"])  # zero-copy epilogue
     return partial, new_cache
@@ -802,6 +900,8 @@ def mla_forward(
     cur_pos: Optional[jax.Array] = None,
     kv_seq_axis: Optional[str] = None,
     use_pallas: bool = False,
+    flash_prefill: bool = False,   # accepted for interface parity; MLA
+                                   # prefill stays on the pure-JAX scan
     block_tables: Optional[jax.Array] = None,   # (b, nbps) -> paged cache
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Multi-head latent attention (DeepSeek-V2 style, absorbed matmuls).
@@ -856,7 +956,7 @@ def mla_forward(
                       else jnp.zeros((b,), jnp.int32))
             ckv = _paged_write_prefill_seq(cache["ckv"], ckv_new, bt, starts)
             krope = _paged_write_prefill_seq(cache["krope"], krope_new, bt, starts)
-            # pos rows rewritten whole by the engine (set_paged_positions)
+            # pos rows rewritten whole by the engine (set_slot_positions)
             new_cache = {"ckv": ckv, "krope": krope, "pos": cache["pos"]}
             if positions.ndim == 2:   # cached-prefix admission: use the view
                 kv_src = _paged_view_seq(ckv, bt)
@@ -886,6 +986,10 @@ def mla_forward(
                                       cur_pos, S, False, seq_shard)[:, 0]
                 cpos = _write_pos(cache["pos"], cur_pos, S, False, seq_shard)
         else:
+            if positions.ndim == 2:
+                raise ValueError(
+                    "chunked prefill does not cover MLA dense caches — the "
+                    "scheduler falls back to whole-prompt admission")
             ckv, cpos = _write_prefill(cache["ckv"][:, None], ckv_new[:, None],
                                        positions, S, kv_seq_axis)
             ckv = ckv[:, 0]

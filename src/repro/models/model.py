@@ -150,8 +150,9 @@ def forward(
         # its own position; shared decode keeps the (1,) broadcast form.
         positions = cur_pos[:, None] if cur_pos.ndim == 1 else cur_pos[None]
     elif start_pos is not None:
-        # paged cached-prefix admission: each row's prompt suffix starts at
-        # its own absolute offset (tokens 0..start-1 are already resident)
+        # cached-prefix / chunked admission: each row's prompt suffix or
+        # chunk starts at its own absolute offset (tokens 0..start-1 are
+        # already resident in the row's cache or shared prefix blocks)
         positions = (start_pos[:, None]
                      + jnp.arange(s_total, dtype=jnp.int32)[None, :])
     else:
@@ -168,6 +169,7 @@ def forward(
             caches=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
             use_pallas=ctx.parallel.use_pallas, remat=ctx.parallel.remat and not decode,
             length_mask=length_mask, block_tables=block_tables,
+            flash_prefill=ctx.parallel.flash_prefill,
         )
         aux = aux + a
         if new_caches is not None:

@@ -167,7 +167,7 @@ def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
 
 def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
                    cur_pos, kv_seq_axis, use_pallas, length_mask=None,
-                   block_tables=None):
+                   block_tables=None, flash_prefill=False):
     if sub.kind in ATTN_KINDS:
         # attention needs no length mask: padded K/V entries are dead by
         # position masking (pos = -1) in the cache
@@ -175,12 +175,12 @@ def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
             return attn.mla_forward(
                 p, xa, positions, cfg, plan, dist, cache=cache, cur_pos=cur_pos,
                 kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
-                block_tables=block_tables,
+                flash_prefill=flash_prefill, block_tables=block_tables,
             )
         return attn.gqa_forward(
             p, xa, positions, cfg, plan, dist, kind=sub.kind, cache=cache,
             cur_pos=cur_pos, kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
-            block_tables=block_tables,
+            flash_prefill=flash_prefill, block_tables=block_tables,
         )
     if sub.kind == "ssd":
         return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache,
@@ -208,6 +208,7 @@ def sublayer_forward(
     use_pallas=False,
     length_mask=None,
     block_tables=None,
+    flash_prefill=False,
 ):
     """-> (x', new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -217,7 +218,7 @@ def sublayer_forward(
         # paper §2.2: attention + FFN read the same normed input
         attn_p, new_cache = _mixer_forward(
             p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-            kv_seq_axis, use_pallas, length_mask, block_tables,
+            kv_seq_axis, use_pallas, length_mask, block_tables, flash_prefill,
         )
         ffn_p = mlp_mod.mlp_forward(p["ffn"], xa, cfg)
         if policy.one_shot:
@@ -229,7 +230,7 @@ def sublayer_forward(
 
     mix_p, new_cache = _mixer_forward(
         p["mixer"], xa, positions, cfg, plan, dist, sub, cache, cur_pos,
-        kv_seq_axis, use_pallas, length_mask, block_tables,
+        kv_seq_axis, use_pallas, length_mask, block_tables, flash_prefill,
     )
     x = x + policy.reduce_out(mix_p, tag="mixer_reduce")
     if sub.has_ffn:
@@ -259,6 +260,7 @@ def group_forward(
     remat=False,
     length_mask=None,
     block_tables=None,
+    flash_prefill=False,
 ):
     """-> (x', new_caches, aux)."""
 
@@ -270,7 +272,7 @@ def group_forward(
                 p_layer[f"sub{i}"], x, positions, cfg, plan, dist, policy, sub,
                 cache=c, cur_pos=cur_pos, kv_seq_axis=kv_seq_axis,
                 use_pallas=use_pallas, length_mask=length_mask,
-                block_tables=block_tables,
+                block_tables=block_tables, flash_prefill=flash_prefill,
             )
             if c_new is not None:
                 new_caches[f"sub{i}"] = c_new

@@ -200,12 +200,84 @@ def make_paged_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig,
             topk_sync_enabled=ctx.parallel.topk_sync,
             use_pallas=ctx.parallel.use_pallas,
         )
-        new_caches = kvcache.set_paged_positions(new_caches, groups, total_lens)
+        new_caches = kvcache.set_slot_positions(new_caches, groups, total_lens)
         merged = kvcache.merge_slots(caches, new_caches, groups, admit,
                                      paged=True)
         return tok, merged
 
     return prefill_paged
+
+
+def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
+    """Fused chunked-prefill + decode step — the unit of chunked admission.
+
+    (params, ctokens (b,C), caches, admit, first, clens, starts, totals,
+     tok, pos, done, remaining, eos, [bt_w, bt,] rng)
+      -> (ptok (b,), nxt (b,), caches, pos', done', remaining')
+
+    One jitted program does BOTH halves of a serving step so a long prompt
+    never stalls in-flight decode for more than one chunk of compute:
+
+    * prefill ONE chunk of up to C tokens for every admitting slot —
+      ``starts`` (b,) is each row's resume offset (view position of the
+      chunk's first token), ``clens`` its real token count, ``first`` marks
+      a request's opening chunk (slot state resets), ``totals`` the row's
+      valid cache extent after this chunk (position rows are rewritten
+      whole).  ``ptok`` samples each row's next token from its last real
+      chunk position — the host uses it only for rows whose chunk completed
+      the prompt (their first emitted token);
+    * one masked decode step for every decode-active slot (admitting slots
+      ride with done=True, so the decode half freezes them).
+
+    The chunk width C is FIXED by the scheduler, so this path compiles once
+    — no pow-2 prompt buckets.  Paged variant threads two tables: ``bt_w``
+    (admitting rows real, all others null — confines the chunk scatter)
+    for the prefill half, ``bt`` (real) for the decode half."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+    dec = make_slot_decode_step(ctx, sampling)
+
+    def mixed(params, ctokens, caches, admit, first, clens, starts, totals,
+              tok, pos, done, remaining, eos, *rest):
+        *bts, rng = rest
+        bt_w = bts[0] if paged else None
+        bt = bts[1] if paged else None
+        caches_r = kvcache.reset_slots(caches, groups, admit & first,
+                                       paged=paged)
+        lmask = (jnp.arange(ctokens.shape[1], dtype=jnp.int32)[None, :]
+                 < clens[:, None])                           # (b, C)
+        hidden, new_caches, _ = M.forward(
+            params, ctokens, ctx, caches=caches_r, last_only=False,
+            skip_head=True, seq_sharded=True, length_mask=lmask,
+            start_pos=starts, block_tables=bt_w,
+        )
+        idx = jnp.clip(clens - 1, 0, ctokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = M.lm_head_local(params, h_last, ctx)
+        ptok = sample_tokens(
+            logits[:, -1], jax.random.fold_in(rng, 0), sampling, ctx.plan,
+            ctx.dist, topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        new_caches = kvcache.set_slot_positions(new_caches, groups, totals)
+        merged = kvcache.merge_slots(caches, new_caches, groups, admit,
+                                     paged=paged)
+        # The decode half freezes admitting rows (done=True), but a frozen
+        # row still performs its row-local cache write at its incoming
+        # position — which for an admitting row is STALE and would clobber
+        # the chunk just written.  Redirect those rows' write index to the
+        # last view slot: dead by causality (entry value == index, never
+        # <= any earlier cur_pos) and overwritten by the real decode write
+        # before the row could ever attend it.
+        sink = caches[0]["sub0"]["pos"].shape[-1] - 1
+        dec_pos = jnp.where(admit, jnp.int32(sink), pos)
+        nxt, merged, pos, done, remaining = dec(
+            params, tok, merged, dec_pos, done, remaining, eos,
+            jax.random.fold_in(rng, 1), block_tables=bt)
+        return ptok, nxt, merged, pos, done, remaining
+
+    return mixed
 
 
 def make_paged_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
@@ -409,6 +481,59 @@ class Engine:
             self.params, tok, caches, jnp.asarray(pos, jnp.int32),
             jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
             jnp.asarray(eos, jnp.int32), rng)
+
+    # -- chunked prefill (fused mixed prefill/decode step) -----------------
+    def _mixed(self, paged: bool):
+        """Lazily-built fused mixed step (jit retraces per chunk width; the
+        scheduler pins one width, so the chunked path compiles exactly one
+        prefill program — no pow-2 prompt buckets)."""
+        cb = self._cb_paged() if paged else self._cb()
+        if "mixed" not in cb:
+            pspecs = M.param_specs(self.ctx)
+            batch_spec, tok2, tok1, _, _ = self._specs()
+            cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                         batched_pos=True)
+            sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+            slot = P(*batch_spec)
+            extra = (P(*batch_spec, None),) * 2 if paged else ()
+            mix = make_mixed_step(self.ctx, self.sampling, paged=paged)
+            cb["mixed"] = jax.jit(
+                sm(mix,
+                   in_specs=(pspecs, tok2, cspec, slot, slot, slot, slot,
+                             slot, tok1, slot, slot, slot, slot, *extra, P()),
+                   out_specs=(tok1, tok1, cspec, slot, slot, slot)),
+                donate_argnums=(2,) if self.parallel.zero_copy else (),
+            )
+        return cb["mixed"]
+
+    def mixed_step(self, caches, ctokens, admit, first, clens, starts, totals,
+                   tok, pos, done, remaining, eos, rng):
+        """One fused chunked-admission step over the dense slot engine:
+        prefill one chunk into the admitting slots AND run one masked decode
+        step for the decode-active slots, in the same jitted program.
+        Returns (ptok (B,), nxt (B,), caches, pos, done, remaining)."""
+        return self._mixed(False)(
+            self.params, jnp.asarray(ctokens), caches,
+            jnp.asarray(admit, bool), jnp.asarray(first, bool),
+            jnp.asarray(clens, jnp.int32), jnp.asarray(starts, jnp.int32),
+            jnp.asarray(totals, jnp.int32), jnp.asarray(tok),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
+            jnp.asarray(remaining, jnp.int32), jnp.asarray(eos, jnp.int32),
+            rng)
+
+    def mixed_step_paged(self, caches, ctokens, admit, first, clens, starts,
+                         totals, tok, pos, done, remaining, eos, bt_w, bt,
+                         rng):
+        """Paged fused mixed step: ``bt_w`` routes the chunk scatter (null
+        rows for every non-admitting slot), ``bt`` serves the decode half."""
+        return self._mixed(True)(
+            self.params, jnp.asarray(ctokens), caches,
+            jnp.asarray(admit, bool), jnp.asarray(first, bool),
+            jnp.asarray(clens, jnp.int32), jnp.asarray(starts, jnp.int32),
+            jnp.asarray(totals, jnp.int32), jnp.asarray(tok),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
+            jnp.asarray(remaining, jnp.int32), jnp.asarray(eos, jnp.int32),
+            jnp.asarray(bt_w, jnp.int32), jnp.asarray(bt, jnp.int32), rng)
 
     # -- paged KV backend (slot engine, second storage layout) -------------
     def _cb_paged(self):

@@ -221,15 +221,17 @@ def merge_slots(old: Tuple, new: Tuple, groups, mask: jax.Array,
                  for g, go, gn in zip(groups, old, new))
 
 
-def set_paged_positions(caches: Tuple, groups, total_lens: jax.Array) -> Tuple:
+def set_slot_positions(caches: Tuple, groups, total_lens: jax.Array) -> Tuple:
     """Rewrite every pos leaf row to [0..total_lens[b]) valid, -1 beyond.
 
-    In the paged layout a slot's view index IS its absolute position, and
-    after an admission prefill (shared prefix blocks + freshly-written
-    suffix) exactly the first ``total_lens[b]`` view positions hold real
-    K/V.  This replaces the dense path's _write_prefill position writes +
-    mask_prompt_padding in one shot; merge_slots then keeps the rewritten
-    rows only for admitted slots."""
+    Serves both non-ring slot layouts, where a slot's view index IS its
+    absolute position: the paged pool after an admission prefill (shared
+    prefix blocks + freshly-written suffix) and the dense slot cache after
+    a chunked-prefill step (earlier chunks + the chunk just scattered at
+    its resume offset).  Exactly the first ``total_lens[b]`` view positions
+    hold real K/V, so this replaces the dense path's _write_prefill
+    position writes + mask_prompt_padding in one shot; merge_slots then
+    keeps the rewritten rows only for admitted slots."""
 
     def f(key, leaf, stacked):
         if key != "pos":

@@ -16,6 +16,17 @@ of two).  This closes the batch-utilization gap that arXiv 2407.07304 / the
 LIMINAL analysis identify as the dominant decode-throughput lever once
 per-token sync cost is minimized.
 
+**Chunked prefill** (``prefill_chunk``): prompts longer than the budget are
+admitted chunk-by-chunk through the engine's fused mixed prefill/decode
+step — each serving step prefills one fixed-width chunk per admitting slot
+AND decodes one token per active slot, so a long prompt never stalls
+in-flight decode for more than one chunk of compute (LIMINAL's point:
+inter-token latency, not aggregate throughput, is the binding constraint
+once batching works).  The chunked path uses one fixed chunk shape (one
+compile, no pow-2 buckets); prompts within the budget keep the legacy
+single-shot admission, and ineligible families (MLA, windowed, recurrent)
+fall back to it entirely.  Greedy outputs are bit-identical either way.
+
 Arrivals are measured on a virtual clock of *decode steps* so schedules are
 deterministic and testable: a request with ``arrival_step=s`` becomes
 admissible once ``s`` decode steps have executed.  ``WaveScheduler`` ignores
@@ -25,7 +36,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -127,6 +138,11 @@ class _Slot:
     req: Optional[Request] = None
     toks: List = field(default_factory=list)
     admitted_step: int = 0
+    # chunked admission in progress: absolute offset of the next prefill
+    # chunk (None = not chunking), and whether the opening chunk already ran
+    # (slot state resets exactly once, on the first chunk)
+    chunk_next: Optional[int] = None
+    chunk_started: bool = False
 
 
 class ContinuousScheduler:
@@ -141,7 +157,8 @@ class ContinuousScheduler:
     def __init__(self, engine: Engine, n_slots: int, pad_id: int = 0,
                  block_steps: int = 8, min_bucket: int = 8,
                  responsive_blocks: bool = False,
-                 on_token: Optional[Callable[[int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 prefill_chunk: Optional[int] = None):
         if engine.cfg.n_codebooks != 1:
             raise NotImplementedError(
                 "ContinuousScheduler serves single-codebook archs "
@@ -181,7 +198,26 @@ class ContinuousScheduler:
             "decode_steps": 0, "slot_steps": 0, "active_slot_steps": 0,
             "emitted": 0, "admission_rounds": 0, "in_flight_admissions": 0,
             "prefill_calls": 0, "prefill_tokens": 0,
+            "prefill_chunks": 0, "chunked_admissions": 0,
         }
+        # chunked prefill: prompts longer than the budget stream through the
+        # fused mixed prefill/decode step, one fixed-width chunk per decode
+        # step, so admission never stalls in-flight decode for more than one
+        # chunk of compute.  Prompts within the budget keep the legacy
+        # single-shot (bucketed) admission — they fit one step's budget by
+        # definition.  Ineligible families fall back entirely.
+        chunk = (prefill_chunk if prefill_chunk is not None
+                 else engine.parallel.prefill_chunk)
+        if chunk and not self._chunk_eligible(cfg):
+            chunk = 0
+        self.chunk = min(int(chunk), self.prompt_limit) if chunk else 0
+        # decode inter-token latency stream: (seconds/step, during-admission);
+        # bounded so a long-lived server doesn't grow host memory per step —
+        # summaries cover the most recent window
+        from collections import deque
+        self._itl: "deque[Tuple[float, bool]]" = deque(maxlen=65536)
+        self._last_step_t: Optional[float] = None
+        self._admission_mark = False
 
     # -- submission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
@@ -211,7 +247,9 @@ class ContinuousScheduler:
     def _retire(self) -> None:
         now = time.monotonic()
         for i, s in enumerate(self.slots):
-            if s.req is not None and self.dones[i]:
+            # mid-prefill slots ride with done=True (decode freezes them)
+            # but are NOT finished — their chunks are still streaming in
+            if s.req is not None and self.dones[i] and s.chunk_next is None:
                 r = s.req
                 r.output = np.asarray(s.toks, dtype=np.int32)
                 r.stats.update({
@@ -223,10 +261,25 @@ class ContinuousScheduler:
                 self.slots[i] = _Slot()
 
     def _bucket(self, plen: int) -> int:
+        """Pow-2 prompt bucket — LEGACY whole-prompt admission only.  The
+        chunked path never buckets: its chunk width is fixed, so it compiles
+        exactly one prefill program regardless of prompt mix."""
         b = self.min_bucket
         while b < plen:
             b *= 2
         return min(b, self.prompt_limit)
+
+    @staticmethod
+    def _chunk_eligible(cfg) -> bool:
+        """Chunked admission resumes prefill mid-cache, which needs
+        view-index == absolute-position attention over the slot's stripe:
+        attention-pure GQA archs only.  MLA (latent dense cache), sliding
+        windows (ring layout), recurrent state (SSM/RG-LRU chunk-boundary
+        carry), and frontend/multi-codebook archs fall back to whole-prompt
+        admission."""
+        return (cfg.mla is None and cfg.frontend is None
+                and cfg.n_codebooks == 1
+                and all(k == "attn" for k in cfg.layer_pattern))
 
     def _admit(self) -> int:
         free = [i for i, s in enumerate(self.slots) if s.req is None]
@@ -236,28 +289,56 @@ class ContinuousScheduler:
         chosen = arrived[: len(free)]
         for r in chosen:
             self.queue.remove(r)
-        in_flight = any(s.req is not None and not self.dones[i]
+        in_flight = any(s.req is not None
+                        and (not self.dones[i] or s.chunk_next is not None)
                         for i, s in enumerate(self.slots))
-        Lp = self._bucket(max(len(r.prompt) for r in chosen))
-        tokens = np.full((self.B, Lp), self.pad_id, np.int32)
-        admit = np.zeros((self.B,), bool)
-        plens = np.ones((self.B,), np.int32)
         now = time.monotonic()
+        short = []
         for slot, r in zip(free, chosen):
-            tokens[slot, : len(r.prompt)] = r.prompt
-            admit[slot] = True
-            plens[slot] = len(r.prompt)
             self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
             r.stats["queue_s"] = now - r.submitted_at
             r.stats["admitted_step"] = self.step_count
+            if self.chunk and len(r.prompt) > self.chunk:
+                # over budget: stream C-token chunks through the fused
+                # mixed step — decode never waits for the whole prompt
+                self.slots[slot].chunk_next = 0
+                self.dones[slot] = True
+                self.remaining[slot] = 0
+                self.stats["chunked_admissions"] += 1
+            else:
+                short.append((slot, r))
+        self.stats["admission_rounds"] += 1
+        if in_flight:
+            self.stats["in_flight_admissions"] += len(chosen)
+        if short:
+            self._prefill_short(short)
+        return len(chosen)
+
+    def _prefill_short(self, pairs) -> None:
+        """Legacy single-shot admission for prompts within the chunk budget
+        (and for fallback archs): one bucketed full-width prefill."""
+        Lp = self._bucket(max(len(r.prompt) for _, r in pairs))
+        tokens = np.full((self.B, Lp), self.pad_id, np.int32)
+        admit = np.zeros((self.B,), bool)
+        plens = np.ones((self.B,), np.int32)
+        for slot, r in pairs:
+            tokens[slot, : len(r.prompt)] = r.prompt
+            admit[slot] = True
+            plens[slot] = len(r.prompt)
         new_tok, self.caches = self.engine.prefill_into_slots(
             self.caches, tokens, admit, plens, self._next_rng())
         self.stats["prefill_tokens"] += int(plens[admit].sum())
-        self._finish_admission(free, chosen, admit, np.array(new_tok), in_flight)
-        return len(chosen)
+        self.stats["prefill_calls"] += 1
+        self._admission_mark = True
+        self._finish_admission([s for s, _ in pairs], [r for _, r in pairs],
+                               admit, np.array(new_tok))
 
-    def _finish_admission(self, free, chosen, admit, new_tok, in_flight) -> None:
-        """Shared post-prefill host bookkeeping (dense and paged)."""
+    def _finish_admission(self, free, chosen, admit, new_tok) -> None:
+        """Shared post-prefill host bookkeeping (dense, paged, chunked):
+        record each finishing request's first emitted token and arm its
+        decode state.  ``ttft_s`` is stamped HERE — under chunked admission
+        that is the step whose chunk completed the prompt, so TTFT reflects
+        the first token actually *emitted*, not slot assignment."""
         self.tok = np.where(admit, new_tok, self.tok)
         for slot, r in zip(free, chosen):
             t = int(new_tok[slot])
@@ -271,10 +352,6 @@ class ContinuousScheduler:
                 r.eos_id is not None and t == r.eos_id)
             r.stats["ttft_s"] = time.monotonic() - r.submitted_at
             self.stats["emitted"] += 1
-        self.stats["admission_rounds"] += 1
-        self.stats["prefill_calls"] += 1
-        if in_flight:
-            self.stats["in_flight_admissions"] += len(chosen)
 
     def _run_decode(self, n: int):
         """Engine dispatch for one fused block (overridden by the paged
@@ -289,9 +366,12 @@ class ContinuousScheduler:
     def _decode_block(self, n: int) -> None:
         self._ensure_capacity(n)
         toks, self.caches, pos, done, remaining = self._run_decode(n)
-        toks = np.asarray(toks)                              # (n, B)
-        # replay the device's masking rule to tell real emissions from
-        # frozen-slot repeats; final state must agree with the device's
+        self._apply_decode(np.asarray(toks), pos, done, remaining, n)
+
+    def _apply_decode(self, toks, pos, done, remaining, n: int) -> None:
+        """Host bookkeeping for ``n`` executed decode steps (toks (n, B)):
+        replay the device's masking rule to tell real emissions from
+        frozen-slot repeats; final state must agree with the device's."""
         cur_done = self.dones.copy()
         cur_rem = self.remaining.copy()
         for s in range(n):
@@ -314,6 +394,91 @@ class ContinuousScheduler:
         self.step_count += n
         self.stats["decode_steps"] += n
         self.stats["slot_steps"] += n * self.B
+        self._note_itl(n)
+
+    def _note_itl(self, n: int) -> None:
+        """Record decode inter-token latency per step.  Samples whose
+        interval spans admission work (a whole-prompt prefill call since the
+        previous decode step, or a mixed chunk step) are tagged as
+        admission-window samples — the population whose p95 chunked prefill
+        exists to flatten.  Fused blocks attribute their uniform per-step
+        share to every step (host timing cannot see inside the block)."""
+        now = time.monotonic()
+        if self._last_step_t is not None:
+            per = (now - self._last_step_t) / n
+            self._itl.extend([(per, self._admission_mark)] * n)
+        self._last_step_t = now
+        self._admission_mark = False
+
+    # -- chunked admission (fused mixed prefill/decode steps) --------------
+    def _prefilling(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.req is not None and s.chunk_next is not None]
+
+    def _pre_mixed(self) -> None:
+        """Pre-step capacity hook (paged: decode block coverage)."""
+
+    def _run_mixed(self, tokens, admit, first, clens, starts, totals):
+        return self.engine.mixed_step(
+            self.caches, tokens, admit, first, clens, starts, totals,
+            self.tok, self.pos, self.dones, self.remaining, self.eos,
+            self._next_rng())
+
+    def _post_chunks(self, slots_p: List[int]) -> None:
+        """Hook after each chunk lands (paged: publish completed prefix
+        blocks incrementally)."""
+
+    def _mixed_step(self) -> None:
+        """One fused chunked-admission step: every mid-prefill slot advances
+        one fixed-width chunk while all decode-active slots decode one token
+        — in the same jitted program, so long-prompt admission costs decode
+        at most one chunk of extra latency per token."""
+        C = self.chunk
+        self._pre_mixed()                  # may preempt: assemble AFTER
+        slots_p = self._prefilling()
+        if not slots_p:
+            # capacity pressure preempted every prefilling slot — nothing to
+            # chunk this turn; the main loop falls through to plain decode
+            return
+        tokens = np.full((self.B, C), self.pad_id, np.int32)
+        admit = np.zeros((self.B,), bool)
+        first = np.zeros((self.B,), bool)
+        clens = np.ones((self.B,), np.int32)
+        starts = np.zeros((self.B,), np.int32)
+        totals = np.ones((self.B,), np.int32)
+        emits = []
+        for i in slots_p:
+            s = self.slots[i]
+            off = s.chunk_next
+            plen = len(s.req.prompt)
+            nc = min(C, plen - off)
+            tokens[i, :nc] = s.req.prompt[off:off + nc]
+            admit[i] = True
+            first[i] = not s.chunk_started
+            clens[i] = nc
+            starts[i] = off
+            totals[i] = off + nc
+            if off + nc == plen:
+                emits.append(i)
+        ptok, toks, self.caches, pos, done, remaining = self._run_mixed(
+            tokens, admit, first, clens, starts, totals)
+        self._admission_mark = True        # this step carried prefill work
+        self._apply_decode(np.asarray(toks)[None], pos, done, remaining, 1)
+        for i in slots_p:
+            s = self.slots[i]
+            s.chunk_started = True
+            s.chunk_next += int(clens[i])
+            self.stats["prefill_tokens"] += int(clens[i])
+            self.stats["prefill_chunks"] += 1
+        self.stats["prefill_calls"] += 1
+        self._post_chunks(slots_p)
+        if emits:
+            adm = np.zeros((self.B,), bool)
+            adm[emits] = True
+            self._finish_admission(emits, [self.slots[i].req for i in emits],
+                                   adm, np.array(ptok))
+            for i in emits:
+                self.slots[i].chunk_next = None
 
     def _block_size(self) -> int:
         """Fused block size in {1,2,4,...,block_steps}.
@@ -349,7 +514,11 @@ class ContinuousScheduler:
 
     def request_summary(self) -> Dict:
         """Aggregate per-request latency stats (TTFT + queue wait) over the
-        completed set — the per-request numbers live in ``Request.stats``."""
+        completed set, plus the decode inter-token latency distribution —
+        overall and restricted to admission windows (steps whose interval
+        absorbed prefill work).  Per-request numbers live in
+        ``Request.stats``; under chunked admission ``ttft_s`` is stamped at
+        the chunk that completed the prompt (first *emitted* token)."""
         out: Dict = {"requests": len(self.done)}
         for key in ("ttft_s", "queue_s"):
             vals = sorted(r.stats[key] for r in self.done if key in r.stats)
@@ -360,6 +529,19 @@ class ContinuousScheduler:
                 "p50": float(vals[len(vals) // 2]),
                 "max": float(vals[-1]),
             }
+
+        def pct(vals):
+            v = np.asarray(vals, np.float64)
+            return {"mean": float(v.mean()),
+                    "p50": float(np.percentile(v, 50)),
+                    "p95": float(np.percentile(v, 95)),
+                    "max": float(v.max())}
+
+        if self._itl:
+            out["decode_itl_s"] = pct([d for d, _ in self._itl])
+            adm = [d for d, a in self._itl if a]
+            if adm:
+                out["decode_itl_admission_s"] = pct(adm)
         return out
 
     def _init_caches(self) -> None:
@@ -374,6 +556,11 @@ class ContinuousScheduler:
         while True:
             self._retire()
             self._admit()
+            if self._prefilling():
+                # chunked admission in flight: fused mixed steps advance one
+                # chunk per slot AND one decode token per active slot
+                self._mixed_step()
+                continue
             n = self._block_size()
             if n == 0:
                 pending = [r.arrival_step for r in self.queue]
@@ -422,12 +609,13 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  block_steps: int = 8, min_bucket: int = 8,
                  responsive_blocks: bool = False,
                  on_token: Optional[Callable[[int, int], None]] = None,
+                 prefill_chunk: Optional[int] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None):
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
-                         responsive_blocks, on_token)
+                         responsive_blocks, on_token, prefill_chunk)
         cfg = engine.cfg
         if cfg.window and "local_attn" in cfg.layer_pattern:
             raise ValueError(
@@ -496,7 +684,7 @@ class PagedContinuousScheduler(ContinuousScheduler):
 
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
-            if s.req is not None and self.dones[i]:
+            if s.req is not None and self.dones[i] and s.chunk_next is None:
                 self._release_slot(i)
         super()._retire()
 
@@ -507,10 +695,13 @@ class PagedContinuousScheduler(ContinuousScheduler):
         from the prompt): the emitted counter rolls back, and streaming
         clients are told via ``on_preempt(rid)`` to drop what they buffered
         for that request — under stochastic sampling the regenerated stream
-        need not match the discarded one."""
+        need not match the discarded one.  Mid-chunk-prefill slots are also
+        candidates (they hold blocks but have emitted nothing); their chunk
+        progress is simply dropped with the slot."""
         cand = [i for i, s in enumerate(self.slots)
-                if s.req is not None and not self.dones[i]
-                and self.remaining[i] > 0 and self._shard_of(i) == shard]
+                if s.req is not None and self._shard_of(i) == shard
+                and ((not self.dones[i] and self.remaining[i] > 0)
+                     or s.chunk_next is not None)]
         if not cand:
             return False
         i = max(cand, key=lambda j: (self.slots[j].admitted_step,
@@ -578,7 +769,8 @@ class PagedContinuousScheduler(ContinuousScheduler):
         arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
         if not free or not arrived:
             return 0
-        in_flight = any(s.req is not None and not self.dones[i]
+        in_flight = any(s.req is not None
+                        and (not self.dones[i] or s.chunk_next is not None)
                         for i, s in enumerate(self.slots))
         # block-aware selection: FIFO over arrivals, stop at the first
         # request whose blocks don't fit (no reordering under pressure)
@@ -615,26 +807,48 @@ class PagedContinuousScheduler(ContinuousScheduler):
         self._note_usage()
         for r in chosen:
             self.queue.remove(r)
-        Lp = self._bucket(max(len(r.prompt) - starts_of[r.rid] for r in chosen))
+        now = time.monotonic()
+        short = []
+        for slot, r in zip(free, chosen):
+            self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
+            r.stats["queue_s"] = now - r.submitted_at
+            r.stats["admitted_step"] = self.step_count
+            r.stats["prefill_tokens_saved"] = starts_of[r.rid]
+            self.stats["prefill_tokens_saved"] += starts_of[r.rid]
+            if self.chunk and len(r.prompt) - starts_of[r.rid] > self.chunk:
+                # over budget: the uncached suffix streams in fixed chunks
+                # (the first chunk resumes right after the shared prefix)
+                self.slots[slot].chunk_next = starts_of[r.rid]
+                self.dones[slot] = True
+                self.remaining[slot] = 0
+                self.stats["chunked_admissions"] += 1
+            else:
+                short.append((slot, r))
+        self.stats["admission_rounds"] += 1
+        if in_flight:
+            self.stats["in_flight_admissions"] += len(chosen)
+        if short:
+            self._prefill_suffix(short, starts_of)
+        return len(chosen)
+
+    def _prefill_suffix(self, pairs, starts_of) -> None:
+        """Legacy single-shot paged admission (suffix within the chunk
+        budget): one bucketed full-width prefill through the write table."""
+        Lp = self._bucket(max(len(r.prompt) - starts_of[r.rid]
+                              for _, r in pairs))
         tokens = np.full((self.B, Lp), self.pad_id, np.int32)
         admit = np.zeros((self.B,), bool)
         plens = np.ones((self.B,), np.int32)
         starts = np.zeros((self.B,), np.int32)
         totals = np.ones((self.B,), np.int32)
-        now = time.monotonic()
-        for slot, r in zip(free, chosen):
+        for slot, r in pairs:
             suffix = r.prompt[starts_of[r.rid]:]
             tokens[slot, : len(suffix)] = suffix
             admit[slot] = True
             plens[slot] = len(suffix)
             starts[slot] = starts_of[r.rid]
             totals[slot] = len(r.prompt)
-            self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
-            r.stats["queue_s"] = now - r.submitted_at
-            r.stats["admitted_step"] = self.step_count
-            r.stats["prefill_tokens_saved"] = starts_of[r.rid]
             self.stats["prefill_tokens"] += len(suffix)
-            self.stats["prefill_tokens_saved"] += starts_of[r.rid]
         # write table: un-admitted rows are nulled so the full-width prefill
         # scatter cannot touch a live slot's blocks (their pad-token K/V
         # sinks into the null block; their forward output is discarded)
@@ -642,11 +856,46 @@ class PagedContinuousScheduler(ContinuousScheduler):
         new_tok, self.caches = self.engine.prefill_into_slots_paged(
             self.caches, tokens, admit, plens, starts, totals, bt_w,
             self._next_rng())
+        self.stats["prefill_calls"] += 1
+        self._admission_mark = True
         # publish the freshly-prefilled full prompt blocks for reuse
         if self.prefix_cache:
-            for slot, r in zip(free, chosen):
+            for slot, r in pairs:
                 n_full = len(r.prompt) // self.bs
                 self.alloc.register_prefix(self._shard_of(slot), r.prompt,
                                            self.slot_blocks[slot][:n_full])
-        self._finish_admission(free, chosen, admit, np.array(new_tok), in_flight)
-        return len(chosen)
+        self._finish_admission([s for s, _ in pairs], [r for _, r in pairs],
+                               admit, np.array(new_tok))
+
+    # -- chunked admission hooks ------------------------------------------
+    def _pre_mixed(self) -> None:
+        # the decode half writes one token per active slot: ensure block
+        # coverage first (may preempt — mixed assembly happens after, so an
+        # evicted slot simply drops out of this step)
+        self._ensure_capacity(1)
+
+    def _run_mixed(self, tokens, admit, first, clens, starts, totals):
+        # two tables: the chunk scatter goes through null rows for every
+        # non-admitting slot (protecting live blocks), the decode half
+        # through the real per-slot tables
+        bt_w = np.where(admit[:, None], self.bt,
+                        kvcache.NULL_BLOCK).astype(np.int32)
+        return self.engine.mixed_step_paged(
+            self.caches, tokens, admit, first, clens, starts, totals,
+            self.tok, self.pos, self.dones, self.remaining, self.eos,
+            bt_w, self.bt, self._next_rng())
+
+    def _post_chunks(self, slots_p: List[int]) -> None:
+        # publish prefix blocks INCREMENTALLY: each chunk boundary completes
+        # chunk_next // block_size full blocks, reusable immediately by
+        # admissions that arrive while the rest of the prompt still streams
+        # (register_prefix zips the hash chain against the blocks given, so
+        # a partial prefix registers exactly its completed blocks)
+        if not self.prefix_cache:
+            return
+        for i in slots_p:
+            s = self.slots[i]
+            n_full = s.chunk_next // self.bs
+            if n_full:
+                self.alloc.register_prefix(self._shard_of(i), s.req.prompt,
+                                           self.slot_blocks[i][:n_full])

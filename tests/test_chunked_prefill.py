@@ -1,0 +1,310 @@
+"""Chunked prefill: the fused Pallas flash-prefill kernel against the
+pure-JAX ``chunked_causal_attention`` oracle, and chunked admission
+(fused mixed prefill/decode steps) against whole-prompt admission —
+bit-identical greedy outputs across the dense and paged schedulers,
+GQA and int8 KV."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.kernels import ops
+from repro.launch.mesh import make_local_mesh
+from repro.models.attention import chunked_causal_attention
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import ContinuousScheduler, PagedContinuousScheduler
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs scan oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,Sq,Sk,hd,bq,bk", [
+    (1, 4, 4, 16, 16, 64, 16, 16),      # MHA, one tile
+    (2, 8, 2, 37, 64, 64, 16, 16),      # GQA g=4, uneven q tail
+    (2, 4, 1, 24, 50, 32, 8, 16),       # MQA, uneven kv tail
+    (1, 16, 4, 128, 128, 128, 128, 128),  # TPU-aligned tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_matches_scan(b, hq, hkv, Sq, Sk, hd, bq, bk, dtype):
+    """Property: the fused kernel equals the streaming-softmax oracle for
+    every GQA group size, uneven chunk tails, and per-row resume offsets
+    (the chunked-prefill case: queries start mid-cache)."""
+    from repro.kernels import prefill_attention as pa
+
+    ks = jax.random.split(jax.random.key(b * Sq + Sk), 3)
+    q = jax.random.normal(ks[0], (b, hq, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, Sk, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, Sk, hd)).astype(dtype)
+    starts = np.arange(b, dtype=np.int32) * max(1, (Sk - Sq) // max(1, b))
+    qpos = (jnp.asarray(starts)[:, None]
+            + jnp.arange(Sq, dtype=jnp.int32)[None, :])
+    scale = 1.0 / np.sqrt(hd)
+    out = pa.flash_prefill(q, k, v, qpos, float(scale), block_q=bq, block_k=bk)
+    ref = chunked_causal_attention(q, k, v, qpos,
+                                   jnp.arange(Sk, dtype=jnp.int32), 0, scale)
+    tol = 2e-5 if dtype == jnp.float32 else 0.03
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,hq,hkv,bs,nbps,Sq,hd", [
+    (1, 4, 4, 16, 4, 16, 64), (2, 8, 2, 8, 6, 24, 64), (3, 4, 1, 32, 2, 9, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_prefill_matches_dense_kernel(b, hq, hkv, bs, nbps, Sq,
+                                                  hd, dtype):
+    """Pool + block-table gather (scalar-prefetch index maps) must agree
+    with the dense kernel on the gathered view."""
+    from repro.kernels import prefill_attention as pa
+
+    S = nbps * bs
+    ks = jax.random.split(jax.random.key(b * S + hd), 3)
+    nb = 1 + b * nbps
+    kp = jax.random.normal(ks[0], (nb, hkv, bs, hd)).astype(dtype)
+    vp = jax.random.normal(ks[1], (nb, hkv, bs, hd)).astype(dtype)
+    rng = np.random.default_rng(S)
+    bt = jnp.asarray(rng.permutation(np.arange(1, nb))[: b * nbps]
+                     .reshape(b, nbps).astype(np.int32))
+    q = jax.random.normal(ks[2], (b, hq, Sq, hd)).astype(dtype)
+    starts = rng.integers(0, S - Sq + 1, size=b).astype(np.int32)
+    qpos = (jnp.asarray(starts)[:, None]
+            + jnp.arange(Sq, dtype=jnp.int32)[None, :])
+    scale = 1.0 / np.sqrt(hd)
+    out = pa.paged_flash_prefill(q, kp, vp, bt, qpos, float(scale), block_q=8)
+    view = jnp.take(kp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+    vview = jnp.take(vp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+    ref = pa.flash_prefill(q, view, vview, qpos, float(scale),
+                           block_q=8, block_k=bs)
+    tol = 2e-5 if dtype == jnp.float32 else 0.03
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_prefill_padded_rows_emit_zero():
+    """Pad query rows (q_pos = -1, the uneven-tail case) are fully masked
+    and must emit exact zeros, not NaNs from an empty softmax."""
+    from repro.kernels import prefill_attention as pa
+
+    q = jnp.ones((1, 2, 4, 64))
+    k = jnp.ones((1, 2, 8, 64))
+    v = jnp.ones((1, 2, 8, 64))
+    qpos = jnp.asarray([[0, 1, -1, -1]], jnp.int32)
+    out = np.asarray(pa.flash_prefill(q, k, v, qpos, 0.125, block_q=4,
+                                      block_k=8))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0, :, 2:], 0.0)
+    assert np.abs(out[0, :, :2]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Chunked admission == whole-prompt admission (serving level)
+# ---------------------------------------------------------------------------
+
+
+# Bit-exact token equality between serving modes is guaranteed against ONE
+# backend compilation regime: chunked and whole-prompt admission do the same
+# math, but they are different XLA programs, and a multi-device host platform
+# compiles them with different tiling — ±1-ulp logit reassociation that can
+# flip a greedy near-tie mid-stream (same caveat the paged suite documents
+# for kernel-vs-jnp paths).  The single-device tier-1 job enforces bitwise
+# equality; under forced multi-device CPU we require identical shape and
+# agreement through the first emitted token (the admission path under test),
+# tolerating only mid-stream near-tie flips.
+BITWISE = jax.device_count() == 1
+
+
+def assert_tokens_match(actual, desired):
+    if BITWISE:
+        np.testing.assert_array_equal(actual, desired)
+        return
+    actual, desired = np.asarray(actual), np.asarray(desired)
+    assert actual.shape == desired.shape
+    if len(actual):
+        assert actual[0] == desired[0]
+
+
+def greedy_engine(arch: str, max_len: int = 96,
+                  parallel: ParallelConfig = None) -> Engine:
+    cfg = get_config(arch).reduced()
+    return Engine(cfg=cfg,
+                  parallel=parallel or ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=max_len)
+
+
+@pytest.fixture(scope="module")
+def yi_engine():
+    return greedy_engine("yi-9b")
+
+
+def long_requests(cfg, n=6, seed=0, pmin=20, pmax=48):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, int(rng.integers(pmin, pmax + 1)))
+             .astype(np.int32), int(rng.integers(3, 9)), i * 2)
+            for i in range(n)]
+
+
+def run_chunked_vs_whole(eng, reqs, make_sched, chunk=8):
+    done = {}
+    scheds = {}
+    for C in (0, chunk):
+        sched = make_sched(eng, C)
+        for p, mn, arr in reqs:
+            sched.submit(p, mn, arrival_step=arr)
+        done[C] = {r.rid: r for r in sched.run()}
+        scheds[C] = sched
+    assert sorted(done[0]) == sorted(done[chunk])
+    for rid in done[0]:
+        assert_tokens_match(done[chunk][rid].output, done[0][rid].output)
+    return scheds[chunk], done[chunk]
+
+
+def test_chunked_matches_whole_prompt_dense(yi_engine):
+    """Greedy outputs must be bit-identical between chunked (C=8, prompts
+    20-48 tokens -> 3-6 chunks each) and whole-prompt admission, and match
+    solo generation exactly."""
+    eng = yi_engine
+    reqs = long_requests(eng.cfg)
+    sched, done = run_chunked_vs_whole(
+        eng, reqs,
+        lambda e, C: ContinuousScheduler(e, n_slots=3, block_steps=4,
+                                         prefill_chunk=C))
+    assert sched.stats["chunked_admissions"] == len(reqs)
+    assert sched.stats["prefill_chunks"] > len(reqs)   # real multi-chunk
+    assert sched.stats["in_flight_admissions"] > 0     # decode was live
+    for rid, (p, mn, _) in enumerate(reqs):
+        solo = eng.generate(p[None], mn)[0]
+        assert_tokens_match(done[rid].output, solo)
+    # the chunked path compiled exactly one prefill width: no pow-2 buckets
+    summ = sched.request_summary()
+    assert "decode_itl_admission_s" in summ and "decode_itl_s" in summ
+
+
+def test_chunked_matches_whole_prompt_paged(yi_engine):
+    sched, _ = run_chunked_vs_whole(
+        yi_engine, long_requests(yi_engine.cfg, seed=1),
+        lambda e, C: PagedContinuousScheduler(e, n_slots=3, block_steps=4,
+                                              prefill_chunk=C, block_size=8))
+    assert sched.stats["chunked_admissions"] > 0
+    assert sched.stats["preemptions"] == 0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_int8_kv(paged):
+    """Quantized-cache chunk writes (scatter of int8 values + scales at
+    per-row offsets) must reproduce the whole-prompt admission exactly."""
+    eng = greedy_engine("yi-9b", parallel=ParallelConfig(
+        tp=1, dp=1, remat=False, kv_quant=True))
+    if paged:
+        make = lambda e, C: PagedContinuousScheduler(
+            e, n_slots=2, block_steps=4, prefill_chunk=C, block_size=8)
+    else:
+        make = lambda e, C: ContinuousScheduler(e, n_slots=2, block_steps=4,
+                                                prefill_chunk=C)
+    sched, _ = run_chunked_vs_whole(eng, long_requests(eng.cfg, n=4, seed=2),
+                                    make)
+    assert sched.stats["chunked_admissions"] > 0
+    import jax as _jax
+    assert any(l.dtype == np.int8 for l in _jax.tree.leaves(sched.caches))
+
+
+def test_chunked_prefix_reuse_paged(yi_engine):
+    """Chunked admission composes with the hash-chained prefix cache: the
+    first chunk resumes right AFTER the matched prefix, prefix blocks
+    publish only once the final chunk lands, and outputs stay identical to
+    whole-prompt admission and solo generation."""
+    eng = yi_engine
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, eng.cfg.vocab_size, 24).astype(np.int32)
+    reqs = []
+    for i in range(3):
+        suffix = rng.integers(0, eng.cfg.vocab_size, 20).astype(np.int32)
+        # r0 decodes long enough to keep its blocks (and prefix entries)
+        # alive while r1/r2 admit -> they match the 24-token shared prefix
+        reqs.append((np.concatenate([shared, suffix]),
+                     16 if i == 0 else 4, i * 2))
+    done = {}
+    for C in (0, 8):
+        sched = PagedContinuousScheduler(eng, n_slots=3, block_steps=2,
+                                         prefill_chunk=C, block_size=8)
+        for p, mn, arr in reqs:
+            sched.submit(p, mn, arrival_step=arr)
+        done[C] = {r.rid: r for r in sched.run()}
+        # whole-prompt publishes the full prefix at admission (both later
+        # requests reuse all 24 tokens); chunked publishes INCREMENTALLY,
+        # so a request admitted mid-stream reuses the blocks completed so
+        # far (r1 gets a partial prefix, r2 the full one)
+        assert sched.stats["prefill_tokens_saved"] >= (48 if C == 0 else 32), C
+    for rid, (p, mn, _) in enumerate(reqs):
+        assert_tokens_match(done[8][rid].output, done[0][rid].output)
+        solo = eng.generate(p[None], mn)[0]
+        assert_tokens_match(done[8][rid].output, solo)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "minicpm3-4b"])
+def test_chunked_fallback_ineligible_archs(arch):
+    """Recurrent and MLA families silently fall back to whole-prompt
+    admission (chunking needs view-index == position attention over the
+    slot stripe) and still match solo generation."""
+    eng = greedy_engine(arch, max_len=64)
+    sched = ContinuousScheduler(eng, n_slots=2, block_steps=4,
+                                prefill_chunk=8)
+    assert sched.chunk == 0
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, eng.cfg.vocab_size, 20).astype(np.int32), 4)
+            for _ in range(2)]
+    for p, mn in reqs:
+        sched.submit(p, mn)
+    done = {r.rid: r for r in sched.run()}
+    assert sched.stats["chunked_admissions"] == 0
+    for rid, (p, mn) in enumerate(reqs):
+        solo = eng.generate(p[None], mn)[0]
+        assert_tokens_match(done[rid].output, solo)
+
+
+def test_decode_advances_during_chunked_admission(yi_engine):
+    """The point of the mixed step: while a long prompt streams in, the
+    already-running request keeps emitting one token per step (it never
+    waits for the whole prompt)."""
+    eng = yi_engine
+    rng = np.random.default_rng(9)
+    sched = ContinuousScheduler(eng, n_slots=2, block_steps=4,
+                                prefill_chunk=8)
+    p0 = rng.integers(0, eng.cfg.vocab_size, 6).astype(np.int32)
+    p1 = rng.integers(0, eng.cfg.vocab_size, 40).astype(np.int32)  # 5 chunks
+    r0 = sched.submit(p0, max_new=16)
+    r1 = sched.submit(p1, max_new=4, arrival_step=1)
+    order = []
+    sched.on_token = lambda rid, t: order.append(rid)
+    done = {r.rid: r for r in sched.run()}
+    assert len(done[r0].output) == 16 and len(done[r1].output) == 4
+    # r0 tokens were interleaved with r1's admission: r1's first token
+    # appears strictly before r0's last (no whole-prompt stall reordering)
+    assert order.index(r1) < len(order) - 1 - order[::-1].index(r0)
+    assert sched.stats["prefill_chunks"] >= 5
+    # every mixed step also ran a decode step
+    assert sched.stats["decode_steps"] >= sched.stats["prefill_chunks"]
+
+
+def test_flash_prefill_engine_chunked():
+    """Pallas flash-prefill wired through the chunked engine path
+    (interpret mode): greedy outputs agree with the scan path on the same
+    chunked schedule (fp32 kernel accumulation vs the scan's bf16 p@v can
+    differ in low bits, so token agreement is checked on a short,
+    well-separated greedy run)."""
+    outs = {}
+    for flash in (False, True):
+        eng = greedy_engine("yi-9b", parallel=ParallelConfig(
+            tp=1, dp=1, remat=False, use_pallas=True, flash_prefill=flash))
+        sched = ContinuousScheduler(eng, n_slots=2, block_steps=4,
+                                    prefill_chunk=8)
+        rng = np.random.default_rng(11)
+        for _ in range(2):
+            sched.submit(rng.integers(0, eng.cfg.vocab_size, 24)
+                         .astype(np.int32), 5)
+        outs[flash] = {r.rid: r.output for r in sched.run()}
+    for rid in outs[False]:
+        assert_tokens_match(outs[True][rid], outs[False][rid])
