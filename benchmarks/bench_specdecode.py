@@ -1,0 +1,167 @@
+"""Speculative decoding: serving bench, spec vs plain decode (BENCH_spec.json).
+
+Two traffic mixes through the continuous-batching slot engine, each served
+twice — plain one-token decode vs n-gram-drafted speculative decode with the
+fused multi-token verify step:
+
+1. **repetitive-text** — prompts tile a short motif and decode runs long:
+   greedy generation locks into the model's own attractor cycles, exactly
+   the regime prompt-lookup drafting predicts (the proxy for high
+   context-overlap workloads: summarization, code edit, extraction).  Spec
+   decode should win big here (acceptance -> ~k once locked).
+2. **random-text** — incompressible random prompts, short decode: the
+   drafter rarely matches, so most verify steps emit the 1-token floor
+   while paying a width-(k+1) forward.  The honest floor datapoint: on
+   this toy-scale CPU setup dispatch overhead dominates, so even low
+   acceptance can break even; at real model scale the wider forward makes
+   this mix a net loss (see README for the tradeoff).
+
+Both modes run ``block_steps=1`` (one dispatch per step): spec decode
+cannot fuse steps — each step's drafts depend on the previous step's
+emissions — so fusing the baseline would conflate dispatch amortization
+with the verify win.  The metrics are tok/s, acceptance rate, and
+tokens/step against the same-requests baseline.
+
+``greedy_token_agreement`` counts requests whose spec output is bit-equal
+to the baseline's.  Every emitted token is the greedy argmax of its own
+conditional in both modes, but the width-(k+1) verify program and the
+width-1 decode program are different XLA compilations whose written KV can
+differ by ±1 bf16 ulp — on long cycle-locked streams (recurring logit
+near-ties) that can flip a tie mid-stream, after which the two runs follow
+different (equally greedy) trajectories.  Same caveat class the chunked-
+prefill suite documents for multi-device compilation differences.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_specdecode.py
+(--no-json to skip writing BENCH_spec.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
+
+
+def make_requests(cfg, mix: str, n_requests: int, arrival_every: int,
+                  seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        if mix == "repetitive":
+            motif = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+            prompt, max_new = np.tile(motif, 6), 256
+        else:
+            plen = int(rng.integers(16, 33))
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            max_new = 48
+        reqs.append((prompt, max_new, i * arrival_every))
+    return reqs
+
+
+def run_serving(eng, reqs, n_slots: int, spec_k: int):
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    sched = ContinuousScheduler(eng, n_slots=n_slots, block_steps=1,
+                                spec_k=spec_k)
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    emitted = sum(len(r.output) for r in done)
+    summ = sched.request_summary()
+    rec = {
+        "spec_k": spec_k, "requests": len(done), "emitted": emitted,
+        "wall_s": dt, "tok_per_s": emitted / dt if dt > 0 else float("inf"),
+        "decode_steps": sched.stats["decode_steps"],
+        "latency": {k: v for k, v in summ.items()
+                    if k not in ("spec", "requests")},
+    }
+    if spec_k:
+        rec["spec"] = summ["spec"]
+    return rec, {r.rid: r.output for r in done}
+
+
+def run(arch="yi-9b", n_requests=8, n_slots=4, spec_k=6, arrival_every=2,
+        max_len=320, seed=0, repeats=3):
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=max_len)
+
+    def best_of(reqs, k):
+        # wall-clock on a shared CPU container is noisy; each mode runs
+        # `repeats` times (identical deterministic schedules) and reports
+        # its best run, suppressing OS scheduling noise without touching
+        # the token/acceptance numbers (those are identical every repeat)
+        best = None
+        for _ in range(repeats):
+            rec, out = run_serving(eng, reqs, n_slots, k)
+            if best is None or rec["tok_per_s"] > best[0]["tok_per_s"]:
+                best = (rec, out)
+        return best
+
+    results = {}
+    for mix in ("repetitive", "random"):
+        reqs = make_requests(cfg, mix, n_requests, arrival_every, seed)
+        for k in (0, spec_k):                       # warm both programs
+            run_serving(eng, reqs[: n_slots - 1], n_slots, k)
+        base, out_b = best_of(reqs, 0)
+        spec, out_s = best_of(reqs, spec_k)
+        agree = sum(1 for rid in out_b
+                    if out_b[rid].shape == out_s[rid].shape
+                    and (out_b[rid] == out_s[rid]).all())
+        results[mix] = {
+            "baseline": base,
+            "spec": spec,
+            "tok_per_s_speedup": spec["tok_per_s"] / base["tok_per_s"],
+            "greedy_token_agreement": f"{agree}/{len(out_b)}",
+        }
+    return results
+
+
+def main(emit=None, json_path=BENCH_JSON, **kw):
+    results = run(**kw)
+    for mix, rec in results.items():
+        sp = rec["spec"]["spec"]
+        line = (f"{rec['baseline']['tok_per_s']:.0f} -> "
+                f"{rec['spec']['tok_per_s']:.0f} tok/s "
+                f"({rec['tok_per_s_speedup']:.2f}x); acceptance "
+                f"{sp['acceptance_rate']:.0%}, accepted/step "
+                f"{sp['mean_accepted_per_step']:.2f}, emitted/step "
+                f"{sp['mean_tokens_per_step']:.2f}; token agreement "
+                f"{rec['greedy_token_agreement']}")
+        print(f"{mix:12s} {line}", flush=True)
+        if emit is not None:
+            emit(f"spec/{mix}_tok_per_s", rec["spec"]["tok_per_s"], line)
+    rep = results["repetitive"]
+    print(f"repetitive-text speedup {rep['tok_per_s_speedup']:.2f}x at "
+          f"{rep['spec']['spec']['mean_tokens_per_step']:.2f} tokens/step "
+          f"(plain decode floor = 1.0)", flush=True)
+    if json_path:
+        payload = {
+            "meta": {"bench": "spec_decode",
+                     "repetitive_speedup": rep["tok_per_s_speedup"],
+                     "repetitive_mean_tokens_per_step":
+                         rep["spec"]["spec"]["mean_tokens_per_step"], **kw},
+            "mixes": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

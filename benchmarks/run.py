@@ -32,7 +32,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (bench_continuous_batching, bench_one_shot,
-                            bench_paged_kv, bench_sync_minimization,
+                            bench_paged_kv, bench_prefill,
+                            bench_specdecode, bench_sync_minimization,
                             bench_token_latency, bench_zero_copy)
 
     benches = [
@@ -42,6 +43,8 @@ def main() -> None:
         ("zero_copy", bench_zero_copy.main),
         ("continuous_batching", bench_continuous_batching.main),
         ("paged_kv", bench_paged_kv.main),
+        ("prefill", bench_prefill.main),
+        ("spec_decode", bench_specdecode.main),
     ]
     failures = []
     for name, fn in benches:

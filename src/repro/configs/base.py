@@ -298,6 +298,17 @@ class ParallelConfig:
     # (whole-prompt admission only); attention-pure GQA archs only — MLA,
     # windowed, and recurrent families fall back automatically.
     prefill_chunk: int = 256
+    # speculative decoding (continuous-batching schedulers): propose spec_k
+    # draft tokens per active slot from a host-side n-gram prompt-lookup
+    # drafter and score all spec_k+1 positions in ONE fused verify step (a
+    # width-(k+1) chunk at the decode frontier), emitting 1..spec_k+1
+    # tokens per step.  0 disables (plain one-token decode).  Greedy spec
+    # decode is token-identical to plain greedy decode; eligibility matches
+    # chunked prefill (attention-pure GQA archs — MLA, windowed, and
+    # recurrent families fall back automatically).
+    spec_k: int = 0
+    spec_ngram: int = 3         # longest n-gram the prompt-lookup drafter
+                                # matches (falls through to shorter n-grams)
     # paged KV cache (slot engine second storage backend; dense remains the
     # default and the only layout for wave mode).  PagedContinuousScheduler
     # reads these as its defaults; constructor args override.

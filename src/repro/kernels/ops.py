@@ -62,6 +62,18 @@ def paged_flash_prefill(q, kp, vp, bt, q_pos, scale):
                                    interpret=INTERPRET)
 
 
+def flash_verify(q, k, v, q_pos, scale):
+    """Narrow-q (speculative-verify / small-chunk) specialization of
+    ``flash_prefill``: q tile rounded up to whole sublane groups, wider KV
+    slabs — same kernel body, blocking tuned for Sq = spec_k+1.  (The
+    paged kernel needs no counterpart: its KV blocking is pinned to the
+    pool block size and the q-tile round-up is in the shared clamp.)"""
+    from repro.kernels import prefill_attention as _pa
+
+    return _pa.flash_verify(q, k, v, q_pos, float(scale),
+                            interpret=INTERPRET)
+
+
 def lru_scan(a, b, h0):
     """RG-LRU linear-recurrence scan: h_t = a_t h_{t-1} + b_t."""
     from repro.kernels import lru_scan as _ls

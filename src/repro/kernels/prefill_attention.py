@@ -131,7 +131,10 @@ def flash_prefill(
     b, hq, sq, hd = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     g = hq // hkv
-    bq = min(block_q, sq)
+    # clamp the q tile to Sq rounded UP to a whole sublane group (multiple
+    # of 8) rather than raw Sq, so narrow-q callers (flash_verify) get a
+    # full-sublane tile with q_pos = -1 pad rows instead of a sliver
+    bq = min(block_q, -(-sq // 8) * 8)
     bk = min(block_k, sk)
     pad_q, pad_k = (-sq) % bq, (-sk) % bk
     if pad_q:
@@ -172,6 +175,35 @@ def flash_prefill(
     return _unfold_o(o, b, hkv, sq)
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def flash_verify(
+    q: jax.Array,        # (b, hq, Sq, hd), Sq = spec_k+1 (tiny)
+    k: jax.Array,        # (b, hkv, Sk, hd) cache stripe
+    v: jax.Array,
+    q_pos: jax.Array,    # (b, Sq) int32 view position per query
+    scale: float,
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+):
+    """Verify-width specialization of :func:`flash_prefill` for the
+    speculative-decode verify step (Sq = spec_k+1, typically 2..9).
+
+    Same kernel body, different blocking: the generic path would carve an
+    Sq-row q tile (a sliver of a sublane group) and stream 128-wide KV
+    blocks past it — one grid step per 128 cache tokens for a near-empty
+    MXU tile.  Here the single q tile is rounded UP to whole sublane
+    groups (multiples of 8; pad rows ride with q_pos = -1 and emit zeros)
+    and the KV block widens to ``block_k``, so the q-block grid dimension
+    degenerates to 1 and the whole cache streams through 4x fewer, fuller
+    slabs.  Dead-beyond-causality KV blocks still skip their update, so
+    blocks past the decode frontier cost no FLOPs."""
+    sq = q.shape[2]
+    bq = -(-sq // 8) * 8
+    return flash_prefill(q, k, v, q_pos, scale, block_q=bq,
+                         block_k=block_k, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "block_q", "interpret"))
 def paged_flash_prefill(
     q: jax.Array,        # (b, hq, Sq, hd)
@@ -193,7 +225,8 @@ def paged_flash_prefill(
     nb, hkv, bs, _ = kp.shape
     nbps = bt.shape[1]
     g = hq // hkv
-    bq = min(block_q, sq)
+    bq = min(block_q, -(-sq // 8) * 8)   # same sublane-group round-up as
+                                         # the dense kernel
     pad_q = (-sq) % bq
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
@@ -241,3 +274,11 @@ def paged_flash_prefill(
         interpret=interpret,
     )(bt.astype(jnp.int32), q_pos.astype(jnp.int32), qg, kp, vp)
     return _unfold_o(o, b, hkv, sq)
+
+
+# NOTE: the paged kernel needs no separate verify entry point — its KV
+# blocking is pinned to the pool's block size (table entries are
+# non-contiguous, one grid step per block either way) and the sublane
+# round-up of narrow q tiles happens in the shared clamp above, so
+# spec-decode verify widths already get the right blocking through
+# paged_flash_prefill.

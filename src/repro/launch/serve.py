@@ -23,6 +23,12 @@ Schedulers (``--scheduler``):
               failing), ``--no-prefix-cache`` disables shared-prefix block
               reuse, ``--shared-prefix N`` prepends one common N-token
               system prompt to every request so the reuse path is visible.
+
+Both continuous schedulers also take ``--spec-k N`` (speculative decoding:
+n-gram prompt-lookup drafts + fused multi-token verify, emitting 1..N+1
+tokens per step; ``--spec-ngram`` caps the lookup n-gram length and
+``--no-spec-decode`` forces plain decode) — the stats block then reports
+acceptance rate and tokens/step.
 """
 from __future__ import annotations
 
@@ -49,7 +55,9 @@ def build_engine(args):
                          kv_block_size=args.kv_block_size,
                          kv_pool_blocks=args.kv_pool_blocks,
                          prefill_chunk=args.prefill_chunk,
-                         flash_prefill=not args.no_flash_prefill)
+                         flash_prefill=not args.no_flash_prefill,
+                         spec_k=0 if args.no_spec_decode else args.spec_k,
+                         spec_ngram=args.spec_ngram)
     return Engine(cfg=cfg, parallel=par,
                   sampling=SamplingConfig(top_k=args.top_k),
                   mesh=mesh, max_len=args.max_len)
@@ -122,6 +130,20 @@ def main(argv=None):
     ap.add_argument("--no-flash-prefill", action="store_true",
                     help="keep prefill attention on the pure-JAX scan even "
                          "when Pallas kernels are enabled")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="continuous/paged: speculative decoding — propose "
+                         "N draft tokens per active slot from the n-gram "
+                         "prompt-lookup drafter and verify all of them in "
+                         "one fused multi-token step (emits 1..N+1 tokens "
+                         "per step); 0 = plain one-token decode.  "
+                         "Attention-pure GQA archs only — MLA/windowed/"
+                         "recurrent families fall back")
+    ap.add_argument("--no-spec-decode", action="store_true",
+                    help="force plain one-token decode even when --spec-k "
+                         "is set")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest n-gram the prompt-lookup drafter matches "
+                         "against each request's history")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals by N decode steps per request")
     ap.add_argument("--max-new-spread", type=int, default=1,
@@ -163,6 +185,15 @@ def main(argv=None):
         if s.get("chunked_admissions"):
             print(f"  chunked prefill: {s['chunked_admissions']} requests in "
                   f"{s['prefill_chunks']} chunks of <= {sched.chunk} tokens")
+        if "spec" in lat:
+            sp, tps = lat["spec"], lat.get("tokens_per_step", {})
+            print(f"  spec decode (k={sched.spec_k}, "
+                  f"ngram<={sched.spec_ngram}): acceptance "
+                  f"{sp['acceptance_rate']:.0%}, mean accepted "
+                  f"{sp['mean_accepted_per_step']:.2f} tokens/step "
+                  f"({sp['mean_tokens_per_step']:.2f} emitted; "
+                  f"tokens/step p50 {tps.get('p50', 1):.0f} "
+                  f"p95 {tps.get('p95', 1):.0f})")
         if "decode_itl_admission_s" in lat:
             adm, itl = lat["decode_itl_admission_s"], lat["decode_itl_s"]
             print(f"  decode inter-token p50/p95 {itl['p50']*1e3:.1f}/"

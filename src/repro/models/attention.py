@@ -25,6 +25,8 @@ from repro.core.zero_copy import fused_out_projection
 from repro.models.common import Dist, ParamDef, ShardPlan, apply_rope
 
 KV_CHUNK = 1024  # flash-style kv chunk for prefill
+VERIFY_WIDTH = 8  # query widths at/below this take the narrow-q (verify)
+                  # flash-kernel specialization on the chunk path
 
 
 # ---------------------------------------------------------------------------
@@ -438,26 +440,25 @@ def _write_prefill_chunk(cache_side: jax.Array, new: jax.Array,
     """Scatter a (b,h,C,hd) prefill CHUNK into the dense (b,h,S,hd) slot
     cache with each row at its own view offset ``starts[b]`` — the resume
     point of chunked admission (chunk k of a prompt lands at
-    [k*C, k*C + C)).  Rows clamp in range; chunk-tail padding beyond a
-    row's true length writes garbage K/V that stays dead because the
+    [k*C, k*C + C)) and of the spec-decode verify step.  Writes past the
+    cache end are DROPPED, not clamped: chunk-tail padding (and rejected
+    verify drafts) on a row whose frontier reaches the last cache entry
+    would otherwise race the real write at S-1 with an undefined
+    duplicate-index winner.  In-range tail garbage stays dead because the
     engine's position-row rewrite marks only [0, start + len) valid."""
     b, h, C, hd = new.shape
-    S = cache_side.shape[2]
     vpos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (b,C)
-    idx = jnp.clip(vpos, 0, S - 1)
-    return cache_side.at[jnp.arange(b)[:, None], :, idx, :].set(
-        new.transpose(0, 2, 1, 3).astype(cache_side.dtype))
+    return cache_side.at[jnp.arange(b)[:, None], :, vpos, :].set(
+        new.transpose(0, 2, 1, 3).astype(cache_side.dtype), mode="drop")
 
 
 def _write_prefill_chunk_scale(cache_side: jax.Array, new: jax.Array,
                                starts: jax.Array) -> jax.Array:
     """Scale variant: (b,h,C) chunk into the (b,h,S) scale stripe."""
     b, h, C = new.shape
-    S = cache_side.shape[2]
     vpos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-    idx = jnp.clip(vpos, 0, S - 1)
-    return cache_side.at[jnp.arange(b)[:, None], :, idx].set(
-        new.transpose(0, 2, 1).astype(cache_side.dtype))
+    return cache_side.at[jnp.arange(b)[:, None], :, vpos].set(
+        new.transpose(0, 2, 1).astype(cache_side.dtype), mode="drop")
 
 
 def _write_decode(cache_side: jax.Array, new: jax.Array, cur_pos: jax.Array,
@@ -753,8 +754,11 @@ def gqa_forward(
                 if not quant and use_flash and not window:
                     from repro.kernels import ops as kops
 
-                    out = kops.paged_flash_prefill(q, ck, cv, bt, positions,
-                                                   scale)
+                    # narrow chunks (spec-decode verify: Sq = spec_k+1) get
+                    # their sublane-rounded q tile inside the kernel; KV
+                    # blocking is pinned to the pool block size either way
+                    out = kops.paged_flash_prefill(q, ck, cv, bt,
+                                                   positions, scale)
                 else:
                     if quant:
                         k_att = _dequantize_kv(_paged_view(ck, bt), _paged_view_scale(cks, bt))
@@ -844,7 +848,10 @@ def gqa_forward(
             if use_flash:
                 from repro.kernels import ops as kops
 
-                out = kops.flash_prefill(q, k_att, v_att, positions, scale)
+                if s <= VERIFY_WIDTH:   # spec-decode verify chunk
+                    out = kops.flash_verify(q, k_att, v_att, positions, scale)
+                else:
+                    out = kops.flash_prefill(q, k_att, v_att, positions, scale)
             else:
                 kv_pos = jnp.arange(S, dtype=jnp.int32)
                 out = chunked_causal_attention(q, k_att, v_att, positions,

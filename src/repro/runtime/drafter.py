@@ -1,0 +1,78 @@
+"""Model-free speculative drafting: prompt-lookup / n-gram continuation.
+
+Autoregressive decode is bandwidth-bound — one weight sweep buys exactly one
+token per sequence — so the remaining big lever after sync minimization
+(arXiv 2407.00029) and batching is amortizing the sweep across several
+tokens.  Draft-model speculation needs a second model resident in memory (on
+CPUs, exactly the resource the paper is rationing); *prompt lookup* instead
+proposes the continuation of the most recent occurrence of the sequence's
+trailing n-gram in its own history (prompt + generated tokens).  That is
+free on the host, needs no extra memory, and wins precisely on the
+workloads where decode output overlaps its context (summarization,
+code edit, RAG, extraction) or where generation is locally repetitive.
+
+The drafter is pure host-side numpy; the engine's fused verify step scores
+all ``k`` proposals plus the bonus position in one forward pass and accepts
+the longest matching prefix, so a wrong draft costs compute but never
+correctness: greedy speculative decode is token-identical to plain greedy
+decode by construction (targets are argmaxes of the same conditionals).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class NgramDrafter:
+    """Propose ``k`` draft tokens per call by n-gram prompt lookup.
+
+    For ``n = ngram_max .. ngram_min``: find the most recent earlier
+    occurrence of the history's trailing n-gram; if found, propose the ``k``
+    tokens that followed it (padded by repeating the continuation's tail
+    when the match sits near the end of history).  Longer n-grams are tried
+    first — they are rarer and their continuations more reliable.  With no
+    match at any n, the last token is repeated: a guaranteed-shape fallback
+    that costs nothing when rejected (the verify step still emits its one
+    bonus token, so the zero-acceptance floor is exactly plain decode).
+    """
+
+    def __init__(self, k: int, ngram_max: int = 3, ngram_min: int = 1):
+        if k < 1:
+            raise ValueError("drafter needs k >= 1")
+        if not (1 <= ngram_min <= ngram_max):
+            raise ValueError("need 1 <= ngram_min <= ngram_max")
+        self.k = k
+        self.ngram_max = ngram_max
+        self.ngram_min = ngram_min
+
+    @staticmethod
+    def _last_match(hist: np.ndarray, n: int) -> Optional[int]:
+        """Start index of the most recent occurrence of ``hist[-n:]`` that
+        ends strictly before the final position (so a continuation exists),
+        or None."""
+        if len(hist) <= n:
+            return None
+        pat = hist[-n:]
+        # windows start at 0..len-n; the last one IS the pattern — exclude it
+        win = np.lib.stride_tricks.sliding_window_view(hist, n)[:-1]
+        matches = np.nonzero((win == pat).all(axis=1))[0]
+        return int(matches[-1]) if matches.size else None
+
+    def propose(self, history: np.ndarray) -> np.ndarray:
+        """history (prompt + generated so far, most recent last) -> (k,)
+        int32 draft tokens continuing it."""
+        hist = np.asarray(history, dtype=np.int64).ravel()
+        if len(hist) == 0:
+            raise ValueError("cannot draft from an empty history")
+        for n in range(min(self.ngram_max, len(hist) - 1),
+                       self.ngram_min - 1, -1):
+            i = self._last_match(hist, n)
+            if i is None:
+                continue
+            cont = hist[i + n: i + n + self.k]
+            if len(cont) < self.k:           # match near the end: pad by
+                cont = np.concatenate(       # repeating the continuation tail
+                    [cont, np.full(self.k - len(cont), cont[-1])])
+            return cont.astype(np.int32)
+        return np.full(self.k, hist[-1], np.int32)

@@ -280,6 +280,88 @@ def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
     return mixed
 
 
+def make_spec_verify_step(ctx: M.ModelCtx, sampling: SamplingConfig,
+                          *, paged: bool):
+    """Fused multi-token speculative-decode verify step.
+
+    (params, vtokens (b, K+1), caches, pos, done, remaining, eos, [bt,] rng)
+      -> (targets (b, K+1), n_emit (b,), nxt (b,), caches, pos', done',
+          remaining')
+
+    ``vtokens[:, 0]`` is each slot's pending token (the one plain decode
+    would feed this step); columns 1..K are the host drafter's proposals.
+    A verify step IS a width-(K+1) prefill chunk at the decode frontier:
+    the K+1 tokens scatter into the cache at view offsets pos..pos+K via
+    the batched-offset chunk writers, each row attends its stripe
+    [0, pos+K] through the same flash-prefill path as chunked admission
+    (view index == absolute position, causality does all the masking), and
+    ALL K+1 positions sample a target token from one forward pass — one
+    weight sweep scores K+1 conditionals instead of 1.
+
+    Per slot, targets[j] is drawn from the true conditional given
+    [history, vtokens[:j+1]]; draft j+1 is accepted iff it equals
+    targets[j], so the emitted run targets[0..acc] (``acc`` accepted drafts
+    + the bonus token at the first rejected position) is distributed
+    exactly as plain autoregressive decode — and bit-identical under
+    greedy.  The emit length is additionally cut at the slot's budget and
+    at the first EOS among the emitted run, mirroring the masked
+    slot-decode stopping rule in-program.
+
+    KV rewind: entries pos+e..pos+K hold K/V of rejected drafts.  Dense
+    slots rewind by position mask (set_slot_positions marks [0, pos+e)
+    valid; the dead entries are overwritten by the next verify chunk
+    before they could ever be attended, since its writes start exactly at
+    pos+e).  Paged slots additionally have their block tables truncated on
+    the host after the step.  Frozen rows (done / mid-admission) keep
+    their cache bit-for-bit: dense rows merge from the old tree, paged
+    rows write through a nulled block-table row."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+
+    def verify(params, vtokens, caches, pos, done, remaining, eos, *rest):
+        *bts, rng = rest
+        bt = bts[0] if paged else None
+        b, K1 = vtokens.shape
+        active = (~done) & (remaining > 0)
+        hidden, new_caches, _ = M.forward(
+            params, vtokens, ctx, caches=caches, last_only=False,
+            skip_head=True, seq_sharded=True, start_pos=pos,
+            block_tables=bt,
+        )
+        logits = M.lm_head_local(params, hidden, ctx)      # (b, K+1, Vp)
+        targets = sample_tokens(
+            logits.reshape(b * K1, -1), rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        ).reshape(b, K1)
+        # longest accepted draft prefix, then cut at EOS and budget
+        match = (vtokens[:, 1:] == targets[:, :-1]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)       # (b,) in [0, K]
+        idx = jnp.arange(K1, dtype=jnp.int32)
+        is_eos = (eos[:, None] >= 0) & (targets == eos[:, None])
+        j_eos = jnp.min(jnp.where(is_eos, idx[None, :], K1), axis=1)
+        e = jnp.minimum(jnp.minimum(acc + 1, j_eos + 1), remaining)
+        e = jnp.where(active, e, 0).astype(jnp.int32)
+        new_pos = pos + e
+        new_remaining = remaining - e
+        hit_eos = active & (j_eos < e)
+        new_done = done | hit_eos | (active & (new_remaining <= 0))
+        last = jnp.clip(e - 1, 0, K1 - 1)
+        nxt = jnp.where(
+            active,
+            jnp.take_along_axis(targets, last[:, None], axis=1)[:, 0],
+            vtokens[:, 0])
+        # rewind: exactly [0, pos+e) is valid for active rows; frozen rows
+        # keep their old cache (and pos rows) through the per-row merge
+        new_caches = kvcache.set_slot_positions(new_caches, groups, new_pos)
+        merged = kvcache.merge_slots(caches, new_caches, groups, active,
+                                     paged=paged)
+        return targets, e, nxt, merged, new_pos, new_done, new_remaining
+
+    return verify
+
+
 def make_paged_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
     """Masked per-slot decode over the paged pool: the dense slot-decode
     body with cache reads/writes routed through the block table.
@@ -534,6 +616,56 @@ class Engine:
             jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
             jnp.asarray(remaining, jnp.int32), jnp.asarray(eos, jnp.int32),
             jnp.asarray(bt_w, jnp.int32), jnp.asarray(bt, jnp.int32), rng)
+
+    # -- speculative decoding (fused multi-token verify) -------------------
+    def _verify(self, paged: bool, K1: int):
+        """Lazily-built jitted verify program for draft width K1-1 (jit
+        retraces per distinct width; the scheduler pins one ``spec_k``, so
+        spec decode compiles exactly one verify program per backend)."""
+        cb = self._cb_paged() if paged else self._cb()
+        key = ("verify", K1)
+        if key not in cb:
+            pspecs = M.param_specs(self.ctx)
+            batch_spec, _, tok1, _, _ = self._specs()
+            cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                         batched_pos=True)
+            sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+            slot = P(*batch_spec)
+            tokk = P(*batch_spec, None)
+            extra = (tokk,) if paged else ()
+            ver = make_spec_verify_step(self.ctx, self.sampling, paged=paged)
+            cb[key] = jax.jit(
+                sm(ver, in_specs=(pspecs, tokk, cspec, slot, slot, slot,
+                                  slot, *extra, P()),
+                   out_specs=(tokk, slot, tok1, cspec, slot, slot, slot)),
+                donate_argnums=(2,) if self.parallel.zero_copy else (),
+            )
+        return cb[key]
+
+    def verify_slots(self, caches, vtokens, pos, done, remaining, eos, rng):
+        """One fused speculative verify step over the dense slot engine:
+        score ``vtokens`` (B, spec_k+1) = [pending token, drafts] at the
+        decode frontier of every active slot, accept the longest matching
+        draft prefix plus one bonus token, and rewind the cache past it.
+        Returns (targets (B, spec_k+1), n_emit (B,), nxt (B,), caches,
+        pos', done', remaining')."""
+        vtokens = jnp.asarray(vtokens, jnp.int32)
+        return self._verify(False, vtokens.shape[1])(
+            self.params, vtokens, caches, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
+            jnp.asarray(eos, jnp.int32), rng)
+
+    def verify_slots_paged(self, caches, vtokens, pos, done, remaining, eos,
+                           block_tables, rng):
+        """Paged verify step: the chunk scatter and the stripe gather both
+        route through ``block_tables`` (rows for frozen slots nulled by the
+        caller, confining their writes to the dead sink block)."""
+        vtokens = jnp.asarray(vtokens, jnp.int32)
+        return self._verify(True, vtokens.shape[1])(
+            self.params, vtokens, caches, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(done, bool), jnp.asarray(remaining, jnp.int32),
+            jnp.asarray(eos, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+            rng)
 
     # -- paged KV backend (slot engine, second storage layout) -------------
     def _cb_paged(self):

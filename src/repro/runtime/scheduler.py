@@ -158,7 +158,9 @@ class ContinuousScheduler:
                  block_steps: int = 8, min_bucket: int = 8,
                  responsive_blocks: bool = False,
                  on_token: Optional[Callable[[int, int], None]] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 spec_k: Optional[int] = None,
+                 spec_ngram: Optional[int] = None):
         if engine.cfg.n_codebooks != 1:
             raise NotImplementedError(
                 "ContinuousScheduler serves single-codebook archs "
@@ -211,6 +213,27 @@ class ContinuousScheduler:
         if chunk and not self._chunk_eligible(cfg):
             chunk = 0
         self.chunk = min(int(chunk), self.prompt_limit) if chunk else 0
+        # speculative decoding: an n-gram prompt-lookup drafter proposes
+        # spec_k tokens per active slot; one fused verify step (a width
+        # spec_k+1 chunk at the decode frontier) scores them all and emits
+        # the accepted prefix + one bonus token.  Eligibility matches
+        # chunked prefill: the verify chunk resumes mid-cache, which needs
+        # view-index == absolute-position attention over the slot stripe.
+        sk = spec_k if spec_k is not None else engine.parallel.spec_k
+        if sk and not self._chunk_eligible(cfg):
+            sk = 0
+        self.spec_k = max(0, int(sk or 0))
+        self.spec_ngram = int(spec_ngram if spec_ngram is not None
+                              else engine.parallel.spec_ngram)
+        self.drafter = None
+        if self.spec_k:
+            from repro.runtime.drafter import NgramDrafter
+            self.drafter = NgramDrafter(self.spec_k,
+                                        ngram_max=self.spec_ngram)
+            self.stats.update({
+                "spec_steps": 0, "spec_slot_steps": 0, "spec_proposed": 0,
+                "spec_accepted": 0, "spec_emitted": 0,
+            })
         # decode inter-token latency stream: (seconds/step, during-admission);
         # bounded so a long-lived server doesn't grow host memory per step —
         # summaries cover the most recent window
@@ -218,6 +241,9 @@ class ContinuousScheduler:
         self._itl: "deque[Tuple[float, bool]]" = deque(maxlen=65536)
         self._last_step_t: Optional[float] = None
         self._admission_mark = False
+        # emitted tokens per (engine step, active slot): 1 for plain masked
+        # decode, 1..spec_k+1 under speculative decoding
+        self._tps: "deque[int]" = deque(maxlen=65536)
 
     # -- submission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
@@ -374,6 +400,7 @@ class ContinuousScheduler:
         frozen-slot repeats; final state must agree with the device's."""
         cur_done = self.dones.copy()
         cur_rem = self.remaining.copy()
+        emitted_block = 0
         for s in range(n):
             for i, slot in enumerate(self.slots):
                 if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
@@ -387,6 +414,8 @@ class ContinuousScheduler:
                     cur_done[i] = True
                 self.stats["emitted"] += 1
                 self.stats["active_slot_steps"] += 1
+                self._tps.append(1)
+                emitted_block += 1
         self.tok = toks[-1].copy()
         self.pos = np.array(pos)
         self.dones = np.array(done)
@@ -394,21 +423,112 @@ class ContinuousScheduler:
         self.step_count += n
         self.stats["decode_steps"] += n
         self.stats["slot_steps"] += n * self.B
-        self._note_itl(n)
+        self._note_itl(n, emissions=emitted_block)
 
-    def _note_itl(self, n: int) -> None:
-        """Record decode inter-token latency per step.  Samples whose
-        interval spans admission work (a whole-prompt prefill call since the
-        previous decode step, or a mixed chunk step) are tagged as
-        admission-window samples — the population whose p95 chunked prefill
-        exists to flatten.  Fused blocks attribute their uniform per-step
-        share to every step (host timing cannot see inside the block)."""
+    def _note_itl(self, n: int, emissions: Optional[int] = None,
+                  tokens_per_slot: Optional[List[int]] = None) -> None:
+        """Record decode inter-token latency: ONE sample per emitted token,
+        not per engine step, so plain and speculative runs weight the
+        distribution identically.  Plain masked decode: every token in a
+        fused block of ``n`` steps (``emissions`` of them) experienced the
+        block's uniform per-step share (host timing cannot see inside the
+        block).  A speculative verify step emits a variable run per slot
+        (``tokens_per_slot``): a slot that emitted e tokens in a T-second
+        step experienced per-token latency T/e, so it contributes e samples
+        of T/e — without this, multi-token steps would overstate ITL by the
+        acceptance factor.  Samples whose interval spans admission work (a
+        whole-prompt prefill call since the previous decode step, or a
+        mixed chunk step) are tagged as admission-window samples — the
+        population whose p95 chunked prefill exists to flatten."""
         now = time.monotonic()
         if self._last_step_t is not None:
-            per = (now - self._last_step_t) / n
-            self._itl.extend([(per, self._admission_mark)] * n)
+            dt = (now - self._last_step_t) / n
+            if tokens_per_slot is None:
+                m = n if emissions is None else emissions
+                self._itl.extend([(dt, self._admission_mark)] * m)
+            else:
+                for e in tokens_per_slot:
+                    if e > 0:
+                        self._itl.extend([(dt / e, self._admission_mark)] * e)
         self._last_step_t = now
         self._admission_mark = False
+
+    # -- speculative decoding (fused multi-token verify steps) -------------
+    def _active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.req is not None and not self.dones[i]
+                and self.remaining[i] > 0]
+
+    def _ensure_spec_capacity(self) -> None:
+        """Pre-verify capacity hook (paged: blocks for spec_k+1 writes)."""
+
+    def _run_verify(self, vtok):
+        return self.engine.verify_slots(
+            self.caches, vtok, self.pos, self.dones, self.remaining,
+            self.eos, self._next_rng())
+
+    def _post_verify(self, active: List[int]) -> None:
+        """Post-verify hook (paged: truncate block tables past the rewound
+        frontier so resident memory tracks accepted tokens, not drafts)."""
+
+    def _spec_step(self) -> None:
+        """One speculative serving step: draft spec_k tokens per active slot
+        from its own history (host n-gram lookup), verify all of them plus
+        the bonus position in ONE fused forward, emit each slot's accepted
+        run.  Every step emits at least one token per active slot (the
+        zero-acceptance floor is exactly plain decode), at most spec_k+1.
+
+        Unlike plain decode, verify steps are not fused into multi-step
+        blocks: each step's drafts depend on the tokens the previous step
+        emitted, so the drafter sits on the host between steps (block_steps
+        does not apply while spec decode is on)."""
+        K = self.spec_k
+        self._ensure_spec_capacity()       # may preempt: collect slots AFTER
+        active = self._active_slots()
+        if not active:
+            return
+        vtok = np.zeros((self.B, K + 1), np.int32)
+        vtok[:, 0] = self.tok
+        for i in active:
+            s = self.slots[i]
+            hist = np.concatenate(
+                [np.asarray(s.req.prompt, np.int32).ravel(),
+                 np.asarray(s.toks, np.int32)])
+            vtok[i, 1:] = self.drafter.propose(hist)
+        targets, n_emit, nxt, self.caches, pos, done, remaining = \
+            self._run_verify(vtok)
+        targets, n_emit = np.asarray(targets), np.asarray(n_emit)
+        counts = []
+        for i in active:
+            e = int(n_emit[i])
+            slot = self.slots[i]
+            for t in targets[i, :e].tolist():
+                slot.toks.append(int(t))
+                if self.on_token is not None:
+                    self.on_token(slot.req.rid, int(t))
+            counts.append(e)
+            self._tps.append(e)
+            # acceptance counts drafts the model VERIFIED correct (leading
+            # match run), independent of EOS/budget cuts to the emitted
+            # run — otherwise short-budget slots would bias the rate low
+            match = vtok[i, 1:] == targets[i, :-1]
+            acc = int(np.cumprod(match).sum())
+            self.stats["emitted"] += e
+            self.stats["active_slot_steps"] += 1
+            self.stats["spec_slot_steps"] += 1
+            self.stats["spec_emitted"] += e
+            self.stats["spec_accepted"] += acc
+        self.tok = np.asarray(nxt).copy()
+        self.pos = np.array(pos)
+        self.dones = np.array(done)
+        self.remaining = np.array(remaining)
+        self.step_count += 1
+        self.stats["decode_steps"] += 1
+        self.stats["slot_steps"] += self.B
+        self.stats["spec_steps"] += 1
+        self.stats["spec_proposed"] += K * len(active)
+        self._note_itl(1, tokens_per_slot=counts)
+        self._post_verify(active)
 
     # -- chunked admission (fused mixed prefill/decode steps) --------------
     def _prefilling(self) -> List[int]:
@@ -542,6 +662,25 @@ class ContinuousScheduler:
             adm = [d for d, a in self._itl if a]
             if adm:
                 out["decode_itl_admission_s"] = pct(adm)
+        if self._tps:
+            out["tokens_per_step"] = pct(list(self._tps))
+        if self.stats.get("spec_steps"):
+            prop = self.stats["spec_proposed"]
+            slot_steps = max(1, self.stats["spec_slot_steps"])
+            out["spec"] = {
+                "steps": self.stats["spec_steps"],
+                # fraction of proposed drafts the model verified correct
+                # (leading match run, independent of EOS/budget cuts)
+                "acceptance_rate": (self.stats["spec_accepted"] / prop
+                                    if prop else 0.0),
+                # tokens emitted per (verify step, active slot): the
+                # speedup factor over plain one-token decode (floor 1.0)
+                "mean_tokens_per_step": (self.stats["spec_emitted"]
+                                         / slot_steps),
+                # drafts verified correct per (verify step, active slot)
+                "mean_accepted_per_step": (self.stats["spec_accepted"]
+                                           / slot_steps),
+            }
         return out
 
     def _init_caches(self) -> None:
@@ -569,7 +708,10 @@ class ContinuousScheduler:
                 # idle: jump the virtual clock to the next arrival
                 self.step_count = max(self.step_count, min(pending))
                 continue
-            self._decode_block(n)
+            if self.spec_k:
+                self._spec_step()
+            else:
+                self._decode_block(n)
         self._retire()
         return self.done
 
@@ -610,12 +752,15 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  responsive_blocks: bool = False,
                  on_token: Optional[Callable[[int, int], None]] = None,
                  prefill_chunk: Optional[int] = None,
+                 spec_k: Optional[int] = None,
+                 spec_ngram: Optional[int] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None):
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
-                         responsive_blocks, on_token, prefill_chunk)
+                         responsive_blocks, on_token, prefill_chunk,
+                         spec_k, spec_ngram)
         cfg = engine.cfg
         if cfg.window and "local_attn" in cfg.layer_pattern:
             raise ValueError(
@@ -866,6 +1011,43 @@ class PagedContinuousScheduler(ContinuousScheduler):
                                            self.slot_blocks[slot][:n_full])
         self._finish_admission([s for s, _ in pairs], [r for _, r in pairs],
                                admit, np.array(new_tok))
+
+    # -- speculative decoding hooks ---------------------------------------
+    def _ensure_spec_capacity(self) -> None:
+        # a verify step writes up to spec_k+1 tokens per active slot
+        # (accepted or not — rejected writes are rewound afterwards); every
+        # slot needs block coverage for the worst case before the step
+        self._ensure_capacity(self.spec_k + 1)
+
+    def _run_verify(self, vtok):
+        # one table serves both halves of verify: active rows carry their
+        # real tables (the chunk scatter AND the stripe gather route through
+        # it), frozen rows are nulled so their writes sink into the dead
+        # block instead of touching live (possibly mid-admission) blocks
+        active = (~self.dones) & (self.remaining > 0)
+        bt_w = np.where(active[:, None], self.bt,
+                        kvcache.NULL_BLOCK).astype(np.int32)
+        return self.engine.verify_slots_paged(
+            self.caches, vtok, self.pos, self.dones, self.remaining,
+            self.eos, bt_w, self._next_rng())
+
+    def _post_verify(self, active: List[int]) -> None:
+        # block-table truncation = the paged half of KV rewind: blocks that
+        # _ensure_spec_capacity grabbed for draft positions past the
+        # accepted frontier hold only rejected-draft K/V (dead by the
+        # position rewind) — return them so resident memory tracks tokens
+        # actually accepted, and the freed blocks can serve other slots'
+        # admissions immediately.  self.pos is already the rewound
+        # frontier: entries [0, pos) are valid, the entry AT pos is written
+        # by the next step (whose capacity hook re-grows the table).
+        for i in active:
+            keep = -(-int(self.pos[i]) // self.bs)
+            blocks = self.slot_blocks[i]
+            if len(blocks) > keep:
+                self.alloc.free(self._shard_of(i), blocks[keep:])
+                self.bt[i, keep:len(blocks)] = kvcache.NULL_BLOCK
+                self.slot_blocks[i] = blocks[:keep]
+        self._note_usage()
 
     # -- chunked admission hooks ------------------------------------------
     def _pre_mixed(self) -> None:

@@ -1,0 +1,620 @@
+"""Speculative decoding: the n-gram drafter, the fused multi-token verify
+step (dense + paged), and scheduler integration.
+
+Correctness ladder:
+
+* **lockstep certification** — at every step, the verify program's emitted
+  tokens equal what the plain width-1 decode program produces from the
+  SAME state: each emitted token is the greedy argmax of its own
+  conditional.  This is the per-step guarantee and it is exact.
+* **end-to-end greedy bit-identity** — whole served streams match plain
+  decode across dense/paged/GQA/int8-KV.  The verify and decode programs
+  are different XLA compilations whose written KV can differ by ±1 bf16
+  ulp, which on very long cycle-locked streams can flip a recurring greedy
+  near-tie (the same caveat class the chunked-prefill suite documents for
+  multi-device); these tests run in the regime where bitwise equality
+  holds, and the lockstep test covers the per-step property at any length.
+* **degradation floor** — a drafter that never matches still emits exactly
+  one token per step (= plain decode), never zero, never corrupt.
+* **rewind invariants** — cache position rows mark exactly the accepted
+  extent; paged block tables truncate past the frontier and the allocator
+  refcounts return to zero after drain.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.runtime.drafter import NgramDrafter
+
+try:
+    import hypothesis
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                     # pragma: no cover
+    hypothesis = None
+
+BITWISE = jax.device_count() == 1
+
+
+def greedy_engine(arch="yi-9b", max_len=128, parallel=None, n_kv_heads=None):
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    if n_kv_heads is not None:
+        cfg = dataclasses.replace(cfg, n_kv_heads=n_kv_heads)
+    return Engine(cfg=cfg,
+                  parallel=parallel or ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=max_len)
+
+
+@pytest.fixture(scope="module")
+def yi_engine():
+    return greedy_engine()
+
+
+def requests_mix(cfg, n=5, seed=0, pmin=8, pmax=24, mmin=10, mmax=30):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(pmin, pmax + 1))).astype(np.int32),
+             int(rng.integers(mmin, mmax + 1)), i * 2)
+            for i in range(n)]
+
+
+def serve(eng, reqs, make_sched, spec_k, **kw):
+    sched = make_sched(eng, spec_k, **kw)
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    done = {r.rid: r for r in sched.run()}
+    return sched, done
+
+
+def assert_tokens_match(actual, desired):
+    actual, desired = np.asarray(actual), np.asarray(desired)
+    if BITWISE:
+        np.testing.assert_array_equal(actual, desired)
+        return
+    assert actual.shape == desired.shape
+    if len(actual):
+        assert actual[0] == desired[0]
+
+
+# ---------------------------------------------------------------------------
+# Drafter
+# ---------------------------------------------------------------------------
+
+
+def test_drafter_continues_recent_ngram():
+    d = NgramDrafter(3, ngram_max=3)
+    hist = np.array([5, 6, 7, 8, 1, 2, 5, 6, 7], np.int32)
+    # trailing 3-gram (5,6,7) occurred at the start, followed by 8, 1, 2
+    np.testing.assert_array_equal(d.propose(hist), [8, 1, 2])
+
+
+def test_drafter_prefers_most_recent_match():
+    d = NgramDrafter(2, ngram_max=2)
+    hist = np.array([1, 2, 9, 3, 1, 2, 4, 7, 1, 2], np.int32)
+    # (1,2) occurs at 0 (-> 9) and 4 (-> 4): the recent one wins
+    np.testing.assert_array_equal(d.propose(hist), [4, 7])
+
+
+def test_drafter_falls_through_ngram_lengths():
+    d = NgramDrafter(2, ngram_max=3)
+    # no 3-gram or 2-gram repeats; 1-gram (7) repeats -> its continuation
+    hist = np.array([7, 3, 1, 7], np.int32)
+    np.testing.assert_array_equal(d.propose(hist), [3, 1])
+
+
+def test_drafter_fallback_repeats_last_token():
+    d = NgramDrafter(4)
+    out = d.propose(np.array([1, 2, 3], np.int32))   # no repeats at all
+    np.testing.assert_array_equal(out, [3, 3, 3, 3])
+
+
+def test_drafter_pads_short_continuation():
+    d = NgramDrafter(5, ngram_max=2)
+    # (1,2) matched at position 0; the 4-token continuation [9,8,1,2] pads
+    # to k=5 by repeating its tail
+    hist = np.array([1, 2, 9, 8, 1, 2], np.int32)
+    np.testing.assert_array_equal(d.propose(hist), [9, 8, 1, 2, 2])
+
+
+if hypothesis is not None:
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 7), min_size=1, max_size=64),
+           st.integers(1, 6), st.integers(1, 4))
+    def test_drafter_properties(hist, k, nmax):
+        """Shape/type invariants + proposals are deterministic and, when a
+        real match exists, are genuine history continuations."""
+        d = NgramDrafter(k, ngram_max=nmax)
+        h = np.asarray(hist, np.int32)
+        out = d.propose(h)
+        assert out.shape == (k,) and out.dtype == np.int32
+        np.testing.assert_array_equal(out, d.propose(h))   # deterministic
+        assert set(out.tolist()) <= set(h.tolist())        # lookup, not invention
+
+
+# ---------------------------------------------------------------------------
+# Engine-level verify: lockstep certification + rewind invariants
+# ---------------------------------------------------------------------------
+
+
+def _admit(eng, B, plens, seed=3):
+    rng0 = np.random.default_rng(seed)
+    Lp = int(max(plens))
+    prompts = np.zeros((B, Lp), np.int32)
+    for i, L in enumerate(plens):
+        motif = rng0.integers(0, eng.cfg.vocab_size, 5).astype(np.int32)
+        prompts[i, :L] = np.tile(motif, -(-L // 5))[:L]
+    tok, caches = eng.prefill_into_slots(
+        eng.init_slot_caches(B), prompts, np.ones(B, bool),
+        np.asarray(plens, np.int32), jax.random.key(7))
+    return jnp.asarray(tok), caches
+
+
+def test_verify_matches_decode_lockstep(yi_engine):
+    """THE spec-decode guarantee, certified per step: from every reachable
+    state, the verify program's position-0 conditional equals the width-1
+    decode program's — numerically (the two are different XLA
+    compilations, so logits agree to bf16-accumulation tolerance, not
+    bitwise) and in argmax except where the top-2 gap is inside that
+    tolerance (a genuine tie either greedy answer is correct for)."""
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.models import model as M
+    from repro.runtime import kvcache
+
+    eng = yi_engine
+    ctx = eng.ctx
+    B, K = 4, 4
+    pspecs = M.param_specs(ctx)
+    cspec = kvcache.cache_pspecs(ctx, kv_seq_shard=False, batched_pos=True)
+    sm = partial(compat.shard_map, mesh=eng.mesh, check_vma=False)
+
+    def dec_fwd(params, t, caches, pos):
+        h, _, _ = M.forward(params, t[:, None], ctx, caches=caches,
+                            cur_pos=pos, kv_seq_axis=None, last_only=True,
+                            seq_sharded=False, skip_head=True)
+        return M.lm_head_local(params, h, ctx)[:, -1]
+
+    def ver_fwd(params, vt, caches, pos):
+        h, _, _ = M.forward(params, vt, ctx, caches=caches, last_only=False,
+                            skip_head=True, seq_sharded=True, start_pos=pos)
+        return M.lm_head_local(params, h, ctx)[:, 0]
+
+    jd = jax.jit(sm(dec_fwd, in_specs=(pspecs, P("data"), cspec, P("data")),
+                    out_specs=P("data", None)))
+    jv = jax.jit(sm(ver_fwd, in_specs=(pspecs, P("data", None), cspec,
+                                       P("data")),
+                    out_specs=P("data", None)))
+
+    plens = np.array([20, 28, 24, 30], np.int32)
+    tok, caches = _admit(eng, B, plens)
+    pos = plens.copy()
+    done = np.zeros(B, bool)
+    rem = np.full(B, 60, np.int32)
+    eos = np.full(B, -1, np.int32)
+    drafter = NgramDrafter(K)
+    hists = [[] for _ in range(B)]
+    ties = 0
+    for step in range(40):
+        r = jax.random.fold_in(jax.random.key(11), step)
+        vt = np.zeros((B, K + 1), np.int32)
+        vt[:, 0] = np.array(tok)
+        for i in range(B):
+            hist = np.asarray(hists[i] or [int(np.array(tok)[i])], np.int32)
+            vt[i, 1:] = drafter.propose(hist)
+        ld = np.asarray(jd(eng.params, jnp.asarray(np.array(tok)),
+                           caches, jnp.asarray(pos)))
+        lv = np.asarray(jv(eng.params, jnp.asarray(vt), caches,
+                           jnp.asarray(pos)))
+        # bf16 activations feed fp32 logits: one bf16 ulp at this logit
+        # scale is ~0.01-0.06, so that is the agreement floor between the
+        # two compilations
+        np.testing.assert_allclose(ld, lv, atol=0.02, rtol=0)
+        for i in range(B):
+            if ld[i].argmax() != lv[i].argmax():
+                top2 = np.sort(ld[i])[-2:]
+                assert top2[1] - top2[0] < 0.02       # genuine near-tie
+                ties += 1
+        was_done = np.array(done)
+        tg, ne, nxt, caches, pos, done, rem = eng.verify_slots(
+            caches, jnp.asarray(vt), pos, done, rem, eos, r)
+        tg, ne = np.array(tg), np.array(ne)
+        for i in range(B):
+            if was_done[i]:
+                assert ne[i] == 0
+                continue
+            assert 1 <= ne[i] <= K + 1
+            hists[i].extend(tg[i, :ne[i]].tolist())
+        tok = nxt
+        pos, done, rem = np.array(pos), np.array(done), np.array(rem)
+        if done.all():
+            break
+    assert ties <= 4       # flips are rare ties, not systematic drift
+
+
+def _pos_rows(caches):
+    """Stacked pos leaves -> (layers, B, S) int arrays, one per group."""
+    return [np.asarray(g["sub0"]["pos"]) for g in caches]
+
+
+def test_verify_rewind_marks_exact_extent(yi_engine):
+    """After a verify step, each active row's position leaf marks exactly
+    [0, pos + n_emit) valid — accepted drafts in, rejected drafts out."""
+    eng = yi_engine
+    B, K = 2, 4
+    plens = np.array([12, 16], np.int32)
+    tok, caches = _admit(eng, B, plens)
+    vt = np.zeros((B, K + 1), np.int32)
+    vt[:, 0] = np.array(tok)
+    vt[:, 1:] = eng.cfg.vocab_size - 1     # deliberately unlikely drafts
+    tg, ne, nxt, caches, pos, done, rem = eng.verify_slots(
+        caches, jnp.asarray(vt), plens, np.zeros(B, bool),
+        np.full(B, 20, np.int32), np.full(B, -1, np.int32),
+        jax.random.key(0))
+    ne, pos = np.array(ne), np.array(pos)
+    assert (pos == plens + ne).all()
+    for rows in _pos_rows(caches):
+        for i in range(B):
+            row = rows[:, i]                       # (layers, S)
+            S = row.shape[-1]
+            want = np.where(np.arange(S) < pos[i], np.arange(S), -1)
+            np.testing.assert_array_equal(row,
+                                          np.broadcast_to(want, row.shape))
+
+
+def test_verify_frozen_rows_untouched(yi_engine):
+    """done/admitting rows keep their cache bit-for-bit through a verify
+    step (dense: per-row merge; their state must not advance)."""
+    eng = yi_engine
+    B, K = 2, 3
+    plens = np.array([10, 14], np.int32)
+    tok, caches = _admit(eng, B, plens)
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(caches)]
+    done = np.array([False, True])
+    vt = np.zeros((B, K + 1), np.int32)
+    vt[:, 0] = np.array(tok)
+    tg, ne, nxt, caches, pos, done2, rem = eng.verify_slots(
+        caches, jnp.asarray(vt), plens, done, np.full(B, 10, np.int32),
+        np.full(B, -1, np.int32), jax.random.key(1))
+    assert int(np.array(ne)[1]) == 0
+    assert int(np.array(pos)[1]) == plens[1]
+    assert int(np.array(nxt)[1]) == int(vt[1, 0])
+    after = jax.tree.leaves(caches)
+    for b, a in zip(before, after):
+        a = np.asarray(a)
+        if b.ndim >= 3 and b.shape[1] == B:        # per-slot leaves (l, B, ...)
+            np.testing.assert_array_equal(b[:, 1], a[:, 1])
+
+
+def test_verify_exact_fit_at_cache_end(yi_engine):
+    """A slot whose budget exactly fills the cache: verify writes at view
+    positions past the cache end are DROPPED — they must not race the real
+    write at S-1 (the clamped-scatter duplicate-index winner is undefined)
+    — so the final emitted tokens still match plain decode exactly."""
+    eng = yi_engine                                     # max_len = 128
+    B, K = 2, 4
+    S = eng.max_len
+    plens = np.array([S - 4, S - 6], np.int32)          # 4 and 6 tokens left
+    tok, caches = _admit(eng, B, plens)
+    state = dict(tok=jnp.asarray(tok), pos=plens.copy(),
+                 done=np.zeros(B, bool),
+                 rem=(S - plens).astype(np.int32),
+                 eos=np.full(B, -1, np.int32))
+    # reference: plain decode to the very end from a copy of the state
+    cD = jax.tree.map(jnp.copy, caches)
+    tokD, posD = state["tok"], state["pos"].copy()
+    doneD, remD = state["done"].copy(), state["rem"].copy()
+    ref = [[] for _ in range(B)]
+    for step in range(8):
+        was_active = (~np.array(doneD)) & (np.array(remD) > 0)
+        toks, cD, posD, doneD, remD = eng.decode_slots(
+            cD, tokD, posD, doneD, remD, state["eos"],
+            jax.random.fold_in(jax.random.key(2), step), n=1)
+        tokD = toks[-1]
+        for i in range(B):
+            if was_active[i]:
+                ref[i].append(int(np.array(tokD)[i]))
+        if np.array(doneD).all():
+            break
+    # spec decode with always-rejected drafts: every step writes K+1
+    # entries, the last ones crossing the cache end
+    tokV, posV = state["tok"], state["pos"].copy()
+    doneV, remV = state["done"].copy(), state["rem"].copy()
+    got = [[] for _ in range(B)]
+    for step in range(8):
+        vt = np.full((B, K + 1), eng.cfg.vocab_size - 1, np.int32)
+        vt[:, 0] = np.array(tokV)
+        tg, ne, tokV, caches, posV, doneV, remV = eng.verify_slots(
+            caches, jnp.asarray(vt), posV, doneV, remV, state["eos"],
+            jax.random.fold_in(jax.random.key(2), step))
+        tg, ne = np.array(tg), np.array(ne)
+        for i in range(B):
+            got[i].extend(tg[i, :ne[i]].tolist())
+        posV, doneV, remV = np.array(posV), np.array(doneV), np.array(remV)
+        if doneV.all():
+            break
+    for i in range(B):
+        # device never advances past the cache; the frontier is exact
+        assert posV[i] == S
+        assert_tokens_match(np.asarray(got[i]), np.asarray(ref[i]))
+
+
+# ---------------------------------------------------------------------------
+# Serving-level: greedy bit-identity, degradation, eos, stats
+# ---------------------------------------------------------------------------
+
+
+def make_dense(eng, spec_k, **kw):
+    from repro.runtime.scheduler import ContinuousScheduler
+    return ContinuousScheduler(eng, n_slots=3, block_steps=4, spec_k=spec_k,
+                               **kw)
+
+
+def make_paged(eng, spec_k, **kw):
+    from repro.runtime.scheduler import PagedContinuousScheduler
+    return PagedContinuousScheduler(eng, n_slots=3, block_steps=4,
+                                    spec_k=spec_k, block_size=8, **kw)
+
+
+@pytest.mark.parametrize("make_sched", [make_dense, make_paged],
+                         ids=["dense", "paged"])
+def test_spec_greedy_identity(yi_engine, make_sched):
+    """Greedy speculative decode serves token-identical streams to plain
+    greedy decode, dense and paged, with staggered in-flight admission."""
+    reqs = requests_mix(yi_engine.cfg, n=6, seed=0)
+    _, base = serve(yi_engine, reqs, make_sched, 0)
+    sched, spec = serve(yi_engine, reqs, make_sched, 4)
+    assert sched.stats["spec_steps"] > 0
+    for rid in base:
+        assert_tokens_match(spec[rid].output, base[rid].output)
+
+
+def test_spec_greedy_identity_gqa():
+    eng = greedy_engine(n_kv_heads=2)              # grouped heads, g=2
+    reqs = requests_mix(eng.cfg, n=4, seed=1)
+    _, base = serve(eng, reqs, make_dense, 0)
+    _, spec = serve(eng, reqs, make_dense, 4)
+    for rid in base:
+        assert_tokens_match(spec[rid].output, base[rid].output)
+
+
+@pytest.mark.parametrize("make_sched", [make_dense, make_paged],
+                         ids=["dense", "paged"])
+def test_spec_greedy_identity_int8_kv(make_sched):
+    eng = greedy_engine(parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                                kv_quant=True))
+    reqs = requests_mix(eng.cfg, n=4, seed=2)
+    _, base = serve(eng, reqs, make_sched, 0)
+    sched, spec = serve(eng, reqs, make_sched, 4)
+    assert any(l.dtype == np.int8 for l in jax.tree.leaves(sched.caches))
+    for rid in base:
+        assert_tokens_match(spec[rid].output, base[rid].output)
+
+
+class _NeverRight:
+    """Drafter stub proposing a constant far-fetched token."""
+
+    def __init__(self, k, t):
+        self.k, self.t = k, t
+
+    def propose(self, hist):
+        return np.full(self.k, self.t, np.int32)
+
+
+def test_zero_acceptance_degrades_to_one_token_per_step(yi_engine):
+    """Worst case: every draft rejected -> every verify step emits exactly
+    its 1-token floor (plain-decode behavior), and a solo request takes
+    exactly max_new - 1 steps (the first token comes from prefill)."""
+    eng = yi_engine
+    from repro.runtime.scheduler import ContinuousScheduler
+    rng = np.random.default_rng(5)
+    sched = ContinuousScheduler(eng, n_slots=1, block_steps=1, spec_k=4)
+    sched.drafter = _NeverRight(4, eng.cfg.vocab_size - 1)
+    p = rng.integers(0, eng.cfg.vocab_size - 1, 12).astype(np.int32)
+    sched.submit(p, max_new=24)
+    done = sched.run()
+    assert sched.stats["spec_accepted"] == 0
+    assert sched.stats["spec_emitted"] == sched.stats["spec_slot_steps"]
+    assert sched.stats["decode_steps"] == 23
+    assert len(done[0].output) == 24
+    solo = eng.generate(p[None], 24)[0]
+    assert_tokens_match(done[0].output, solo)
+
+
+def test_spec_eos_cut_inside_verify(yi_engine):
+    """EOS appearing mid-run is honored inside the fused verify step: the
+    stream cuts at EOS exactly as plain decode's does."""
+    eng = yi_engine
+    rng = np.random.default_rng(9)
+    p = rng.integers(0, eng.cfg.vocab_size, 14).astype(np.int32)
+    # pick the 6th token plain greedy decode emits as the EOS id, so the
+    # spec run must stop exactly there
+    ref = eng.generate(p[None], 30)[0]
+    eos_id = int(ref[5])
+    sA = make_dense(eng, 0)
+    sA.submit(p, 30, eos_id=eos_id)
+    base = {r.rid: r for r in sA.run()}
+    sB = make_dense(eng, 4)
+    sB.submit(p, 30, eos_id=eos_id)
+    spec = {r.rid: r for r in sB.run()}
+    assert_tokens_match(spec[0].output, base[0].output)
+    flat = np.asarray(spec[0].output)
+    assert flat[-1] == eos_id and (flat[:-1] != eos_id).all()
+
+
+def test_spec_paged_refcounts_consistent(yi_engine):
+    """Rewind + block-table truncation leave the allocator consistent:
+    per-slot tables only reference live blocks while serving, everything
+    drains to zero at the end, and shared-prefix refcounts survive."""
+    eng = yi_engine
+    from repro.runtime.scheduler import PagedContinuousScheduler
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, eng.cfg.vocab_size, 16).astype(np.int32)
+    sched = PagedContinuousScheduler(eng, n_slots=3, block_steps=2,
+                                     spec_k=4, block_size=8)
+    for i in range(4):
+        sfx = rng.integers(0, eng.cfg.vocab_size, 12).astype(np.int32)
+        sched.submit(np.concatenate([shared, sfx]), max_new=20,
+                     arrival_step=i)
+    checked = {"n": 0}
+    orig = sched._post_verify
+
+    def check_and_truncate(active):
+        orig(active)
+        for i in active:
+            blocks = sched.slot_blocks[i]
+            shard = sched._shard_of(i)
+            # table references exactly the owned blocks, all live
+            assert all(sched.alloc.refcount(shard, b) >= 1 for b in blocks)
+            np.testing.assert_array_equal(sched.bt[i, :len(blocks)], blocks)
+            assert (sched.bt[i, len(blocks):] == 0).all()
+            # truncated to the accepted frontier
+            assert len(blocks) == -(-int(sched.pos[i]) // sched.bs)
+            checked["n"] += 1
+
+    sched._post_verify = check_and_truncate
+    done = sched.run()
+    assert checked["n"] > 0 and len(done) == 4
+    assert sched.stats["shared_block_hits"] > 0
+    assert sched.alloc.total_used() == 0
+
+
+def test_spec_stats_and_itl_accounting(yi_engine):
+    """request_summary reports tokens_per_step percentiles and spec rates;
+    the ITL stream carries one sample per accepted token (multi-token
+    steps divide their interval), so sample count matches emissions."""
+    eng = yi_engine
+    from repro.runtime.scheduler import ContinuousScheduler
+    rng = np.random.default_rng(4)
+    sched = ContinuousScheduler(eng, n_slots=2, block_steps=1, spec_k=4)
+    motif = rng.integers(0, eng.cfg.vocab_size, 5).astype(np.int32)
+    sched.submit(np.tile(motif, 4), max_new=40)
+    sched.submit(np.tile(motif, 5), max_new=40, arrival_step=2)
+    sched.run()
+    summ = sched.request_summary()
+    assert "tokens_per_step" in summ and "spec" in summ
+    tps = summ["tokens_per_step"]
+    assert 1.0 <= tps["p50"] <= 5.0 and tps["max"] <= 5.0
+    sp = summ["spec"]
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert sp["mean_tokens_per_step"] >= 1.0
+    # one ITL sample per token emitted by decode-frontier steps (the first
+    # timestamped step seeds the clock and contributes none)
+    emitted_in_spec = sched.stats["spec_emitted"]
+    itl_n = len(sched._itl)
+    assert itl_n <= emitted_in_spec
+    assert itl_n >= emitted_in_spec - 2 * (sched.spec_k + 1)
+
+
+def test_spec_gated_off_for_ineligible_archs():
+    """MLA / recurrent families silently fall back to plain decode (the
+    verify chunk needs view-index == position attention)."""
+    for arch in ("mamba2-1.3b", "minicpm3-4b"):
+        eng = greedy_engine(arch, max_len=64)
+        from repro.runtime.scheduler import ContinuousScheduler
+        sched = ContinuousScheduler(eng, n_slots=2, spec_k=4)
+        assert sched.spec_k == 0 and sched.drafter is None
+
+
+def test_spec_with_chunked_admission(yi_engine):
+    """Spec decode composes with chunked prefill: long prompts stream
+    chunks (decode advancing 1 token/step through the mixed program) and
+    switch to multi-token verify once admitted — outputs unchanged."""
+    eng = yi_engine
+    from repro.runtime.scheduler import ContinuousScheduler
+    rng = np.random.default_rng(21)
+    reqs = [(rng.integers(0, eng.cfg.vocab_size, 40).astype(np.int32), 12, 0),
+            (rng.integers(0, eng.cfg.vocab_size, 10).astype(np.int32), 20, 1)]
+
+    def mk(e, k, **kw):
+        return ContinuousScheduler(e, n_slots=2, block_steps=2,
+                                   prefill_chunk=8, spec_k=k, **kw)
+
+    _, base = serve(eng, reqs, mk, 0)
+    sched, spec = serve(eng, reqs, mk, 4)
+    assert sched.stats["chunked_admissions"] >= 1
+    assert sched.stats["spec_steps"] > 0
+    for rid in base:
+        assert_tokens_match(spec[rid].output, base[rid].output)
+
+
+# ---------------------------------------------------------------------------
+# Verify-width kernel specialization (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Sq", [2, 3, 5, 8, 9])
+def test_flash_verify_width_sweep(Sq):
+    """The narrow-q specialization must match the streaming-softmax oracle
+    at every verify width (spec_k+1 = 2..9), including sublane padding."""
+    from repro.kernels import prefill_attention as pa
+    from repro.models.attention import chunked_causal_attention
+
+    b, hq, hkv, Sk, hd = 2, 4, 2, 96, 64
+    ks = jax.random.split(jax.random.key(Sq), 3)
+    q = jax.random.normal(ks[0], (b, hq, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, Sk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, Sk, hd), jnp.float32)
+    starts = np.array([17, 40], np.int32)
+    qpos = (jnp.asarray(starts)[:, None]
+            + jnp.arange(Sq, dtype=jnp.int32)[None, :])
+    scale = 1.0 / np.sqrt(hd)
+    out = pa.flash_verify(q, k, v, qpos, float(scale), block_k=32)
+    ref = chunked_causal_attention(q, k, v, qpos,
+                                   jnp.arange(Sk, dtype=jnp.int32), 0, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("Sq", [3, 5])
+def test_paged_narrow_q_matches_dense(Sq):
+    """Verify-width queries through the paged kernel (which rounds narrow
+    q tiles up to sublane groups in its shared clamp — no separate entry
+    point) must agree with the dense verify kernel on the gathered view."""
+    from repro.kernels import prefill_attention as pa
+
+    b, hq, hkv, bs, nbps, hd = 2, 4, 2, 16, 4, 64
+    S = bs * nbps
+    ks = jax.random.split(jax.random.key(100 + Sq), 3)
+    nb = 1 + b * nbps
+    kp = jax.random.normal(ks[0], (nb, hkv, bs, hd), jnp.float32)
+    vp = jax.random.normal(ks[1], (nb, hkv, bs, hd), jnp.float32)
+    rng = np.random.default_rng(Sq)
+    bt = jnp.asarray(rng.permutation(np.arange(1, nb))[: b * nbps]
+                     .reshape(b, nbps).astype(np.int32))
+    q = jax.random.normal(ks[2], (b, hq, Sq, hd), jnp.float32)
+    starts = rng.integers(0, S - Sq + 1, size=b).astype(np.int32)
+    qpos = (jnp.asarray(starts)[:, None]
+            + jnp.arange(Sq, dtype=jnp.int32)[None, :])
+    scale = 1.0 / np.sqrt(hd)
+    out = pa.paged_flash_prefill(q, kp, vp, bt, qpos, float(scale))
+    view = jnp.take(kp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, S, hd)
+    vview = jnp.take(vp, bt, axis=0).transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, S, hd)
+    ref = pa.flash_verify(q, view, vview, qpos, float(scale), block_k=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_spec_engine_flash_verify_path():
+    """Spec decode through the Pallas flash-verify kernel (interpret mode)
+    agrees with the scan path on a short well-separated greedy run."""
+    outs = {}
+    for flash in (False, True):
+        eng = greedy_engine(parallel=ParallelConfig(
+            tp=1, dp=1, remat=False, use_pallas=True, flash_prefill=flash))
+        reqs = requests_mix(eng.cfg, n=3, seed=6, mmin=6, mmax=10)
+        _, done = serve(eng, reqs, make_dense, 4)
+        outs[flash] = {rid: done[rid].output for rid in done}
+    for rid in outs[False]:
+        assert_tokens_match(outs[True][rid], outs[False][rid])
