@@ -3,6 +3,8 @@
 Traces the decode step at TP=8 (subprocess, virtual devices) with the paper
 techniques ON vs OFF and reports the collective bytes that cross the wire per
 round on the embedding path (§2.1a) and the sampling path (§2.1b).
+
+Writes BENCH_sync_minimization.json (--no-json to skip).
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import subprocess
 import sys
 
 HERE = os.path.dirname(__file__)
+BENCH_JSON = os.path.join(HERE, "..", "BENCH_sync_minimization.json")
 
 
 def trace(tp: int, arch: str, **flags) -> dict:
@@ -27,7 +30,8 @@ def trace(tp: int, arch: str, **flags) -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
-def main(emit):
+def main(emit=None, json_path=BENCH_JSON):
+    emit = emit or (lambda n, u, d="": print(f"{n},{u:.3f},{d}"))
     arch = "mixtral-8x7b"          # replicated-table arch: §2.1a is exact
     on = trace(8, arch, topk_sync=True, id_broadcast=True)
     off = trace(8, arch, topk_sync=False, id_broadcast=False)
@@ -57,3 +61,26 @@ def main(emit):
     emit("sync_min/fullscale_sampling_ratio", topk_wire,
          f"{full_gather/topk_wire:.0f}x fewer bytes at vocab={vocab}, k={k}, "
          f"tp={tp} ({full_gather}B -> {topk_wire}B per sequence)")
+    if json_path:
+        payload = {
+            "meta": {"bench": "sync_minimization", "arch": arch, "tp": 8},
+            "sampling_bytes": {"topk_sync_on": samp_on,
+                               "full_gather_off": samp_off},
+            "embed_bytes": {"id_broadcast_on": emb_on,
+                            "activation_bcast_off": emb_off},
+            "total_round_bytes": {"on": on["total_bytes"],
+                                  "off": off["total_bytes"]},
+            "fullscale_projection": {"vocab": vocab, "k": k, "tp": tp,
+                                     "full_gather_bytes": full_gather,
+                                     "topk_wire_bytes": topk_wire,
+                                     "ratio": full_gather / topk_wire},
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

@@ -1,0 +1,196 @@
+"""Weight-only quantization bench: bytes swept per token + serving tok/s.
+
+Two measurements, one machine-readable artifact (BENCH_wquant.json):
+
+1. **weight bytes swept per decode token** — computed from the param-tree
+   shapes (``models.model.decode_weight_bytes``): every decode token reads
+   every projection weight once, so stored bytes of the sweep set (packed
+   values + scales vs bf16) ARE the per-token weight traffic on a
+   bandwidth-bound decode.  Reported for the reduced bench config and,
+   analytically, for the full-size qwen-72b shapes the paper serves.  The
+   acceptance bar is int4-g128 >= 3.5x below bf16.
+
+2. **serving tok/s** — the same request mix served at bf16 / int8 / int4
+   across dense × paged backends and plain × speculative decode, with the
+   greedy streams cross-checked for the acceptance invariant (identical
+   across modes within each quantization).  HONESTY CAVEATS: this CPU
+   container runs the pure-JAX dequant reference path (the fused Pallas
+   kernels execute in interpret mode — Python per tile — which benchmarks
+   the interpreter, not the program), so the dequant shows up as EXTRA
+   compute per step and quantized tok/s is typically at or below bf16
+   here.  The bandwidth win the bytes-swept column quantifies is realised
+   by the fused kernels on hardware where the weight stream, not Python
+   dispatch, is the bottleneck — exactly the regime of the source papers.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_wquant.py
+(--no-json to skip writing BENCH_wquant.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_wquant.json")
+
+MODES = ("none", "int8", "int4")
+
+
+def bytes_swept(arch: str, tp: int = 1):
+    from repro.configs import ParallelConfig, get_config
+    from repro.models import model as M
+
+    cfg = get_config(arch)
+    if arch != "qwen-72b":
+        cfg = cfg.reduced()
+    out = {}
+    for mode in MODES:
+        ctx = M.ModelCtx.make(cfg, ParallelConfig(
+            tp=tp, dp=1, remat=False, weight_quant=mode, wq_group_size=128))
+        out[mode] = M.decode_weight_bytes(ctx)
+    out["ratio_int8"] = out["none"]["swept"] / out["int8"]["swept"]
+    out["ratio_int4_g128"] = out["none"]["swept"] / out["int4"]["swept"]
+    return out
+
+
+def make_requests(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        motif = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        plen = int(rng.integers(10, 25))
+        prompt = np.tile(motif, -(-plen // 4))[:plen]
+        reqs.append((prompt, int(rng.integers(8, 15)), i * 2))
+    return reqs
+
+
+def serve_one(eng, reqs, kind: str):
+    from repro.runtime.scheduler import (ContinuousScheduler,
+                                         PagedContinuousScheduler)
+
+    if kind == "dense_plain":
+        sched = ContinuousScheduler(eng, n_slots=3, block_steps=4,
+                                    prefill_chunk=0)
+    elif kind == "dense_spec":
+        sched = ContinuousScheduler(eng, n_slots=3, block_steps=4,
+                                    prefill_chunk=0, spec_k=4)
+    elif kind == "paged_plain":
+        sched = PagedContinuousScheduler(eng, n_slots=3, block_steps=4,
+                                         prefill_chunk=0, block_size=8)
+    else:
+        sched = PagedContinuousScheduler(eng, n_slots=3, block_steps=4,
+                                         prefill_chunk=0, spec_k=4,
+                                         block_size=8)
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    emitted = sum(len(r.output) for r in done)
+    return ({"wall_s": dt, "emitted": emitted,
+             "tok_per_s": emitted / dt if dt > 0 else float("inf")},
+            {r.rid: r.output for r in done})
+
+
+def run_serving(arch="yi-9b", max_len=96, seed=0):
+    import jax
+
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    reqs = make_requests(cfg, seed=seed)
+    kinds = ("dense_plain", "dense_spec", "paged_plain", "paged_spec")
+    results = {}
+    for mode in MODES:
+        eng = Engine(cfg=cfg,
+                     parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                             weight_quant=mode),
+                     sampling=SamplingConfig(greedy=True, top_k=1),
+                     mesh=make_local_mesh(1, 1), max_len=max_len)
+        per, streams = {}, {}
+        for kind in kinds:
+            serve_one(eng, make_requests(cfg, n=3, seed=seed + 1), kind)  # warm
+            per[kind], streams[kind] = serve_one(eng, reqs, kind)
+        # acceptance invariant: one quantization, one stream — every
+        # scheduling mode and backend serves identical greedy tokens
+        identical = all(
+            np.array_equal(streams["dense_plain"][rid], streams[k][rid])
+            for k in kinds for rid in streams["dense_plain"])
+        results[mode] = {"runs": per, "streams_identical": identical}
+        if mode != "none":
+            base = results["none"]["runs"]
+            for kind in kinds:
+                per[kind]["vs_bf16"] = (per[kind]["tok_per_s"]
+                                        / base[kind]["tok_per_s"])
+    return results
+
+
+def main(emit=None, json_path=BENCH_JSON, **kw):
+    sweep = {"reduced_yi9b": bytes_swept("yi-9b"),
+             "full_qwen72b": bytes_swept("qwen-72b")}
+    for name, rec in sweep.items():
+        line = (f"bf16 {rec['none']['swept']/2**20:.1f} MiB/token -> "
+                f"int8 {rec['int8']['swept']/2**20:.1f} "
+                f"({rec['ratio_int8']:.2f}x), "
+                f"int4-g128 {rec['int4']['swept']/2**20:.1f} "
+                f"({rec['ratio_int4_g128']:.2f}x)")
+        print(f"{name:14s} {line}", flush=True)
+        if emit is not None:
+            emit(f"wquant/{name}_int4_ratio", rec["ratio_int4_g128"], line)
+    assert sweep["reduced_yi9b"]["ratio_int4_g128"] >= 3.5
+    assert sweep["full_qwen72b"]["ratio_int4_g128"] >= 3.5
+
+    serving = run_serving(**kw)
+    for mode, rec in serving.items():
+        for kind, r in rec["runs"].items():
+            extra = (f" ({r['vs_bf16']:.2f}x vs bf16)"
+                     if "vs_bf16" in r else "")
+            print(f"{mode:5s} {kind:12s} {r['tok_per_s']:8.1f} tok/s, "
+                  f"{r['emitted']} toks in {r['wall_s']:.2f}s{extra}",
+                  flush=True)
+        assert rec["streams_identical"], f"{mode}: streams diverged"
+        if emit is not None:
+            emit(f"wquant/{mode}_dense_plain_tok_s",
+                 rec["runs"]["dense_plain"]["tok_per_s"],
+                 f"streams identical across modes: {rec['streams_identical']}")
+    print("greedy streams bit-identical across dense/paged x plain/spec "
+          "for every weight precision", flush=True)
+
+    if json_path:
+        payload = {
+            "meta": {
+                "bench": "weight_quant",
+                "caveat": ("serving runs use the pure-JAX dequant reference "
+                           "path on CPU (Pallas kernels are interpret-mode "
+                           "here): dequant is EXTRA per-step compute, so "
+                           "quantized tok/s ~ bf16 or below on this "
+                           "container; bytes_swept is the hardware-bandwidth "
+                           "model the fused kernels realise on real "
+                           "accelerators.  quantized_ref_einsum flags the "
+                           "packed bytes served via to_dense (w_o, MoE "
+                           "expert blocks) whose realization additionally "
+                           "needs dequant fused into the contraction — see "
+                           "decode_weight_bytes docs and the ROADMAP "
+                           "batched-kernel backlog item"),
+                **kw,
+            },
+            "bytes_swept_per_token": sweep,
+            "serving": serving,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return sweep, serving
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

@@ -4,8 +4,16 @@
     KV caches — the donated bytes are buffers the runtime does NOT copy;
 (b) layout-stable epilogue: HLO copy/transpose ops with the fused
     (b,h,s,hd)x(h,hd,d) out-projection vs the naive reshape-then-matmul.
+
+Writes BENCH_zero_copy.json (--no-json to skip).
 """
 from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +21,9 @@ import jax.numpy as jnp
 from repro import compat
 
 from repro.core.zero_copy import count_copies, fused_out_projection
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_zero_copy.json")
 
 
 def _decode_step_alias(donate: bool) -> int:
@@ -56,7 +67,8 @@ def _epilogue_copies(fused: bool) -> dict:
     return count_copies(txt)
 
 
-def main(emit):
+def main(emit=None, json_path=BENCH_JSON):
+    emit = emit or (lambda n, u, d="": print(f"{n},{u:.3f},{d}"))
     a_on = _decode_step_alias(True)
     a_off = _decode_step_alias(False)
     emit("zero_copy/donated_alias_bytes", a_on,
@@ -84,3 +96,21 @@ def main(emit):
     emit("zero_copy/fused_epilogue_kernel", us,
          f"dual-matmul accumulate; saves {saved/1e6:.1f} MB HBM traffic/layer "
          f"at (T,D)=({T},{D})")
+    if json_path:
+        payload = {
+            "meta": {"bench": "zero_copy"},
+            "donation_alias_bytes": {"donated": a_on, "undonated": a_off},
+            "epilogue_copy_ops": {"fused": c_f, "naive": c_n,
+                                  "note": "CPU backend; TPU layouts differ"},
+            "fused_dual_matmul": {"us_per_call_interpret": us,
+                                  "hbm_bytes_saved_per_layer": saved,
+                                  "at_T": T, "at_D": D},
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+
+
+if __name__ == "__main__":
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

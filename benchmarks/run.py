@@ -7,9 +7,13 @@
   continuous_batching — slot engine vs wave baseline on a straggler-heavy mix
   paged_kv            — paged block pool vs dense slot stripes (prefix reuse,
                         overcommitted pool, memory high-water mark)
+  wquant              — weight-only quantization: bytes swept per token +
+                        serving tok/s at bf16/int8/int4 (dense/paged x
+                        plain/spec)
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; every bench also writes its own
+machine-readable ``BENCH_*.json`` at the repo root (seed benches included).
 """
 from __future__ import annotations
 
@@ -34,7 +38,8 @@ def main() -> None:
     from benchmarks import (bench_continuous_batching, bench_one_shot,
                             bench_paged_kv, bench_prefill,
                             bench_specdecode, bench_sync_minimization,
-                            bench_token_latency, bench_zero_copy)
+                            bench_token_latency, bench_wquant,
+                            bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
@@ -45,6 +50,7 @@ def main() -> None:
         ("paged_kv", bench_paged_kv.main),
         ("prefill", bench_prefill.main),
         ("spec_decode", bench_specdecode.main),
+        ("wquant", bench_wquant.main),
     ]
     failures = []
     for name, fn in benches:

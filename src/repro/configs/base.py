@@ -291,6 +291,17 @@ class ParallelConfig:
                                 # use_pallas; the pure-JAX scan remains the
                                 # reference + MLA/windowed fallback)
     kv_quant: bool = False      # int8 KV cache (per-head-per-slot scales)
+    # weight-only quantization (quantize-at-load transform over the param
+    # tree): "int8" = per-output-channel scales, "int4" = group-wise scales
+    # along the reduction dim (wq_group_size, clamped per tensor so groups
+    # never straddle a TP shard).  Covers every serving projection
+    # (attention q/k/v/o, MLP up/gate/down, MoE experts, lm_head); embed
+    # tables, norms, biases, routers, and MLA latent projections stay bf16.
+    # Routing follows use_pallas: fused dequant matmul kernels on the hot
+    # 2-D projections when Pallas is on, pure-JAX dequant reference
+    # otherwise (always the fallback for batched einsum sites).
+    weight_quant: str = "none"  # none | int8 | int4
+    wq_group_size: int = 128    # int4 group length along the reduction dim
     # chunked prefill (continuous-batching schedulers): prompts longer than
     # this many tokens are admitted chunk-by-chunk through the fused mixed
     # prefill/decode step, so a long prompt never stalls in-flight decode

@@ -1,0 +1,281 @@
+"""Weight-only quantization: packed low-precision weights + scales.
+
+Decode on CPUs (and the memory-bound regime generally) is a per-token sweep
+of every weight byte; arXiv 2407.07304 makes low-precision weights the
+headline lever and the LIMINAL limit study (arXiv 2507.14397) confirms the
+weight stream, not FLOPs, binds decode.  This module is the storage +
+numerics layer of that lever:
+
+* ``int8`` — per-output-channel symmetric scales: ``W ≈ q * s[n]`` with
+  ``q`` int8 in [-127, 127] and one bf16 scale per output column.
+* ``int4`` — group-wise symmetric scales: the reduction dim is cut into
+  ``group``-length segments, each with its own scale (``q`` in [-7, 7],
+  two values packed per byte).  Group boundaries are clamped per tensor so
+  they never straddle a TP shard of the reduction dim.
+
+Layout convention: every quantizable weight is stored exactly as the model
+declares it, ``(*B, K, N)`` — leading batch dims (scan stack, MoE experts,
+attention heads for w_o, codebooks), reduction dim at axis -2, output dim
+last.  This is what makes the transform TP-exact with ZERO schedule change:
+
+* output-channel (int8) scales commute with the row-parallel reduction —
+  each shard computes ``s[n] * (x @ q_shard[:, n])`` and the existing psum
+  adds exact partials, so :mod:`sync_policy`'s one-psum-per-layer count and
+  the :mod:`collectives` byte accounting are untouched;
+* group (int4) scales are segments of the reduction dim; because the
+  effective group divides the PER-SHARD reduction length, every group is
+  shard-local and each shard's partial ``sum_g s_g (x_g @ q_g)`` is exact.
+
+Scale/packed-q arrays shard exactly like the weight they describe (see
+``spec_for``): batch/output axes keep the weight's spec entries, the int4
+group axis inherits the reduction axis's spec.
+
+:class:`QuantWeight` is a registered pytree whose static aux (mode, group,
+true K, backend) rides through jit/shard_map/scan unchanged — leading-axis
+indexing of stacked (scanned) layer groups works because K is pinned to
+axis -2, invariant under losing the stack axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+MODES = ("int8", "int4")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantWeight:
+    """Quantized weight leaf: values + scales, static quantization aux.
+
+    ``q``: int8 ``(*B, K, N)`` (int8 mode) or uint8 ``(*B, K//2, N)`` with
+    two 4-bit values per byte (int4 mode; k even ↦ low nibble).
+    ``scale``: bf16 ``(*B, N)`` (int8) or ``(*B, K//group, N)`` (int4).
+    Holds either arrays (a parameter) or PartitionSpecs (its spec tree) —
+    the two flatten to matching pytrees, which is what shard_map needs.
+    """
+
+    q: Any
+    scale: Any
+    mode: str = "int8"
+    group: int = 0          # effective int4 group length (0 for int8)
+    k: int = 0              # true reduction length (axis -2, unpacked)
+    backend: str = "ref"    # "ref" (pure-JAX dequant) | "pallas" (fused)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.mode, self.group, self.k,
+                                      self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+def effective_group(k: int, group_size: int, k_shards: int = 1) -> int:
+    """Largest group <= group_size that divides the PER-SHARD reduction
+    length (so int4 groups never straddle a TP shard) and stays even (two
+    values pack per byte).  Returns 0 if no valid grouping exists."""
+    k_local = k // max(1, k_shards)
+    for cand in range(min(group_size, k_local), 1, -1):
+        if cand % 2 == 0 and k_local % cand == 0:
+            return cand
+    return 0
+
+
+def quantizable(shape, mode: str, group_size: int, k_shards: int = 1) -> bool:
+    """A weight can be quantized if it has a (K, N) tail and, for int4, an
+    even shard-local grouping of K exists."""
+    if len(shape) < 2:
+        return False
+    k = shape[-2]
+    if k < 2 or (k_shards > 1 and k % k_shards):
+        return False
+    if mode == "int4":
+        return k % 2 == 0 and effective_group(k, group_size, k_shards) > 0
+    return mode == "int8"
+
+
+def pack4(q4: jax.Array) -> jax.Array:
+    """int8 values in [-8, 7], shape (*B, K, N) -> uint8 (*B, K//2, N);
+    even k in the low nibble, odd k in the high nibble."""
+    lo = q4[..., 0::2, :].astype(jnp.uint8) & 0xF
+    hi = q4[..., 1::2, :].astype(jnp.uint8) & 0xF
+    return lo | (hi << 4)
+
+
+def unpack4(packed: jax.Array) -> jax.Array:
+    """uint8 (*B, K//2, N) -> int8 (*B, K, N) (two's-complement nibbles)."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    pair = jnp.stack([lo, hi], axis=-2)                  # (*B, K//2, 2, N)
+    shape = packed.shape[:-2] + (2 * packed.shape[-2], packed.shape[-1])
+    return pair.reshape(shape).astype(jnp.int8)
+
+
+def quantize(w: jax.Array, mode: str, group_size: int, *,
+             k_shards: int = 1, backend: str = "ref") -> QuantWeight:
+    """Symmetric weight quantization of ``w`` (*B, K, N) at load time."""
+    if mode not in MODES:
+        raise ValueError(f"weight_quant mode {mode!r} not in {MODES}")
+    k = w.shape[-2]
+    wf = w.astype(jnp.float32)
+
+    def stored(amax, levels):
+        # round AGAINST the scale dequantization will actually use: the
+        # bf16-stored value, not the fp32 intermediate — otherwise every
+        # weight picks up the scale's own bf16 rounding on top of its
+        # 0.5-LSB quantization error
+        s = jnp.maximum(amax, 1e-8) / levels
+        return s.astype(jnp.bfloat16).astype(jnp.float32)
+
+    if mode == "int8":
+        scale = stored(jnp.max(jnp.abs(wf), axis=-2), 127.0)   # (*B, N)
+        q = jnp.clip(jnp.round(wf / scale[..., None, :]),
+                     -127, 127).astype(jnp.int8)
+        return QuantWeight(q, scale.astype(jnp.bfloat16), "int8", 0, k,
+                           backend)
+    g = effective_group(k, group_size, k_shards)
+    if not g:
+        raise ValueError(f"no even shard-local int4 group for K={k}, "
+                         f"group_size={group_size}, k_shards={k_shards}")
+    lead = w.shape[:-2]
+    wg = wf.reshape(*lead, k // g, g, w.shape[-1])
+    scale = stored(jnp.max(jnp.abs(wg), axis=-2), 7.0)         # (*B, K/g, N)
+    q4 = jnp.clip(jnp.round(wg / scale[..., None, :]), -7, 7)
+    q4 = q4.reshape(*lead, k, w.shape[-1]).astype(jnp.int8)
+    return QuantWeight(pack4(q4), scale.astype(jnp.bfloat16), "int4", g, k,
+                       backend)
+
+
+def dequantize(w: QuantWeight, dtype=jnp.bfloat16) -> jax.Array:
+    """QuantWeight -> dense (*B, K, N) weight (the pure-JAX reference).
+
+    K comes from the ARRAY, not the static aux: inside shard_map the leaf
+    is this shard's slice of a possibly K-sharded weight, and the group
+    clamp guarantees the local K is still a whole number of groups."""
+    if w.mode == "int8":
+        out = w.q.astype(jnp.float32) * w.scale.astype(jnp.float32)[..., None, :]
+        return out.astype(dtype)
+    q = unpack4(w.q).astype(jnp.float32)                     # (*B, K_local, N)
+    lead = q.shape[:-2]
+    qg = q.reshape(*lead, q.shape[-2] // w.group, w.group, q.shape[-1])
+    out = qg * w.scale.astype(jnp.float32)[..., None, :]
+    return out.reshape(q.shape).astype(dtype)
+
+
+def to_dense(w, dtype=jnp.bfloat16):
+    """Array passthrough / QuantWeight dequant — for batched einsum sites
+    (MoE expert blocks, the zero-copy out-projection) that stay on the
+    reference path."""
+    return dequantize(w, dtype) if isinstance(w, QuantWeight) else w
+
+
+# ---------------------------------------------------------------------------
+# Matmul routing (2-D weights: the attention/MLP projection hot path)
+# ---------------------------------------------------------------------------
+
+
+def matmul(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """``x (..., K) @ w (K, N)`` with ``w`` a plain array or QuantWeight.
+
+    QuantWeight + backend "pallas" routes through the fused dequant matmul
+    kernel (GEMV blocking for decode-narrow x, GEMM blocking for prefill/
+    verify); backend "ref" dequantizes and uses the stock matmul — the
+    oracle path, numerically the closest thing to the bf16 baseline."""
+    if not isinstance(w, QuantWeight):
+        y = x @ w
+        return y if out_dtype is None else y.astype(out_dtype)
+    if w.q.ndim != 2:
+        raise ValueError("wquant.matmul serves 2-D weights; use to_dense "
+                         "for batched einsum sites")
+    if w.backend == "pallas":
+        from repro.kernels import ops as kops
+
+        lead = x.shape[:-1]
+        y = kops.dequant_matmul(x.reshape(-1, x.shape[-1]), w.q, w.scale,
+                                mode=w.mode, group=w.group,
+                                out_dtype=out_dtype or x.dtype)
+        return y.reshape(*lead, y.shape[-1])
+    y = x @ dequantize(w)
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
+def slice_cols(w: QuantWeight, start, size: int) -> QuantWeight:
+    """Slice the output-column dim (axis -1) of q AND scale — the
+    replicated-KV-weight per-shard slice (`_slice_kv_weight`)."""
+    q = jax.lax.dynamic_slice_in_dim(w.q, start, size, axis=w.q.ndim - 1)
+    s = jax.lax.dynamic_slice_in_dim(w.scale, start, size,
+                                     axis=w.scale.ndim - 1)
+    return QuantWeight(q, s, w.mode, w.group, w.k, w.backend)
+
+
+def index_batch(w: QuantWeight, i: int) -> QuantWeight:
+    """Drop one leading batch dim (e.g. the codebook axis of lm_head)."""
+    return QuantWeight(w.q[i], w.scale[i], w.mode, w.group, w.k, w.backend)
+
+
+# ---------------------------------------------------------------------------
+# Spec + byte accounting (mirrors quantize() without materializing)
+# ---------------------------------------------------------------------------
+
+
+def shapes_for(shape, mode: str, group_size: int, *,
+               k_shards: int = 1, backend: str = "ref") -> QuantWeight:
+    """ShapeDtypeStruct tree for the quantized form of a weight — keeps
+    ``param_shapes`` structurally matched to ``param_specs``/params when
+    weight_quant is on (the contract every tree_map over the three
+    relies on)."""
+    k, n = shape[-2], shape[-1]
+    if mode == "int8":
+        return QuantWeight(jax.ShapeDtypeStruct(shape, jnp.int8),
+                           jax.ShapeDtypeStruct(shape[:-2] + (n,),
+                                                jnp.bfloat16),
+                           "int8", 0, k, backend)
+    g = effective_group(k, group_size, k_shards)
+    return QuantWeight(
+        jax.ShapeDtypeStruct(shape[:-2] + (k // 2, n), jnp.uint8),
+        jax.ShapeDtypeStruct(shape[:-2] + (k // g, n), jnp.bfloat16),
+        "int4", g, k, backend)
+
+
+def spec_for(shape, spec: P, mode: str, group_size: int, *,
+             k_shards: int = 1, backend: str = "ref") -> QuantWeight:
+    """PartitionSpec tree for the quantized form of a weight whose dense
+    spec is ``spec`` (full-length, one entry per dim).  q keeps the dense
+    spec (packing halves K, divisibility preserved); the int8 scale drops
+    the reduction entry, the int4 scale keeps all entries (its group axis
+    shards exactly like the reduction axis it segments)."""
+    entries = tuple(spec)
+    if len(entries) != len(shape):
+        entries = entries + (None,) * (len(shape) - len(entries))
+    if mode == "int8":
+        scale_spec = P(*entries[:-2], entries[-1])
+        return QuantWeight(P(*entries), scale_spec, "int8", 0, shape[-2],
+                           backend)
+    g = effective_group(shape[-2], group_size, k_shards)
+    return QuantWeight(P(*entries), P(*entries), "int4", g, shape[-2],
+                       backend)
+
+
+def quant_bytes(shape, mode: str, group_size: int, k_shards: int = 1) -> int:
+    """Stored bytes of the quantized form (values + bf16 scales)."""
+    import math
+
+    n_el = math.prod(shape)
+    lead_n = n_el // shape[-2]                       # (*B, N) element count
+    if mode == "int8":
+        return n_el + 2 * lead_n
+    g = effective_group(shape[-2], group_size, k_shards)
+    return n_el // 2 + 2 * lead_n * (shape[-2] // g)

@@ -25,15 +25,23 @@ import jax
 import jax.numpy as jnp
 
 
-def fused_out_projection(attn_heads: jax.Array, w_o: jax.Array) -> jax.Array:
+def fused_out_projection(attn_heads: jax.Array, w_o) -> jax.Array:
     """(b, h, s, hd) x (h, hd, d) -> (b, s, d) in one contraction.
 
     The naive path reshapes (b, h, s, hd) -> (b, s, h*hd) (a materialised
     transpose+copy) before a 2-D matmul.  Contracting h and hd together keeps
     the producer's layout and writes the partial sum directly into the buffer
     the following psum reads — the XLA analogue of the paper's zero-copy.
+
+    Weight-only-quantized w_o (per-head K=hd group scales, all TP-local)
+    dequantizes in place and keeps this einsum: flattening to the 2-D fused
+    kernel would reintroduce exactly the (b,s,h*hd) transpose this function
+    exists to avoid, so the out-projection stays on the reference dequant
+    (the fused-tile dequant of a 3-D contraction is real-TPU future work).
     """
-    return jnp.einsum("bhsd,hde->bse", attn_heads, w_o)
+    from repro.core import wquant
+
+    return jnp.einsum("bhsd,hde->bse", attn_heads, wquant.to_dense(w_o))
 
 
 def count_copies(lowered_text: str) -> dict:

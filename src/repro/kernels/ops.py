@@ -79,3 +79,15 @@ def lru_scan(a, b, h0):
     from repro.kernels import lru_scan as _ls
 
     return _ls.lru_scan(a, b, h0, interpret=INTERPRET)
+
+
+def dequant_matmul(x, q, scale, *, mode, group, out_dtype=None):
+    """Fused dequantize-and-matmul over packed weight-only-quantized
+    weights: (T, K) @ dequant((K, N)) with the bf16 weight never
+    materialised.  GEMV blocking (sublane-rounded T tile, wide N slabs)
+    engages automatically for decode-narrow T; prefill/verify widths tile
+    at 128."""
+    from repro.kernels import wquant_matmul as _wq
+
+    return _wq.dequant_matmul(x, q, scale, mode=mode, group=int(group),
+                              out_dtype=out_dtype, interpret=INTERPRET)

@@ -42,6 +42,24 @@ def decode_attention_ref(q, k, v, valid, scale):
     )
 
 
+def dequant_matmul_ref(x, q, scale, mode: str, group: int):
+    """Fused dequant-matmul oracle, mirroring the kernel's math exactly:
+
+    int8: fp32 ``x @ q`` with the per-output-channel scale applied ONCE to
+    the accumulated result (scales commute with the K reduction);
+    int4: per-group ``sum_g s_g * (x_g @ q_g)`` over unpacked nibbles.
+    Returns fp32 (callers cast)."""
+    from repro.core.wquant import unpack4
+
+    xf = x.astype(jnp.float32)
+    if mode == "int8":
+        return (xf @ q.astype(jnp.float32)) * scale.astype(jnp.float32)[None, :]
+    w = unpack4(q).astype(jnp.float32)               # (K, N)
+    K, N = w.shape
+    wg = w.reshape(K // group, group, N) * scale.astype(jnp.float32)[:, None, :]
+    return xf @ wg.reshape(K, N)
+
+
 def lru_scan_ref(a, b, h0):
     """Linear recurrence h_t = a_t h_{t-1} + b_t via lax.scan; fp32.
 

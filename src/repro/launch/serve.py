@@ -57,7 +57,9 @@ def build_engine(args):
                          prefill_chunk=args.prefill_chunk,
                          flash_prefill=not args.no_flash_prefill,
                          spec_k=0 if args.no_spec_decode else args.spec_k,
-                         spec_ngram=args.spec_ngram)
+                         spec_ngram=args.spec_ngram,
+                         weight_quant=args.weight_quant,
+                         wq_group_size=args.wq_group_size)
     return Engine(cfg=cfg, parallel=par,
                   sampling=SamplingConfig(top_k=args.top_k),
                   mesh=mesh, max_len=args.max_len)
@@ -144,6 +146,15 @@ def main(argv=None):
     ap.add_argument("--spec-ngram", type=int, default=3,
                     help="longest n-gram the prompt-lookup drafter matches "
                          "against each request's history")
+    ap.add_argument("--weight-quant", choices=("none", "int8", "int4"),
+                    default="none",
+                    help="weight-only quantization (quantize-at-load): "
+                         "int8 = per-output-channel scales, int4 = "
+                         "group-wise scales — shrinks the per-token weight "
+                         "sweep, the dominant decode bandwidth on CPUs")
+    ap.add_argument("--wq-group-size", type=int, default=128,
+                    help="int4 group length along the reduction dim "
+                         "(clamped per tensor so groups stay TP-shard-local)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals by N decode steps per request")
     ap.add_argument("--max-new-spread", type=int, default=1,
@@ -161,6 +172,16 @@ def main(argv=None):
 
     eng = build_engine(args)
     cfg = eng.cfg
+    if args.weight_quant != "none":
+        from repro.models import model as M
+        wb = M.decode_weight_bytes(eng.ctx)
+        bb = M.decode_weight_bytes(M.ModelCtx.make(
+            cfg, ParallelConfig(tp=args.tp, dp=args.dp, remat=False)))
+        print(f"weight quant {args.weight_quant}"
+              f"{f'-g{args.wq_group_size}' if args.weight_quant == 'int4' else ''}: "
+              f"{wb['swept']/2**20:.1f} MiB swept/token vs "
+              f"{bb['swept']/2**20:.1f} MiB bf16 "
+              f"({bb['swept']/max(wb['swept'],1):.2f}x less)")
     sched = make_scheduler(eng, args)
     submit_workload(sched, cfg, args)
     t0 = time.monotonic()

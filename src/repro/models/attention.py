@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import collectives as cc
+from repro.core import wquant
 from repro.core.sync_policy import SyncPolicy
 from repro.core.zero_copy import fused_out_projection
 from repro.models.common import Dist, ParamDef, ShardPlan, apply_rope
@@ -632,13 +633,19 @@ def _paged_write_prefill_scale(pool: jax.Array, new: jax.Array, bt: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _slice_kv_weight(w: jax.Array, plan: ShardPlan, dist: Dist, hd: int) -> jax.Array:
-    """Replicated (d, n_kv*hd) KV weight -> this shard's (d, local_kv*hd)."""
+def _slice_kv_weight(w, plan: ShardPlan, dist: Dist, hd: int):
+    """Replicated (d, n_kv*hd) KV weight -> this shard's (d, local_kv*hd).
+
+    Quantized weights slice q AND scale along the output-column dim (both
+    carry the replicated spec in this layout, so the slice is local)."""
     if plan.n_kv_p >= plan.tp:
         return w  # already sharded by pjit/shard_map in_specs
     kv_head = dist.model_idx() // plan.kv_rep
-    return jax.lax.dynamic_slice_in_dim(w, kv_head * plan.local_kv * hd,
-                                        plan.local_kv * hd, axis=w.ndim - 1)
+    start = kv_head * plan.local_kv * hd
+    if isinstance(w, wquant.QuantWeight):
+        return wquant.slice_cols(w, start, plan.local_kv * hd)
+    return jax.lax.dynamic_slice_in_dim(w, start, plan.local_kv * hd,
+                                        axis=w.ndim - 1)
 
 
 def gqa_forward(
@@ -665,13 +672,13 @@ def gqa_forward(
     decode = cache is not None and s == 1
     use_flash = use_pallas and flash_prefill
 
-    q = x @ params["w_q"]
+    q = wquant.matmul(x, params["w_q"])
     if "b_q" in params:
         q = q + params["b_q"]
     w_k = _slice_kv_weight(params["w_k"], plan, dist, hd)
     w_v = _slice_kv_weight(params["w_v"], plan, dist, hd)
-    k = x @ w_k
-    v = x @ w_v
+    k = wquant.matmul(x, w_k)
+    v = wquant.matmul(x, w_v)
     if "b_k" in params:
         b_k = _slice_kv_weight(params["b_k"][None], plan, dist, hd)[0]
         b_v = _slice_kv_weight(params["b_v"][None], plan, dist, hd)[0]

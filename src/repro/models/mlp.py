@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import wquant
 from repro.models.common import Dist, ParamDef, activation
 
 
@@ -29,9 +30,9 @@ def mlp_defs(cfg: ModelConfig, dist: Dist, d_ff: int = 0) -> Dict[str, ParamDef]
 
 def mlp_forward(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
     act = activation(cfg.act)
-    up = x @ params["w_up"]
+    up = wquant.matmul(x, params["w_up"])
     if cfg.gated_mlp:
-        h = act(x @ params["w_gate"]) * up
+        h = act(wquant.matmul(x, params["w_gate"])) * up
     else:
         h = act(up)
-    return h @ params["w_down"]          # unreduced partial
+    return wquant.matmul(h, params["w_down"])          # unreduced partial

@@ -14,12 +14,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import embedding as emb
+from repro.core import wquant
 from repro.core.sync_policy import SyncPolicy
 from repro.models import multimodal, transformer as tfm
 from repro.models.common import (
     Dist,
     ParamDef,
     ShardPlan,
+    is_def,
     materialize,
     rms_norm,
     shapes_of,
@@ -84,12 +86,206 @@ def init_params(ctx: ModelCtx, key) -> Pytree:
     return materialize(model_defs(ctx), key)
 
 
+# ---------------------------------------------------------------------------
+# Weight-only quantization (quantize-at-load transform)
+#
+# Every serving projection — attention q/k/v/o, MLP up/gate/down (incl. MoE
+# shared experts), MoE expert blocks, lm_head — is replaced by a
+# :class:`repro.core.wquant.QuantWeight` (packed values + scales).  Embed
+# tables (row gathers, not sweeps), norms, biases, routers, and the MLA
+# latent projections (absorbed-matmul reshapes; latent ranks are tiny) stay
+# bf16.  The walker below is the single source of truth for WHICH leaves
+# quantize, shared by the param transform, the spec tree, and the
+# byte-accounting helper, so all three stay consistent.
+# ---------------------------------------------------------------------------
+
+_WQ_ATTN_KEYS = ("w_q", "w_k", "w_v", "w_o")
+_WQ_FFN_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def _map_wq_leaves(ctx: ModelCtx, tree: Pytree, leaf_fn) -> Pytree:
+    """Rebuild ``tree`` (params / specs / defs-valued) with every
+    weight-quant-eligible leaf replaced by ``leaf_fn(param_def, leaf,
+    site)``.  ``site`` is how the serving forward consumes the leaf:
+    "matmul" (2-D projection — fused dequant kernel eligible) or "einsum"
+    (batched contraction served by ``wquant.to_dense``: the attention
+    out-projection and MoE expert blocks)."""
+    cfg = ctx.cfg
+    defs = model_defs(ctx)
+    groups = tfm.build_groups(cfg)
+
+    def map_keys(dtree, vtree, keys, einsum_keys=()):
+        out = dict(vtree)
+        for k in keys:
+            if k in out:
+                out[k] = leaf_fn(dtree[k], out[k],
+                                 "einsum" if k in einsum_keys else "matmul")
+        return out
+
+    new_groups = []
+    for g, gdefs, gtree in zip(groups, defs["groups"], tree["groups"]):
+        gt = {}
+        for i, sub in enumerate(g.subs):
+            st = dict(gtree[f"sub{i}"])
+            sd = gdefs[f"sub{i}"]
+            if sub.kind in tfm.ATTN_KINDS and cfg.mla is None:
+                st["mixer"] = map_keys(sd["mixer"], st["mixer"], _WQ_ATTN_KEYS,
+                                       einsum_keys=("w_o",))
+            if sub.has_ffn:
+                ffn = map_keys(sd["ffn"], st["ffn"], _WQ_FFN_KEYS,
+                               einsum_keys=_WQ_FFN_KEYS if sub.is_moe else ())
+                if "shared" in ffn:   # shared experts run mlp_forward (2-D)
+                    ffn["shared"] = map_keys(sd["ffn"]["shared"],
+                                             ffn["shared"], _WQ_FFN_KEYS)
+                st["ffn"] = ffn
+            gt[f"sub{i}"] = st
+        new_groups.append(gt)
+    out = dict(tree)
+    out["groups"] = tuple(new_groups)
+    if "lm_head" in tree:
+        # multi-codebook heads are served via dequantize+einsum even on the
+        # pallas backend (_lm_head routes the kernel only when ncb == 1)
+        out["lm_head"] = leaf_fn(defs["lm_head"], tree["lm_head"],
+                                 "matmul" if cfg.n_codebooks == 1
+                                 else "einsum")
+    return out
+
+
+def _wq_k_shards(ctx: ModelCtx, d: ParamDef) -> int:
+    """TP shard count of the reduction dim (axis -2): the int4 group clamp
+    keeps groups shard-local, so scale sharding needs no communication."""
+    entries = tuple(d.spec)
+    if len(entries) >= 2 and entries[-2] == ctx.dist.model_axis:
+        return ctx.dist.tp
+    return 1
+
+
+def quantize_params(ctx: ModelCtx, params: Pytree) -> Pytree:
+    """Quantize-at-load: bf16 projection weights -> QuantWeight leaves per
+    ``ctx.parallel.weight_quant`` / ``wq_group_size``.  Idempotent (already-
+    quantized leaves pass through); ineligible shapes stay bf16 — the spec
+    tree applies the same predicate, so trees always match."""
+    par = ctx.parallel
+    backend = "pallas" if par.use_pallas else "ref"
+
+    def f(d: ParamDef, leaf, site):
+        if isinstance(leaf, wquant.QuantWeight):
+            return leaf
+        ks = _wq_k_shards(ctx, d)
+        if not wquant.quantizable(d.shape, par.weight_quant,
+                                  par.wq_group_size, ks):
+            return leaf
+        return wquant.quantize(leaf, par.weight_quant, par.wq_group_size,
+                               k_shards=ks, backend=backend)
+
+    return _map_wq_leaves(ctx, params, f)
+
+
 def param_specs(ctx: ModelCtx) -> Pytree:
-    return specs_of(model_defs(ctx))
+    specs = specs_of(model_defs(ctx))
+    par = ctx.parallel
+    if par.weight_quant == "none":
+        return specs
+    backend = "pallas" if par.use_pallas else "ref"
+
+    def f(d: ParamDef, spec, site):
+        ks = _wq_k_shards(ctx, d)
+        if not wquant.quantizable(d.shape, par.weight_quant,
+                                  par.wq_group_size, ks):
+            return spec
+        return wquant.spec_for(d.shape, spec, par.weight_quant,
+                               par.wq_group_size, k_shards=ks,
+                               backend=backend)
+
+    return _map_wq_leaves(ctx, specs, f)
+
+
+def decode_weight_bytes(ctx: ModelCtx) -> Dict[str, int]:
+    """Bytes of weight stream a decode token sweeps, from shapes alone.
+
+    ``swept``: all projection weights + lm_head (+ tiny norms/biases at
+    their stored width) — the unique weight STORAGE decode reads every
+    token.  ``quantized`` / ``dense`` split the swept set by whether the
+    quantize transform covers the leaf under the current ``weight_quant``
+    mode.  ``quantized_ref_einsum`` is the subset of ``quantized`` served
+    through ``wquant.to_dense`` (the attention out-projection and MoE
+    expert blocks): their packed stream counts as swept storage, but
+    realizing it as HBM traffic needs the dequant fused into the
+    contraction — XLA operand fusion or the batched kernels on the
+    ROADMAP backlog; until then those leaves also materialise a bf16
+    transient per step, which is activation-like traffic on top of this
+    number (dominant on MoE archs — read the ratio accordingly).  Embed
+    tables are excluded: a token embeds by row gather, not a full-table
+    sweep."""
+    import math
+
+    par = ctx.parallel
+    counted = []                             # (ParamDef, k_shards, ok, site)
+
+    def mark(_d: ParamDef, leaf, site):
+        # ``leaf`` is the ParamDef from the tree we walk below (the walker
+        # rebuilds its own defs internally, so only the leaf's id is the
+        # one the rest-loop can exclude against)
+        ks = _wq_k_shards(ctx, leaf)
+        ok = (par.weight_quant != "none"
+              and wquant.quantizable(leaf.shape, par.weight_quant,
+                                     par.wq_group_size, ks))
+        counted.append((leaf, ks, ok, site))
+        return leaf
+
+    defs = model_defs(ctx)
+    _map_wq_leaves(ctx, defs, mark)
+    quantized = dense = ref_einsum = 0
+    for d, ks, ok, site in counted:
+        if ok:
+            b = wquant.quant_bytes(d.shape, par.weight_quant,
+                                   par.wq_group_size, ks)
+            quantized += b
+            if site == "einsum":
+                ref_einsum += b
+        else:
+            dense += math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+
+    # non-projection leaves swept per token (norms, biases, routers, MLA):
+    # everything in the defs tree except the counted projections, embed
+    # (row gather), and the frontend projector (prefill-only — decode
+    # never reads it)
+    counted_ids = {id(d) for d, _, _, _ in counted}
+    for leaf in jax.tree.leaves({k: v for k, v in defs.items()
+                                 if k not in ("embed", "frontend")},
+                                is_leaf=is_def):
+        if is_def(leaf) and id(leaf) not in counted_ids:
+            dense += math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+    # tied embeddings: the head IS the table, and _lm_head einsums the whole
+    # (ncb, V, d) table every token — a full sweep, not a row gather (and it
+    # stays bf16: the quantize transform keeps embed tables dense)
+    if ctx.cfg.tie_embeddings:
+        t = defs["embed"]["table"]
+        dense += math.prod(t.shape) * jnp.dtype(t.dtype).itemsize
+    return {"quantized": quantized, "dense": dense,
+            "quantized_ref_einsum": ref_einsum,
+            "swept": quantized + dense}
 
 
 def param_shapes(ctx: ModelCtx) -> Pytree:
-    return shapes_of(model_defs(ctx))
+    shapes = shapes_of(model_defs(ctx))
+    par = ctx.parallel
+    if par.weight_quant == "none":
+        return shapes
+    backend = "pallas" if par.use_pallas else "ref"
+
+    # mirror the quantize transform so shapes/specs/params trees stay
+    # structurally identical under weight_quant (tree_maps rely on it)
+    def f(d: ParamDef, sds, site):
+        ks = _wq_k_shards(ctx, d)
+        if not wquant.quantizable(d.shape, par.weight_quant,
+                                  par.wq_group_size, ks):
+            return sds
+        return wquant.shapes_for(d.shape, par.weight_quant,
+                                 par.wq_group_size, k_shards=ks,
+                                 backend=backend)
+
+    return _map_wq_leaves(ctx, shapes, f)
 
 
 # ---------------------------------------------------------------------------
@@ -104,9 +300,20 @@ def _lm_head(params, x, ctx: ModelCtx) -> jax.Array:
         table = params["embed"]["table"]      # (ncb, V_local, d) vocab-sharded
         logits = jnp.einsum("bsd,cvd->bscv", x.astype(jnp.float32),
                             table.astype(jnp.float32))
+        return logits[:, :, 0] if cfg.n_codebooks == 1 else logits
+    head = params["lm_head"]
+    if isinstance(head, wquant.QuantWeight):
+        if cfg.n_codebooks == 1 and head.backend == "pallas":
+            # the biggest single per-token weight sweep goes through the
+            # fused dequant GEMV/GEMM (fp32 logits out of the kernel)
+            flat = wquant.matmul(x, wquant.index_batch(head, 0),
+                                 out_dtype=jnp.float32)
+            return flat
+        logits = jnp.einsum("bsd,cdv->bscv", x.astype(jnp.float32),
+                            wquant.dequantize(head).astype(jnp.float32))
     else:
         logits = jnp.einsum("bsd,cdv->bscv", x.astype(jnp.float32),
-                            params["lm_head"].astype(jnp.float32))
+                            head.astype(jnp.float32))
     return logits[:, :, 0] if cfg.n_codebooks == 1 else logits
 
 

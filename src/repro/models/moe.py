@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import wquant
 from repro.models.common import Dist, ParamDef, activation
 
 
@@ -134,10 +135,16 @@ def moe_forward(
 
     # ---- expert FFN (einsum over the local expert blocks) -----------------
     # local_blocks == local_E except when ffn_tp > 1 (then both are 1).
-    w_up, w_down = params["w_up"], params["w_down"]
+    # Quantized expert blocks ((E, K, N): per-expert scales, block dim
+    # sharded like the weight) dequantize here — the batched expert einsum
+    # stays on the reference path; the fused kernel serves the 2-D
+    # projections where the per-token sweep actually concentrates.
+    w_up = wquant.to_dense(params["w_up"])
+    w_down = wquant.to_dense(params["w_down"])
     up = jnp.einsum("ecd,edf->ecf", xe, w_up)
     if cfg.gated_mlp:
-        up = act(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) * up
+        up = act(jnp.einsum("ecd,edf->ecf", xe,
+                            wquant.to_dense(params["w_gate"]))) * up
     else:
         up = act(up)
     ye = jnp.einsum("ecf,efd->ecd", up, w_down)                 # partial if ffn_tp>1

@@ -393,6 +393,11 @@ class Engine:
         self.ctx = M.ModelCtx.make(self.cfg, self.parallel, pod_axis=pod)
         if self.params is None:
             self.params = M.init_params(self.ctx, jax.random.key(self.seed))
+        if self.parallel.weight_quant != "none":
+            # quantize-at-load: the serving programs only ever see packed
+            # weights + scales; param_specs mirrors the transform so the
+            # shard_map spec trees stay structurally identical
+            self.params = M.quantize_params(self.ctx, self.params)
         self._build()
 
     # -- sharding specs -----------------------------------------------------

@@ -16,16 +16,17 @@ of two).  This closes the batch-utilization gap that arXiv 2407.07304 / the
 LIMINAL analysis identify as the dominant decode-throughput lever once
 per-token sync cost is minimized.
 
-**Chunked prefill** (``prefill_chunk``): prompts longer than the budget are
-admitted chunk-by-chunk through the engine's fused mixed prefill/decode
-step — each serving step prefills one fixed-width chunk per admitting slot
-AND decodes one token per active slot, so a long prompt never stalls
-in-flight decode for more than one chunk of compute (LIMINAL's point:
-inter-token latency, not aggregate throughput, is the binding constraint
-once batching works).  The chunked path uses one fixed chunk shape (one
-compile, no pow-2 buckets); prompts within the budget keep the legacy
-single-shot admission, and ineligible families (MLA, windowed, recurrent)
-fall back to it entirely.  Greedy outputs are bit-identical either way.
+**Chunked prefill** (``prefill_chunk``): EVERY chunk-eligible prompt is
+admitted through the engine's fused mixed prefill/decode step — each
+serving step prefills one fixed-width chunk per admitting slot AND decodes
+one token per active slot, so a long prompt never stalls in-flight decode
+for more than one chunk of compute (LIMINAL's point: inter-token latency,
+not aggregate throughput, is the binding constraint once batching works),
+and a short prompt completes in its first chunk.  The chunked path uses
+one fixed chunk shape, so admission compiles exactly once; the pow-2
+bucketed single-shot prefill survives only as the fallback for ineligible
+families (MLA, windowed, recurrent, multi-codebook) or when chunking is
+explicitly disabled.  Greedy outputs are bit-identical either way.
 
 Arrivals are measured on a virtual clock of *decode steps* so schedules are
 deterministic and testable: a request with ``arrival_step=s`` becomes
@@ -44,6 +45,23 @@ import numpy as np
 from repro.models.common import pad_to
 from repro.runtime import kvcache
 from repro.runtime.engine import Engine
+
+
+def percentile_summary(vals) -> Optional[Dict[str, float]]:
+    """The one percentile helper every latency summary uses: linear-
+    interpolated percentiles (np.percentile) so p50 is the true median —
+    not the upper-median ``vals[n//2]`` shortcut, which disagrees with the
+    interpolated p95 two keys later on every even-sized sample.  Returns
+    None for an empty sample; a single sample is its own mean/p50/p95/max."""
+    v = np.asarray(list(vals), np.float64)
+    if v.size == 0:
+        return None
+    return {
+        "mean": float(v.mean()),
+        "p50": float(np.percentile(v, 50)),
+        "p95": float(np.percentile(v, 95)),
+        "max": float(v.max()),
+    }
 
 
 @dataclass
@@ -143,6 +161,11 @@ class _Slot:
     # (slot state resets exactly once, on the first chunk)
     chunk_next: Optional[int] = None
     chunk_started: bool = False
+    # spec-decode drafting history: preallocated prompt+generated buffer so
+    # every verify step appends O(new tokens) instead of re-concatenating
+    # the whole history (O(len) per step = quadratic per request)
+    hist: Optional[np.ndarray] = None
+    hist_len: int = 0
 
 
 class ContinuousScheduler:
@@ -202,12 +225,12 @@ class ContinuousScheduler:
             "prefill_calls": 0, "prefill_tokens": 0,
             "prefill_chunks": 0, "chunked_admissions": 0,
         }
-        # chunked prefill: prompts longer than the budget stream through the
-        # fused mixed prefill/decode step, one fixed-width chunk per decode
-        # step, so admission never stalls in-flight decode for more than one
-        # chunk of compute.  Prompts within the budget keep the legacy
-        # single-shot (bucketed) admission — they fit one step's budget by
-        # definition.  Ineligible families fall back entirely.
+        # chunked prefill: EVERY eligible prompt streams through the fused
+        # mixed prefill/decode step — long ones chunk-by-chunk (admission
+        # never stalls in-flight decode for more than one chunk of
+        # compute), short ones in a single chunk.  One fixed chunk shape =
+        # one compiled admission program; only ineligible families fall
+        # back to the legacy bucketed single-shot prefill.
         chunk = (prefill_chunk if prefill_chunk is not None
                  else engine.parallel.prefill_chunk)
         if chunk and not self._chunk_eligible(cfg):
@@ -287,9 +310,14 @@ class ContinuousScheduler:
                 self.slots[i] = _Slot()
 
     def _bucket(self, plen: int) -> int:
-        """Pow-2 prompt bucket — LEGACY whole-prompt admission only.  The
-        chunked path never buckets: its chunk width is fixed, so it compiles
-        exactly one prefill program regardless of prompt mix."""
+        """Pow-2 prompt bucket — FALLBACK-ARCH whole-prompt admission only
+        (``self.chunk == 0``: MLA, windowed, recurrent, multi-codebook, or
+        chunking explicitly disabled).  Chunk-eligible archs admit every
+        prompt — short ones included — through the fixed-width mixed step,
+        which compiles exactly once; each distinct bucket width here is a
+        separate XLA compilation, the recompile cost this path is gated
+        for."""
+        assert self.chunk == 0, "bucketed admission is fallback-arch only"
         b = self.min_bucket
         while b < plen:
             b *= 2
@@ -324,13 +352,17 @@ class ContinuousScheduler:
             self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
             r.stats["queue_s"] = now - r.submitted_at
             r.stats["admitted_step"] = self.step_count
-            if self.chunk and len(r.prompt) > self.chunk:
-                # over budget: stream C-token chunks through the fused
-                # mixed step — decode never waits for the whole prompt
+            if self.chunk:
+                # ALL chunk-eligible prompts stream through the fused mixed
+                # step: long prompts chunk-by-chunk (decode never waits for
+                # the whole prompt), short prompts in a single chunk — the
+                # mixed program's width is fixed, so admission compiles
+                # exactly once, with no pow-2 prompt buckets at all
                 self.slots[slot].chunk_next = 0
                 self.dones[slot] = True
                 self.remaining[slot] = 0
-                self.stats["chunked_admissions"] += 1
+                if len(r.prompt) > self.chunk:
+                    self.stats["chunked_admissions"] += 1
             else:
                 short.append((slot, r))
         self.stats["admission_rounds"] += 1
@@ -459,6 +491,22 @@ class ContinuousScheduler:
                 if s.req is not None and not self.dones[i]
                 and self.remaining[i] > 0]
 
+    def _slot_history(self, i: int) -> np.ndarray:
+        """The slot's prompt+generated token history for the drafter,
+        maintained incrementally: the prompt copies in once, emitted tokens
+        (spec runs AND mixed-step decode emissions) append as they land."""
+        s = self.slots[i]
+        plen = len(s.req.prompt)
+        if s.hist is None:
+            s.hist = np.empty(plen + s.req.max_new + 1, np.int32)
+            s.hist[:plen] = np.asarray(s.req.prompt, np.int32).ravel()
+            s.hist_len = plen
+        total = plen + len(s.toks)
+        if s.hist_len < total:               # catch up on new emissions
+            s.hist[s.hist_len:total] = s.toks[s.hist_len - plen:]
+            s.hist_len = total
+        return s.hist[:s.hist_len]
+
     def _ensure_spec_capacity(self) -> None:
         """Pre-verify capacity hook (paged: blocks for spec_k+1 writes)."""
 
@@ -490,11 +538,7 @@ class ContinuousScheduler:
         vtok = np.zeros((self.B, K + 1), np.int32)
         vtok[:, 0] = self.tok
         for i in active:
-            s = self.slots[i]
-            hist = np.concatenate(
-                [np.asarray(s.req.prompt, np.int32).ravel(),
-                 np.asarray(s.toks, np.int32)])
-            vtok[i, 1:] = self.drafter.propose(hist)
+            vtok[i, 1:] = self.drafter.propose(self._slot_history(i))
         targets, n_emit, nxt, self.caches, pos, done, remaining = \
             self._run_verify(vtok)
         targets, n_emit = np.asarray(targets), np.asarray(n_emit)
@@ -641,29 +685,17 @@ class ContinuousScheduler:
         the chunk that completed the prompt (first *emitted* token)."""
         out: Dict = {"requests": len(self.done)}
         for key in ("ttft_s", "queue_s"):
-            vals = sorted(r.stats[key] for r in self.done if key in r.stats)
-            if not vals:
-                continue
-            out[key] = {
-                "mean": float(np.mean(vals)),
-                "p50": float(vals[len(vals) // 2]),
-                "max": float(vals[-1]),
-            }
-
-        def pct(vals):
-            v = np.asarray(vals, np.float64)
-            return {"mean": float(v.mean()),
-                    "p50": float(np.percentile(v, 50)),
-                    "p95": float(np.percentile(v, 95)),
-                    "max": float(v.max())}
-
+            s = percentile_summary(r.stats[key] for r in self.done
+                                   if key in r.stats)
+            if s is not None:
+                out[key] = s
         if self._itl:
-            out["decode_itl_s"] = pct([d for d, _ in self._itl])
-            adm = [d for d, a in self._itl if a]
-            if adm:
-                out["decode_itl_admission_s"] = pct(adm)
+            out["decode_itl_s"] = percentile_summary(d for d, _ in self._itl)
+            adm = percentile_summary(d for d, a in self._itl if a)
+            if adm is not None:
+                out["decode_itl_admission_s"] = adm
         if self._tps:
-            out["tokens_per_step"] = pct(list(self._tps))
+            out["tokens_per_step"] = percentile_summary(self._tps)
         if self.stats.get("spec_steps"):
             prop = self.stats["spec_proposed"]
             slot_steps = max(1, self.stats["spec_slot_steps"])
@@ -960,13 +992,16 @@ class PagedContinuousScheduler(ContinuousScheduler):
             r.stats["admitted_step"] = self.step_count
             r.stats["prefill_tokens_saved"] = starts_of[r.rid]
             self.stats["prefill_tokens_saved"] += starts_of[r.rid]
-            if self.chunk and len(r.prompt) - starts_of[r.rid] > self.chunk:
-                # over budget: the uncached suffix streams in fixed chunks
-                # (the first chunk resumes right after the shared prefix)
+            if self.chunk:
+                # every uncached suffix streams through the mixed step (the
+                # first chunk resumes right after the shared prefix); short
+                # suffixes complete in one chunk — one compiled admission
+                # program, no pow-2 buckets
                 self.slots[slot].chunk_next = starts_of[r.rid]
                 self.dones[slot] = True
                 self.remaining[slot] = 0
-                self.stats["chunked_admissions"] += 1
+                if len(r.prompt) - starts_of[r.rid] > self.chunk:
+                    self.stats["chunked_admissions"] += 1
             else:
                 short.append((slot, r))
         self.stats["admission_rounds"] += 1
