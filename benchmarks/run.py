@@ -10,6 +10,9 @@
   wquant              — weight-only quantization: bytes swept per token +
                         serving tok/s at bf16/int8/int4 (dense/paged x
                         plain/spec)
+  disagg              — disaggregated prefill/decode pools: decode ITL p95
+                        under concurrent prefill load vs unified chunked
+                        admission + KV-block migration traffic
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV; every bench also writes its own
@@ -35,8 +38,8 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_continuous_batching, bench_one_shot,
-                            bench_paged_kv, bench_prefill,
+    from benchmarks import (bench_continuous_batching, bench_disagg,
+                            bench_one_shot, bench_paged_kv, bench_prefill,
                             bench_specdecode, bench_sync_minimization,
                             bench_token_latency, bench_wquant,
                             bench_zero_copy)
@@ -51,6 +54,7 @@ def main() -> None:
         ("prefill", bench_prefill.main),
         ("spec_decode", bench_specdecode.main),
         ("wquant", bench_wquant.main),
+        ("disagg", bench_disagg.main),
     ]
     failures = []
     for name, fn in benches:

@@ -327,6 +327,14 @@ class ParallelConfig:
     kv_pool_blocks: int = 0     # total pool blocks; 0 = n_slots * blocks/slot
                                 # (i.e. the dense footprint — shrink to
                                 # overcommit capacity vs n_slots x max_seq)
+    # disaggregated prefill/decode serving (DisaggScheduler): the first
+    # disagg_prefill_shards data shards form the PREFILL POOL (prompts admit
+    # and chunk-prefill there), the remaining shards the DECODE POOL;
+    # finished KV blocks migrate between the per-shard block namespaces via
+    # a batched device-to-device copy, with refcounts handed off through
+    # the allocator.  0 disables (unified serving).  Requires chunk-eligible
+    # archs (same gate as prefill_chunk) and dp * pods >= 2.
+    disagg_prefill_shards: int = 0
 
 
 @dataclass(frozen=True)

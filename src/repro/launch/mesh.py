@@ -18,3 +18,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(dp: int = 1, tp: int = 1):
     """Test/example mesh over however many (virtual) devices exist."""
     return make_mesh((dp, tp), ("data", "model"))
+
+
+def split_data_shards(n_shards: int, prefill_shards: int):
+    """Role assignment for disaggregated serving: data shards
+    ``[0, prefill_shards)`` form the prefill pool, the rest the decode pool.
+    Contiguous ranges, so each pool's slots and block namespaces stay
+    shard-local and the split is pure host bookkeeping — the mesh itself is
+    unchanged (one shard_map program still spans both pools)."""
+    if not 0 < prefill_shards < n_shards:
+        raise ValueError(
+            f"need 1 <= prefill_shards < data shards; got "
+            f"prefill_shards={prefill_shards} with {n_shards} shard(s)")
+    return (tuple(range(prefill_shards)),
+            tuple(range(prefill_shards, n_shards)))

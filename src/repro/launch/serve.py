@@ -24,7 +24,17 @@ Schedulers (``--scheduler``):
               reuse, ``--shared-prefix N`` prepends one common N-token
               system prompt to every request so the reuse path is visible.
 
-Both continuous schedulers also take ``--spec-k N`` (speculative decoding:
+  disagg      paged slot engine with the data axis split into a prefill
+              pool and a decode pool (``--prefill-shards`` of ``--dp``):
+              prompts chunk-prefill on the prefill shards only, finished KV
+              blocks migrate to the decode shards in batched jitted copy
+              steps, and decode never shares a dispatch with admission.
+              Reports per-pool stats: occupancy, migrated blocks/bytes,
+              decode-side prefix hits that skipped the copy, and
+              migration-wait percentiles.  Needs ``--dp >= 2`` and a
+              chunk-eligible arch.
+
+All continuous schedulers also take ``--spec-k N`` (speculative decoding:
 n-gram prompt-lookup drafts + fused multi-token verify, emitting 1..N+1
 tokens per step; ``--spec-ngram`` caps the lookup n-gram length and
 ``--no-spec-decode`` forces plain decode) — the stats block then reports
@@ -41,7 +51,7 @@ import numpy as np
 from repro.configs import ParallelConfig, SamplingConfig, get_config
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.engine import Engine
-from repro.runtime.scheduler import (ContinuousScheduler,
+from repro.runtime.scheduler import (ContinuousScheduler, DisaggScheduler,
                                      PagedContinuousScheduler, WaveScheduler)
 
 
@@ -59,13 +69,22 @@ def build_engine(args):
                          spec_k=0 if args.no_spec_decode else args.spec_k,
                          spec_ngram=args.spec_ngram,
                          weight_quant=args.weight_quant,
-                         wq_group_size=args.wq_group_size)
+                         wq_group_size=args.wq_group_size,
+                         disagg_prefill_shards=(args.prefill_shards
+                                                if args.scheduler == "disagg"
+                                                else 0))
     return Engine(cfg=cfg, parallel=par,
                   sampling=SamplingConfig(top_k=args.top_k),
-                  mesh=mesh, max_len=args.max_len)
+                  mesh=mesh, max_len=args.max_len,
+                  wq_cache=args.wq_cache)
 
 
 def make_scheduler(eng, args):
+    if args.scheduler == "disagg":
+        return DisaggScheduler(
+            eng, n_slots=args.slots, block_steps=args.block_steps,
+            responsive_blocks=args.responsive_blocks,
+            prefix_cache=not args.no_prefix_cache)
     if args.scheduler == "paged":
         # block-size / pool-size ride on ParallelConfig (build_engine); the
         # scheduler reads them as its defaults
@@ -100,8 +119,14 @@ def submit_workload(sched, cfg, args):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
-    ap.add_argument("--scheduler", choices=("wave", "continuous", "paged"),
+    ap.add_argument("--scheduler",
+                    choices=("wave", "continuous", "paged", "disagg"),
                     default="wave")
+    ap.add_argument("--prefill-shards", type=int, default=1,
+                    help="disagg scheduler: the first N data shards form "
+                         "the prefill pool (prompts admit and chunk-prefill "
+                         "there; finished KV blocks migrate to the decode "
+                         "pool); needs dp >= 2")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4,
                     help="wave scheduler: requests per wave")
@@ -155,6 +180,10 @@ def main(argv=None):
     ap.add_argument("--wq-group-size", type=int, default=128,
                     help="int4 group length along the reduction dim "
                          "(clamped per tensor so groups stay TP-shard-local)")
+    ap.add_argument("--wq-cache", default=None,
+                    help="path for the packed QuantWeight checkpoint: load "
+                         "it when present (72B-scale starts skip bf16 "
+                         "materialization), else save after quantize-at-load")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="stagger arrivals by N decode steps per request")
     ap.add_argument("--max-new-spread", type=int, default=1,
@@ -191,7 +220,7 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s -> {1000*dt/max(total_tokens,1):.1f} ms/token "
           f"({args.scheduler}; arch={cfg.name}, tp={args.tp})")
-    if args.scheduler in ("continuous", "paged"):
+    if args.scheduler in ("continuous", "paged", "disagg"):
         s = sched.stats
         util = s["active_slot_steps"] / max(1, s["slot_steps"])
         print(f"  decode steps {s['decode_steps']}, slot util {util:.0%}, "
@@ -220,12 +249,27 @@ def main(argv=None):
             print(f"  decode inter-token p50/p95 {itl['p50']*1e3:.1f}/"
                   f"{itl['p95']*1e3:.1f} ms (admission windows "
                   f"{adm['p50']*1e3:.1f}/{adm['p95']*1e3:.1f} ms)")
-    if args.scheduler == "paged":
+    if args.scheduler in ("paged", "disagg"):
         s = sched.stats
         print(f"  pool {sched.n_blocks} x {sched.bs}-token blocks, "
               f"high-water {s['blocks_hwm']} blocks; prefill tokens "
               f"{s['prefill_tokens']} (+{s['prefill_tokens_saved']} reused), "
               f"preemptions {s['preemptions']}")
+    if args.scheduler == "disagg":
+        p = sched.request_summary()["pools"]
+        print(f"  pools: {p['prefill_shards']} prefill + "
+              f"{p['decode_shards']} decode shards; prefill occupancy "
+              f"{p['prefill_occupancy']:.0%} over {p['prefill_steps']} "
+              f"chunk steps")
+        print(f"  migration: {p['migrated_blocks']} blocks copied "
+              f"({p['migration_bytes']/2**20:.1f} MiB), "
+              f"{p['migration_skipped_blocks']} skipped via decode-side "
+              f"prefix hits, {p['handoffs']} handoffs, "
+              f"{p['migration_deferrals']} deferrals")
+        if "migration_wait_s" in p:
+            w = p["migration_wait_s"]
+            print(f"  migration wait p50/p95 {w['p50']*1e3:.1f}/"
+                  f"{w['p95']*1e3:.1f} ms")
     for r in done[:4]:
         out = r.output if r.output.ndim == 1 else r.output[..., 0]
         print(f"  req {r.rid}: {len(r.output)} tokens, first 8: {out[:8].tolist()}")

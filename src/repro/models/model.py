@@ -289,6 +289,60 @@ def param_shapes(ctx: ModelCtx) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# Packed-weight persistence (quantize-at-load -> disk)
+#
+# A 72B-scale start otherwise materializes the full bf16 tree before packing
+# it down; persisting the packed QuantWeight tree lets later starts restore
+# int8/int4 payloads + scales directly.  QuantWeight is a pytree whose
+# children flatten under stable paths, so the flat-key npz checkpointer
+# round-trips it as-is; ``param_shapes`` mirrors the quantize transform and
+# supplies the ``like`` tree for the shape-checked restore.
+# ---------------------------------------------------------------------------
+
+
+def _wq_meta(ctx: ModelCtx) -> Dict[str, Any]:
+    """Everything the packing layout depends on: mode/group decide payload
+    widths, tp decides scale shapes (the int4 group clamp is shard-local),
+    backend decides the packed layout."""
+    par = ctx.parallel
+    return {"arch": ctx.cfg.name, "weight_quant": par.weight_quant,
+            "wq_group_size": par.wq_group_size, "tp": ctx.dist.tp,
+            "backend": "pallas" if par.use_pallas else "ref"}
+
+
+def has_quantized(path: str) -> bool:
+    from repro.training import checkpoint
+
+    return checkpoint.load_meta(path) is not None
+
+
+def save_quantized(ctx: ModelCtx, params: Pytree, path: str) -> None:
+    """Persist an already-quantized param tree (packed payloads + scales)."""
+    from repro.training import checkpoint
+
+    checkpoint.save(path, params, meta=_wq_meta(ctx))
+
+
+def load_quantized(ctx: ModelCtx, path: str) -> Pytree:
+    """Restore a packed QuantWeight tree saved by :func:`save_quantized`.
+    The stored meta must match the current config — a silent layout
+    mismatch would produce garbage weights, so it is an error instead."""
+    from repro.training import checkpoint
+
+    meta = checkpoint.load_meta(path)
+    if meta is None:
+        raise FileNotFoundError(f"no quantized checkpoint at {path}")
+    want = _wq_meta(ctx)
+    got = {k: meta.get("meta", {}).get(k) for k in want}
+    if got != want:
+        raise ValueError(
+            f"quantized checkpoint {path} was packed for {got}, "
+            f"engine wants {want}")
+    tree, _ = checkpoint.restore(path, param_shapes(ctx))
+    return tree
+
+
+# ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 

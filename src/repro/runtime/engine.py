@@ -208,6 +208,68 @@ def make_paged_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig,
     return prefill_paged
 
 
+def _make_chunk_half(ctx: M.ModelCtx, sampling: SamplingConfig, groups,
+                     *, paged: bool):
+    """The chunk-prefill half shared by the fused mixed step and the
+    chunk-only step (disaggregated prefill pool): scatter ONE chunk of up to
+    C tokens for every admitting slot and sample each row's next token from
+    its last real chunk position.  ``rng`` arrives pre-folded by the caller
+    so both users derive ``ptok`` from the identical key stream."""
+
+    def half(params, ctokens, caches, admit, first, clens, starts, totals,
+             bt_w, rng):
+        caches_r = kvcache.reset_slots(caches, groups, admit & first,
+                                       paged=paged)
+        lmask = (jnp.arange(ctokens.shape[1], dtype=jnp.int32)[None, :]
+                 < clens[:, None])                           # (b, C)
+        hidden, new_caches, _ = M.forward(
+            params, ctokens, ctx, caches=caches_r, last_only=False,
+            skip_head=True, seq_sharded=True, length_mask=lmask,
+            start_pos=starts, block_tables=bt_w,
+        )
+        idx = jnp.clip(clens - 1, 0, ctokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = M.lm_head_local(params, h_last, ctx)
+        ptok = sample_tokens(
+            logits[:, -1], rng, sampling, ctx.plan, ctx.dist,
+            topk_sync_enabled=ctx.parallel.topk_sync,
+            use_pallas=ctx.parallel.use_pallas,
+        )
+        new_caches = kvcache.set_slot_positions(new_caches, groups, totals)
+        merged = kvcache.merge_slots(caches, new_caches, groups, admit,
+                                     paged=paged)
+        return ptok, merged
+
+    return half
+
+
+def make_chunk_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig,
+                            *, paged: bool):
+    """Chunk-prefill-ONLY step — the prefill half of the mixed step with no
+    decode ride-along, for the disaggregated prefill pool where decode-active
+    slots live on other shards and step separately.
+
+    (params, ctokens (b,C), caches, admit, first, clens, starts, totals,
+     [bt_w,] rng) -> (ptok (b,), caches)
+
+    Operand semantics match the mixed step's prefill half exactly (and ptok
+    folds the same rng stream), so a prompt chunk-prefilled here is
+    bit-identical to one admitted through the unified mixed step."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+    half = _make_chunk_half(ctx, sampling, groups, paged=paged)
+
+    def chunk(params, ctokens, caches, admit, first, clens, starts, totals,
+              *rest):
+        *bts, rng = rest
+        bt_w = bts[0] if paged else None
+        return half(params, ctokens, caches, admit, first, clens, starts,
+                    totals, bt_w, jax.random.fold_in(rng, 0))
+
+    return chunk
+
+
 def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
     """Fused chunked-prefill + decode step — the unit of chunked admission.
 
@@ -236,6 +298,7 @@ def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
     from repro.models import transformer as tfm
 
     groups = tfm.build_groups(ctx.cfg)
+    half = _make_chunk_half(ctx, sampling, groups, paged=paged)
     dec = make_slot_decode_step(ctx, sampling)
 
     def mixed(params, ctokens, caches, admit, first, clens, starts, totals,
@@ -243,26 +306,8 @@ def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
         *bts, rng = rest
         bt_w = bts[0] if paged else None
         bt = bts[1] if paged else None
-        caches_r = kvcache.reset_slots(caches, groups, admit & first,
-                                       paged=paged)
-        lmask = (jnp.arange(ctokens.shape[1], dtype=jnp.int32)[None, :]
-                 < clens[:, None])                           # (b, C)
-        hidden, new_caches, _ = M.forward(
-            params, ctokens, ctx, caches=caches_r, last_only=False,
-            skip_head=True, seq_sharded=True, length_mask=lmask,
-            start_pos=starts, block_tables=bt_w,
-        )
-        idx = jnp.clip(clens - 1, 0, ctokens.shape[1] - 1)
-        h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
-        logits = M.lm_head_local(params, h_last, ctx)
-        ptok = sample_tokens(
-            logits[:, -1], jax.random.fold_in(rng, 0), sampling, ctx.plan,
-            ctx.dist, topk_sync_enabled=ctx.parallel.topk_sync,
-            use_pallas=ctx.parallel.use_pallas,
-        )
-        new_caches = kvcache.set_slot_positions(new_caches, groups, totals)
-        merged = kvcache.merge_slots(caches, new_caches, groups, admit,
-                                     paged=paged)
+        ptok, merged = half(params, ctokens, caches, admit, first, clens,
+                            starts, totals, bt_w, jax.random.fold_in(rng, 0))
         # The decode half freezes admitting rows (done=True), but a frozen
         # row still performs its row-local cache write at its incoming
         # position — which for an admitting row is STALE and would clobber
@@ -376,6 +421,46 @@ def make_paged_decode_step(ctx: M.ModelCtx, sampling: SamplingConfig):
     return paged_decode
 
 
+def make_migrate_step(ctx: M.ModelCtx):
+    """Batched cross-pool KV-block migration (disaggregated serving).
+
+    (caches, src (m,), dst (m,), land (b,), totals (b,)) -> caches
+
+    ``src``/``dst`` are GLOBAL block ids (shard * blocks_per_shard + local);
+    every pool leaf copies row ``src[j]`` into row ``dst[j]`` in one gather +
+    scatter over the block dim.  The program is jitted GLOBALLY (no
+    shard_map): the pool's block dim is sharded over the data axis, so when
+    src and dst fall on different shards GSPMD lowers the copy to the actual
+    device-to-device transfer — which is precisely the migration traffic the
+    scheduler accounts (migration_bytes = blocks x pool_block_bytes).
+
+    ``land`` flags decode slots receiving a fully-migrated request this
+    step; their position rows are rewritten to ``[0, totals[b])`` valid so
+    the landed view is immediately decodable (all other rows, and all
+    recurrent per-slot state, are untouched — bit-for-bit).
+
+    Callers pad (src, dst) with null self-copies (0 -> 0) to a bucketed
+    width: global block 0 is shard 0's reserved null block, and duplicate
+    scatter writes of identical values are benign."""
+    from repro.models import transformer as tfm
+
+    groups = tfm.build_groups(ctx.cfg)
+
+    def migrate(caches, src, dst, land, totals):
+        def f(key, leaf, stacked):
+            if key not in kvcache.POOL_KEYS:
+                return leaf
+            if stacked:                     # (layers, n_blocks, ...)
+                return leaf.at[:, dst].set(leaf[:, src])
+            return leaf.at[dst].set(leaf[src])
+
+        out = kvcache._map_by_key(caches, groups, f)
+        newpos = kvcache.set_slot_positions(out, groups, totals)
+        return kvcache.merge_slots(out, newpos, groups, land, paged=True)
+
+    return migrate
+
+
 @dataclass
 class Engine:
     """Host-side serving engine over a local (or production) mesh."""
@@ -387,17 +472,31 @@ class Engine:
     max_len: int
     params: Pytree = None
     seed: int = 0
+    wq_cache: Optional[str] = None   # path for the packed QuantWeight tree:
+                                     # load it if present (skipping bf16
+                                     # materialization), else save after
+                                     # quantize-at-load
 
     def __post_init__(self):
         pod = "pod" if "pod" in self.mesh.axis_names else None
         self.ctx = M.ModelCtx.make(self.cfg, self.parallel, pod_axis=pod)
+        wq = self.parallel.weight_quant != "none"
+        loaded = False
         if self.params is None:
-            self.params = M.init_params(self.ctx, jax.random.key(self.seed))
-        if self.parallel.weight_quant != "none":
+            if wq and self.wq_cache and M.has_quantized(self.wq_cache):
+                self.params = M.load_quantized(self.ctx, self.wq_cache)
+                loaded = True
+            else:
+                self.params = M.init_params(self.ctx, jax.random.key(self.seed))
+        if wq:
             # quantize-at-load: the serving programs only ever see packed
             # weights + scales; param_specs mirrors the transform so the
-            # shard_map spec trees stay structurally identical
+            # shard_map spec trees stay structurally identical (quantize is
+            # a no-op on already-packed QuantWeight leaves, so a tree
+            # restored from wq_cache passes straight through)
             self.params = M.quantize_params(self.ctx, self.params)
+            if self.wq_cache and not loaded:
+                M.save_quantized(self.ctx, self.params, self.wq_cache)
         self._build()
 
     # -- sharding specs -----------------------------------------------------
@@ -621,6 +720,72 @@ class Engine:
             jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
             jnp.asarray(remaining, jnp.int32), jnp.asarray(eos, jnp.int32),
             jnp.asarray(bt_w, jnp.int32), jnp.asarray(bt, jnp.int32), rng)
+
+    # -- disaggregated serving (chunk-only prefill + block migration) ------
+    def _chunk_only(self, paged: bool):
+        """Lazily-built chunk-prefill-only program (prefill-pool step of the
+        disaggregated engine; same one-width compile story as _mixed)."""
+        cb = self._cb_paged() if paged else self._cb()
+        if "chunk" not in cb:
+            pspecs = M.param_specs(self.ctx)
+            batch_spec, tok2, tok1, _, _ = self._specs()
+            cspec = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                         batched_pos=True)
+            sm = partial(compat.shard_map, mesh=self.mesh, check_vma=False)
+            slot = P(*batch_spec)
+            extra = (P(*batch_spec, None),) if paged else ()
+            ch = make_chunk_prefill_step(self.ctx, self.sampling, paged=paged)
+            cb["chunk"] = jax.jit(
+                sm(ch, in_specs=(pspecs, tok2, cspec, slot, slot, slot, slot,
+                                 slot, *extra, P()),
+                   out_specs=(tok1, cspec)),
+                donate_argnums=(2,) if self.parallel.zero_copy else (),
+            )
+        return cb["chunk"]
+
+    def chunk_slots_paged(self, caches, ctokens, admit, first, clens, starts,
+                          totals, bt_w, rng):
+        """One chunk-prefill-only step over the paged pool (no decode half):
+        ``bt_w`` routes the chunk scatter, with null rows for every
+        non-admitting slot.  Returns (ptok (B,), caches)."""
+        return self._chunk_only(True)(
+            self.params, jnp.asarray(ctokens), caches,
+            jnp.asarray(admit, bool), jnp.asarray(first, bool),
+            jnp.asarray(clens, jnp.int32), jnp.asarray(starts, jnp.int32),
+            jnp.asarray(totals, jnp.int32), jnp.asarray(bt_w, jnp.int32), rng)
+
+    def _migrate(self, m: int):
+        """Lazily-built jitted migration program per padded batch width
+        ``m`` (widths are pow-2 bucketed by migrate_blocks)."""
+        cb = self._cb_paged()
+        key = ("migrate", m)
+        if key not in cb:
+            from jax.sharding import NamedSharding
+            cspecs = kvcache.cache_pspecs(self.ctx, kv_seq_shard=False,
+                                          batched_pos=True)
+            shard_of = jax.tree.map(
+                lambda p: NamedSharding(self.mesh, p), cspecs,
+                is_leaf=lambda x: isinstance(x, P))
+            cb[key] = jax.jit(
+                make_migrate_step(self.ctx),
+                donate_argnums=(0,) if self.parallel.zero_copy else (),
+                out_shardings=shard_of,
+            )
+        return cb[key]
+
+    def migrate_blocks(self, caches, src_ids, dst_ids, land, totals):
+        """Copy pool blocks ``src_ids`` -> ``dst_ids`` (GLOBAL ids; cross-
+        shard pairs become device-to-device traffic) and land the slots
+        flagged by ``land`` at valid extent ``totals``.  Returns caches."""
+        n = len(src_ids)
+        m = 1 << max(0, int(n - 1).bit_length())      # pow-2 bucket, >= 1
+        src = np.zeros(m, np.int32)
+        dst = np.zeros(m, np.int32)
+        src[:n] = src_ids
+        dst[:n] = dst_ids
+        return self._migrate(m)(
+            caches, jnp.asarray(src), jnp.asarray(dst),
+            jnp.asarray(land, bool), jnp.asarray(totals, jnp.int32))
 
     # -- speculative decoding (fused multi-token verify) -------------------
     def _verify(self, paged: bool, K1: int):

@@ -244,6 +244,26 @@ def set_slot_positions(caches: Tuple, groups, total_lens: jax.Array) -> Tuple:
     return _map_by_key(caches, groups, f)
 
 
+def pool_block_bytes(caches: Tuple, groups) -> int:
+    """Bytes of KV payload held by ONE global block across every pool leaf
+    (all layers, all heads) — the unit of migration traffic accounting for
+    disaggregated serving, mirroring how sync_policy accounts collectives."""
+    import math
+
+    total = 0
+
+    def f(key, leaf, stacked):
+        nonlocal total
+        if key in POOL_KEYS:
+            ax = 1 if stacked else 0          # block axis
+            layers = leaf.shape[0] if stacked else 1
+            total += layers * math.prod(leaf.shape[ax + 1:]) * leaf.dtype.itemsize
+        return leaf
+
+    _map_by_key(caches, groups, f)
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Host-side block allocator (paged KV)
 # ---------------------------------------------------------------------------
@@ -284,6 +304,7 @@ class BlockAllocator:
         # (shard, block id) -> chain_hash for eviction
         self._prefix: Dict[Tuple[int, int], Tuple[int, Tuple[int, ...]]] = {}
         self._prefix_of: Dict[Tuple[int, int], int] = {}
+        self._migrating = 0          # source blocks pinned by in-flight copies
 
     # -- accounting -------------------------------------------------------
     def free_count(self, shard: int = 0) -> int:
@@ -297,6 +318,25 @@ class BlockAllocator:
 
     def refcount(self, shard: int, block: int) -> int:
         return self._ref[shard].get(block, 0)
+
+    def migrating_count(self) -> int:
+        return self._migrating
+
+    # -- cross-pool migration pins ---------------------------------------
+    # Disaggregated serving copies blocks between shard namespaces with a
+    # batched device step that executes AFTER the host has already queued
+    # (and possibly released) the source slot.  begin_migration pins each
+    # source block with an extra reference so releasing the source slot
+    # cannot return it to the free list (and overwrite it with a new
+    # prefill) before the copy lands; end_migration drops the pin once the
+    # batched copy has executed.
+    def begin_migration(self, shard: int, blocks: Sequence[int]) -> None:
+        self.incref(shard, blocks)
+        self._migrating += len(blocks)
+
+    def end_migration(self, shard: int, blocks: Sequence[int]) -> None:
+        self._migrating -= len(blocks)
+        self.free(shard, blocks)
 
     # -- alloc / free -----------------------------------------------------
     def alloc(self, shard: int, n: int) -> Optional[List[int]]:

@@ -335,8 +335,13 @@ class ContinuousScheduler:
                 and cfg.n_codebooks == 1
                 and all(k == "attn" for k in cfg.layer_pattern))
 
+    def _free_slots(self) -> List[int]:
+        """Slots admission may fill (the disagg scheduler restricts this to
+        the prefill pool; landings fill decode-pool slots directly)."""
+        return [i for i, s in enumerate(self.slots) if s.req is None]
+
     def _admit(self) -> int:
-        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        free = self._free_slots()
         arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
         if not free or not arrived:
             return 0
@@ -942,7 +947,7 @@ class PagedContinuousScheduler(ContinuousScheduler):
 
     # -- admission --------------------------------------------------------
     def _admit(self) -> int:
-        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        free = self._free_slots()
         arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
         if not free or not arrived:
             return 0
@@ -1116,3 +1121,462 @@ class PagedContinuousScheduler(ContinuousScheduler):
             if n_full:
                 self.alloc.register_prefix(self._shard_of(i), s.req.prompt,
                                            self.slot_blocks[i][:n_full])
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode serving
+# ---------------------------------------------------------------------------
+
+
+class DisaggScheduler(PagedContinuousScheduler):
+    """Disaggregated serving: the data axis splits into a PREFILL POOL (the
+    first ``prefill_shards`` shards) and a DECODE POOL (the rest), each with
+    its own per-shard block namespace from the allocator.
+
+    Prompts admit only to prefill-pool slots and stream through the
+    chunk-prefill-ONLY program (no decode ride-along — the chunked engine's
+    mixed step exists precisely because admission steals decode steps there;
+    here decode-active slots live on other shards and step separately).  At
+    each published chunk boundary the completed full blocks are EAGERLY
+    enqueued for migration; when the prompt completes, the tail block
+    follows, the prefill slot is released, and the request lands in a free
+    decode-pool slot with its position row rewritten — the same batched
+    jitted step that executes the queued device-to-device block copies.
+    Refcounts hand off through the allocator: sources are pinned by
+    ``begin_migration`` until the copy lands, destinations are owned by the
+    landing slot, and a decode-side prefix hit on an already-migrated block
+    is referenced instead of copied (``migration_skipped_blocks``).
+
+    Because decode reads K/V only through block-table indirection, the
+    decode program never learns where a block was filled: greedy streams
+    are token-identical to the unified paged engine (same chunk width, same
+    per-row math — batch-row placement is invisible to row-local attention).
+
+    **ITL accounting.**  This single-process container necessarily
+    serializes the two pools' dispatches; on the disaggregated deployment
+    this models, they run on disjoint shard groups concurrently.  The
+    decode-pool ITL therefore measures each decode DISPATCH's own duration
+    (``_last_step_t`` is stamped immediately before the decode program, so
+    the sample excludes same-round chunk/migration host time) — exactly the
+    quantity that stays flat under concurrent prefill load, where the
+    unified chunked engine's admission-window ITL absorbs one chunk of
+    prefill compute per token.  Rounds that carried prefill work still tag
+    their decode samples (``decode_itl_admission_s``), so flatness is
+    visible as admission-window p95 ≈ overall p95.
+    """
+
+    def __init__(self, engine: Engine, n_slots: int, pad_id: int = 0,
+                 block_steps: int = 8, min_bucket: int = 8,
+                 responsive_blocks: bool = False,
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 prefill_chunk: Optional[int] = None,
+                 spec_k: Optional[int] = None,
+                 spec_ngram: Optional[int] = None,
+                 *, block_size: Optional[int] = None,
+                 n_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 on_preempt: Optional[Callable[[int], None]] = None,
+                 prefill_shards: Optional[int] = None):
+        # the pool split rides on chunked prefill (a prompt must be
+        # resumable mid-cache on the prefill shards); fallback archs would
+        # silently serve unified, so reject them loudly — mirroring the
+        # spec-decode gating
+        if not self._chunk_eligible(engine.cfg):
+            raise ValueError(
+                "disaggregated serving requires a chunk-eligible arch "
+                "(attention-pure GQA): MLA latent caches, sliding-window "
+                "ring layouts, recurrent state, and multi-codebook heads "
+                "cannot resume prefill mid-cache on a separate pool — serve "
+                f"{engine.cfg.name!r} on the unified paged engine instead")
+        super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
+                         responsive_blocks, on_token, prefill_chunk,
+                         spec_k, spec_ngram, block_size=block_size,
+                         n_blocks=n_blocks, prefix_cache=prefix_cache,
+                         on_preempt=on_preempt)
+        if not self.chunk:
+            raise ValueError("disaggregated serving needs prefill_chunk > 0")
+        from repro.launch.mesh import split_data_shards
+        pf = (prefill_shards if prefill_shards is not None
+              else engine.parallel.disagg_prefill_shards)
+        try:
+            self._pf_shards, self._dec_shards = split_data_shards(
+                self.n_shards, pf)
+        except ValueError as e:
+            raise ValueError(
+                "disaggregated serving splits the data axis into two pools "
+                f"(got dp*pods={self.n_shards}, prefill_shards={pf}) — run "
+                "with dp >= 2 and 1 <= prefill_shards < dp*pods") from e
+        self._spss = self.B // self.n_shards
+        self._pf_slots = tuple(range(len(self._pf_shards) * self._spss))
+        # migration pipeline state:
+        #   queue   (slot, src_shard, src_local, dst_shard, dst_local)
+        #           copies awaiting the next batched migrate step
+        #   _mig    per-slot handoff state {dst, dst_blocks, sent, ready_t}
+        #   _handoff_ready  prefill-complete slots still enqueuing blocks
+        #   _landing        fully-enqueued requests awaiting a decode slot
+        self._mig_queue: List[Tuple[int, int, int, int, int]] = []
+        self._mig: Dict[int, Dict] = {}
+        self._handoff_ready: List[int] = []
+        self._landing: List[Dict] = []
+        from collections import deque
+        self._mig_wait: "deque[float]" = deque(maxlen=65536)
+        self._block_bytes: Optional[int] = None
+        self.stats.update({
+            "migrated_blocks": 0, "migration_bytes": 0,
+            "migration_skipped_blocks": 0, "migration_deferrals": 0,
+            "migration_steps": 0, "handoffs": 0,
+            "prefill_steps": 0, "prefill_slot_busy": 0,
+            "prefill_slot_total": 0,
+        })
+
+    # -- pool geometry ----------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i in self._pf_slots if self.slots[i].req is None]
+
+    def _prefilling(self) -> List[int]:
+        # chunk_next == plen is the awaiting-handoff sentinel: the slot is
+        # no longer chunking but must not retire until its blocks migrate
+        return [i for i in super()._prefilling()
+                if self.slots[i].chunk_next < len(self.slots[i].req.prompt)]
+
+    def _pick_decode_shard(self) -> int:
+        """Least-loaded decode shard: most free blocks, then most free
+        slots, then lowest id (deterministic)."""
+        def free_slots(sh: int) -> int:
+            lo = sh * self._spss
+            return sum(1 for j in range(lo, lo + self._spss)
+                       if self.slots[j].req is None)
+
+        return max(self._dec_shards,
+                   key=lambda sh: (self.alloc.free_count(sh),
+                                   free_slots(sh), -sh))
+
+    # -- slot release / preemption (migration-state cleanup) ---------------
+    def _release_slot(self, i: int) -> None:
+        m = self._mig.pop(i, None)
+        if m is not None:
+            # drop this slot's queued copies (unpinning their sources) and
+            # return its destination-side blocks — a preempted request
+            # recomputes from the prompt on readmission, so any half-done
+            # handoff is rolled back whole
+            keep = []
+            for e in self._mig_queue:
+                if e[0] == i:
+                    self.alloc.end_migration(e[1], [e[2]])
+                else:
+                    keep.append(e)
+            self._mig_queue[:] = keep
+            if m["dst_blocks"]:
+                self.alloc.free(m["dst"], m["dst_blocks"])
+            if i in self._handoff_ready:
+                self._handoff_ready.remove(i)
+        super()._release_slot(i)
+
+    # -- prefill-pool stepping --------------------------------------------
+    def _chunk_step(self) -> bool:
+        """One chunk-prefill-only step over every mid-prefill slot (the
+        prefill pool's whole turn; assembly mirrors ``_mixed_step`` minus
+        the decode half)."""
+        C = self.chunk
+        slots_p = self._prefilling()
+        if not slots_p:
+            return False
+        tokens = np.full((self.B, C), self.pad_id, np.int32)
+        admit = np.zeros((self.B,), bool)
+        first = np.zeros((self.B,), bool)
+        clens = np.ones((self.B,), np.int32)
+        starts = np.zeros((self.B,), np.int32)
+        totals = np.ones((self.B,), np.int32)
+        emits = []
+        for i in slots_p:
+            s = self.slots[i]
+            off = s.chunk_next
+            plen = len(s.req.prompt)
+            nc = min(C, plen - off)
+            tokens[i, :nc] = s.req.prompt[off:off + nc]
+            admit[i] = True
+            first[i] = not s.chunk_started
+            clens[i] = nc
+            starts[i] = off
+            totals[i] = off + nc
+            if off + nc == plen:
+                emits.append(i)
+        bt_w = np.where(admit[:, None], self.bt,
+                        kvcache.NULL_BLOCK).astype(np.int32)
+        ptok, self.caches = self.engine.chunk_slots_paged(
+            self.caches, tokens, admit, first, clens, starts, totals, bt_w,
+            self._next_rng())
+        self._admission_mark = True       # this round carried prefill work
+        for i in slots_p:
+            s = self.slots[i]
+            s.chunk_started = True
+            s.chunk_next += int(clens[i])
+            self.stats["prefill_tokens"] += int(clens[i])
+            self.stats["prefill_chunks"] += 1
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_steps"] += 1
+        self.stats["prefill_slot_busy"] += len(slots_p)
+        self.stats["prefill_slot_total"] += len(self._pf_slots)
+        self._post_chunks(slots_p)
+        ptok = np.asarray(ptok)
+        for i in emits:
+            self._complete_prefill(i, int(ptok[i]))
+        return True
+
+    def _post_chunks(self, slots_p: List[int]) -> None:
+        super()._post_chunks(slots_p)     # prefill-shard prefix publication
+        # eager migration: completed full blocks start their copy at the
+        # chunk boundary they publish at, overlapping migration with the
+        # remaining prefill instead of paying the whole prompt at handoff
+        for i in slots_p:
+            s = self.slots[i]
+            if s.chunk_next < len(s.req.prompt):
+                self._enqueue_migration(i)
+
+    def _complete_prefill(self, i: int, tok: int) -> None:
+        """The slot's chunk completed its prompt: record the first emitted
+        token (sampled by the chunk program) and stage the handoff."""
+        s = self.slots[i]
+        r = s.req
+        s.toks.append(tok)
+        if self.on_token is not None:
+            self.on_token(r.rid, tok)
+        r.stats["ttft_s"] = time.monotonic() - r.submitted_at
+        self.stats["emitted"] += 1
+        if r.max_new <= 1 or (r.eos_id is not None and tok == r.eos_id):
+            # nothing left to decode: complete off the prefill pool (the
+            # retire path releases blocks + any eagerly-queued migration)
+            self.dones[i] = True
+            self.remaining[i] = 0
+            s.chunk_next = None
+            return
+        m = self._mig.get(i)
+        if m is None:
+            m = self._mig[i] = {"dst": self._pick_decode_shard(),
+                                "dst_blocks": [], "sent": 0, "ready_t": None}
+        m["ready_t"] = time.monotonic()
+        self._handoff_ready.append(i)
+        # chunk_next stays == plen: the sentinel keeping _retire and
+        # _prefilling off the slot while its blocks stream out
+
+    # -- migration pipeline ------------------------------------------------
+    def _enqueue_migration(self, i: int, final: bool = False) -> None:
+        """Queue copies for slot ``i``'s blocks up to its published
+        frontier (all of them incl. the partial tail when ``final``).  A
+        decode-side prefix hit references the resident block instead of
+        copying; destination exhaustion preempts the youngest decode-pool
+        request once, then defers (retried every round)."""
+        s = self.slots[i]
+        prompt = s.req.prompt
+        plen = len(prompt)
+        done_toks = plen if s.chunk_next is None else min(s.chunk_next, plen)
+        target = -(-plen // self.bs) if final else done_toks // self.bs
+        if target == 0:
+            return
+        m = self._mig.get(i)
+        if m is None:
+            m = self._mig[i] = {"dst": self._pick_decode_shard(),
+                                "dst_blocks": [], "sent": 0, "ready_t": None}
+        dshard = m["dst"]
+        src_shard = self._shard_of(i)
+        hits: List[int] = []
+        if self.prefix_cache:
+            hits, _ = self.alloc.match_prefix(dshard, prompt)
+        while m["sent"] < target:
+            j = m["sent"]
+            if j < len(hits):
+                # the chain-verified block already lives in the decode
+                # pool: hand the refcount off, skip the copy entirely
+                self.alloc.incref(dshard, [hits[j]])
+                m["dst_blocks"].append(hits[j])
+                self.stats["migration_skipped_blocks"] += 1
+            else:
+                got = self.alloc.alloc(dshard, 1)
+                if got is None and self._preempt_youngest(dshard):
+                    got = self.alloc.alloc(dshard, 1)
+                if got is None:
+                    self.stats["migration_deferrals"] += 1
+                    return
+                src_local = self.slot_blocks[i][j]
+                self.alloc.begin_migration(src_shard, [src_local])
+                self._mig_queue.append((i, src_shard, src_local,
+                                        dshard, got[0]))
+                m["dst_blocks"].append(got[0])
+            m["sent"] += 1
+
+    def _advance_handoffs(self) -> None:
+        """Finish staging prefill-complete slots: once every block (incl.
+        the tail) is enqueued or referenced, free the prefill slot (the
+        allocator pins keep queued sources alive until the copy executes)
+        and move the request to the landing list."""
+        for i in list(self._handoff_ready):
+            s = self.slots[i]
+            self._enqueue_migration(i, final=True)
+            m = self._mig[i]
+            if m["sent"] < -(-len(s.req.prompt) // self.bs):
+                continue                   # starved for dst blocks; retry
+            self._handoff_ready.remove(i)
+            m = self._mig.pop(i)
+            self._landing.append({
+                "req": s.req, "shard": m["dst"], "blocks": m["dst_blocks"],
+                "toks": list(s.toks), "ready_t": m["ready_t"],
+            })
+            self.stats["handoffs"] += 1
+            self._release_slot(i)          # _mig popped -> src blocks free
+            self.slots[i] = _Slot()
+            self.dones[i] = True
+            self.remaining[i] = 0
+
+    def _run_migrations(self) -> None:
+        """Land waiting requests into free decode slots and execute every
+        queued copy in ONE batched jitted step (global block ids; cross-
+        shard pairs lower to the actual device-to-device transfer)."""
+        land = np.zeros((self.B,), bool)
+        totals = np.zeros((self.B,), np.int32)
+        landed = []
+        for rec in self._landing:
+            lo = rec["shard"] * self._spss
+            slot = next((j for j in range(lo, lo + self._spss)
+                         if self.slots[j].req is None and not land[j]), None)
+            if slot is None:
+                continue                   # decode pool full; lands later
+            r = rec["req"]
+            plen = len(r.prompt)
+            land[slot] = True
+            totals[slot] = plen
+            s = _Slot(req=r, admitted_step=self.step_count)
+            s.toks = list(rec["toks"])
+            self.slots[slot] = s
+            self.slot_blocks[slot] = list(rec["blocks"])
+            self.bt[slot, :] = kvcache.NULL_BLOCK
+            self.bt[slot, :len(rec["blocks"])] = rec["blocks"]
+            t = int(rec["toks"][-1])
+            self.tok[slot] = t
+            self.pos[slot] = plen
+            self.remaining[slot] = r.max_new - 1
+            self.eos[slot] = -1 if r.eos_id is None else r.eos_id
+            self.dones[slot] = r.eos_id is not None and t == r.eos_id
+            wait = time.monotonic() - rec["ready_t"]
+            r.stats["migration_wait_s"] = wait
+            self._mig_wait.append(wait)
+            if self.prefix_cache:
+                self.alloc.register_prefix(rec["shard"], r.prompt,
+                                           rec["blocks"][:plen // self.bs])
+            landed.append(rec)
+        for rec in landed:
+            self._landing.remove(rec)
+        if not self._mig_queue and not landed:
+            return
+        per = self.alloc.blocks_per_shard
+        src = [sh * per + b for _, sh, b, _, _ in self._mig_queue]
+        dst = [sh * per + b for _, _, _, sh, b in self._mig_queue]
+        self.caches = self.engine.migrate_blocks(self.caches, src, dst,
+                                                 land, totals)
+        for _, sh, b, _, _ in self._mig_queue:
+            self.alloc.end_migration(sh, [b])
+        n = len(self._mig_queue)
+        self._mig_queue.clear()
+        self.stats["migrated_blocks"] += n
+        self.stats["migration_bytes"] += n * (self._block_bytes or 0)
+        self.stats["migration_steps"] += 1
+        self._note_usage()
+
+    # -- decode-pool stepping ----------------------------------------------
+    def _run_decode(self, n: int):
+        # unlike the unified engine, decode here runs WHILE other slots are
+        # mid-prefill: those rows carry stale positions but real tables, so
+        # their frozen row-local rewrite must sink into the null block (the
+        # _run_verify idiom) or it would clobber a freshly-written chunk.
+        # _last_step_t stamps HERE so the ITL sample is the decode
+        # dispatch's own duration (see class docstring).
+        self._last_step_t = time.monotonic()
+        active = (~self.dones) & (self.remaining > 0)
+        bt = np.where(active[:, None], self.bt,
+                      kvcache.NULL_BLOCK).astype(np.int32)
+        return self.engine.decode_slots_paged(
+            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.eos, bt, self._next_rng(), n=n)
+
+    def _run_verify(self, vtok):
+        self._last_step_t = time.monotonic()
+        return super()._run_verify(vtok)
+
+    # -- reporting ---------------------------------------------------------
+    def request_summary(self) -> Dict:
+        out = super().request_summary()
+        st = self.stats
+        pools: Dict = {
+            "prefill_shards": len(self._pf_shards),
+            "decode_shards": len(self._dec_shards),
+            "prefill_steps": st["prefill_steps"],
+            "decode_steps": st["decode_steps"],
+            "prefill_occupancy": (
+                st["prefill_slot_busy"] / st["prefill_slot_total"]
+                if st["prefill_slot_total"] else 0.0),
+            "migrated_blocks": st["migrated_blocks"],
+            "migration_bytes": st["migration_bytes"],
+            "migration_skipped_blocks": st["migration_skipped_blocks"],
+            "migration_deferrals": st["migration_deferrals"],
+            "handoffs": st["handoffs"],
+        }
+        w = percentile_summary(self._mig_wait)
+        if w is not None:
+            pools["migration_wait_s"] = w
+        if "decode_itl_s" in out:
+            pools["decode_itl_s"] = out["decode_itl_s"]
+        out["pools"] = pools
+        return out
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> List[Request]:
+        """Serve until queue, slots, and migration pipeline drain."""
+        if self.caches is None:
+            self._init_caches()
+        if self._block_bytes is None:
+            from repro.models import transformer as tfm
+            self._block_bytes = kvcache.pool_block_bytes(
+                self.caches, tfm.build_groups(self.engine.cfg))
+        stall, last_sig = 0, None
+        while True:
+            self._retire()
+            self._admit()
+            did_prefill = self._chunk_step()
+            self._advance_handoffs()
+            self._run_migrations()
+            n = self._block_size()
+            if n:
+                if self.spec_k:
+                    self._spec_step()
+                else:
+                    self._decode_block(n)
+            elif did_prefill:
+                # prefill-only round: the virtual arrival clock advances so
+                # arrivals keyed to decode steps stay admissible
+                self.step_count += 1
+            busy = any(s.req is not None for s in self.slots)
+            if not busy and not self._landing and not self._mig_queue:
+                pending = [r.arrival_step for r in self.queue]
+                if not pending:
+                    break
+                self.step_count = max(self.step_count, min(pending))
+                continue
+            # livelock breaker: a full round with zero observable progress
+            # (deferred migrations against a wedged decode pool) preempts
+            # its way out rather than spinning forever
+            sig = (len(self.done), self.stats["emitted"],
+                   self.stats["migrated_blocks"], self.stats["handoffs"],
+                   self.stats["prefill_chunks"], self.stats["decode_steps"],
+                   len(self.queue), len(self._landing))
+            if sig == last_sig:
+                stall += 1
+                if stall > 4 * self.B + 16:
+                    if not any(self._preempt_youngest(sh) for sh in
+                               (*self._dec_shards, *self._pf_shards)):
+                        raise RuntimeError(
+                            "disagg scheduler stalled: no progress and "
+                            "nothing to preempt")
+                    stall = 0
+            else:
+                stall, last_sig = 0, sig
+        self._retire()
+        return self.done

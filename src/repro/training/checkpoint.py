@@ -3,7 +3,9 @@
 A multi-pod deployment would use a sharded async checkpointer (per-host
 shards, barrier on step); here the same interface writes a single host file —
 the save/restore round-trip (incl. exact pytree structure) is what tests
-cover.
+cover.  Custom pytree nodes (e.g. the packed ``QuantWeight``) round-trip
+too: their children flatten under stable key paths, int8/uint8 payloads are
+stored natively, and bf16 leaves go through a lossless fp32 detour.
 """
 from __future__ import annotations
 
@@ -35,6 +37,18 @@ def save(path: str, tree: Pytree, *, step: int = 0, meta: Dict | None = None) ->
     np.savez(path, **flat)
     with open(path + ".meta.json", "w") as f:
         json.dump({"step": step, "meta": meta or {}, "n_arrays": len(flat)}, f)
+
+
+def load_meta(path: str) -> Dict | None:
+    """The sidecar metadata written by :func:`save` ({"step","meta",
+    "n_arrays"}), or None when no checkpoint exists at ``path``.  Checks
+    both the raw path and the ``.npz``-stripped stem, mirroring restore."""
+    stem = path[:-4] if path.endswith(".npz") else path
+    for meta_path in (path + ".meta.json", stem + ".meta.json"):
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                return json.load(f)
+    return None
 
 
 def restore(path: str, like: Pytree) -> Tuple[Pytree, int]:
