@@ -1,0 +1,207 @@
+"""Overlapped host/device engine loop vs the blocking loop under load.
+
+Two workloads on one warm mid-size engine (d_model=512, 3 layers — big
+enough per decode step that the block-end materialize in the blocking loop
+pays a real wait on the final step's thunk tail):
+
+* **host-blocked time per decode step** — a decode-heavy back-to-back batch
+  (32 requests, all arriving at step 0, 32 slots) run R times per mode,
+  interleaved sync/overlap.  The per-mode estimate is the MIN over repeats
+  (the standard noise-filtering estimator for microbenchmarks: scheduler
+  jitter only ever adds time).  The blocking loop materializes tokens at
+  block end, right after the last dispatch returns, and waits out the
+  final step's async tail; the overlapped loop lands tokens one block
+  late, when the tail has long drained, so its wait is the bare copy
+  floor.  The overlapped loop must strictly reduce the per-step blocked
+  time, and its ``host_overlap_fraction`` must be > 0.
+
+* **goodput under a per-token SLO** — a seeded Poisson arrival process,
+  SLO calibrated from a warm blocking run (1.25x its median per-request
+  completion-latency per emitted token), goodput (fraction of requests
+  meeting the SLO) reported for both modes.
+
+Every run in both workloads must serve token-identical greedy streams —
+asserted against the first sync run, not assumed.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_async.py
+(--no-json to skip writing BENCH_async.json)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+BENCH_JSON = os.path.join(HERE, "..", "BENCH_async.json")
+
+ARCH = "yi-9b"
+N_SLOTS = 32
+N_REQUESTS = 32
+PROMPT_MIN, PROMPT_MAX = 8, 16
+MAX_NEW_MIN, MAX_NEW_MAX = 24, 32
+BLOCK_STEPS = 8
+PREFILL_CHUNK = 16
+MAX_LEN = 64
+REPEATS = 5
+GOODPUT_LAM = 3.0
+SLO_FACTOR = 1.25
+
+
+def _mid_cfg():
+    from repro.configs import get_config
+
+    # reduced() caps at smoke scale where a decode step finishes inside the
+    # dispatch call and there is nothing left to overlap; widen it so the
+    # device still owes work when the blocking loop asks for its tokens
+    return dataclasses.replace(get_config(ARCH).reduced(), d_model=512,
+                               n_heads=8, n_kv_heads=8, d_ff=1536,
+                               vocab_size=2048, n_layers=3)
+
+
+def _requests(cfg, n, seed=0, lam=0.0):
+    rng = np.random.default_rng(seed)
+    arrival, reqs = 0, []
+    for _ in range(n):
+        p = rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(PROMPT_MIN, PROMPT_MAX + 1)))
+        reqs.append((p.astype(np.int32),
+                     int(rng.integers(MAX_NEW_MIN, MAX_NEW_MAX + 1)),
+                     arrival))
+        if lam > 0.0:
+            arrival += int(rng.poisson(lam))
+    return reqs
+
+
+def _serve(eng, reqs, overlap: bool):
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    sched = ContinuousScheduler(eng, n_slots=N_SLOTS,
+                                block_steps=BLOCK_STEPS,
+                                prefill_chunk=PREFILL_CHUNK, overlap=overlap)
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    summ = sched.request_summary()
+    emitted = sum(len(r.output) for r in done)
+    # per-request completion latency per emitted token (arrivals are on the
+    # virtual step clock, so every request is wall-submitted at t0)
+    per_tok = np.array([(r.stats["finished_at"] - t0) / len(r.output)
+                        for r in done if t0 < r.stats["finished_at"]])
+    rec = {
+        "overlap": overlap, "requests": len(done), "emitted": emitted,
+        "wall_s": dt, "tok_per_s": emitted / dt,
+        "per_token_latency_s": sorted(per_tok.tolist()),
+        "overlap_stats": summ["overlap"],
+    }
+    return rec, {r.rid: np.asarray(r.output) for r in done}
+
+
+def _check_identity(ref, out):
+    assert sorted(ref) == sorted(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+def _goodput(rec, slo_s):
+    lat = np.asarray(rec["per_token_latency_s"])
+    return float((lat <= slo_s).mean()) if lat.size else 0.0
+
+
+def main(emit=None, json_path=BENCH_JSON):
+    emit = emit or (lambda n, u, d="": print(f"{n},{u:.3f},{d}"))
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    from repro.configs import ParallelConfig, SamplingConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+
+    cfg = _mid_cfg()
+    eng = Engine(cfg=cfg,
+                 parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                         prefill_chunk=PREFILL_CHUNK),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(1, 1), max_len=MAX_LEN)
+
+    # -- host-blocked per step: decode-heavy back-to-back batch ------------
+    reqs = _requests(cfg, N_REQUESTS, seed=0, lam=0.0)
+    _, ref = _serve(eng, reqs, overlap=False)      # warm sync (compiles)
+    _serve(eng, reqs, overlap=True)                # warm overlap
+    runs = {False: [], True: []}
+    for _ in range(REPEATS):
+        for overlap in (False, True):              # interleaved repeats
+            rec, out = _serve(eng, reqs, overlap)
+            _check_identity(ref, out)
+            runs[overlap].append(rec)
+
+    def blk(rec):
+        return rec["overlap_stats"]["host_blocked_per_step_s"]
+
+    s_blk = min(blk(r) for r in runs[False])
+    o_blk = min(blk(r) for r in runs[True])
+    frac = float(np.median(
+        [r["overlap_stats"]["host_overlap_fraction"] for r in runs[True]]))
+    ahead = max(r["overlap_stats"]["max_dispatch_ahead"] for r in runs[True])
+    assert frac > 0.0, "overlapped run hid no host time"
+    assert o_blk < s_blk, (
+        f"overlap must strictly reduce host-blocked time per step "
+        f"({o_blk*1e6:.1f}us vs {s_blk*1e6:.1f}us)")
+
+    # -- goodput under a per-token SLO at Poisson arrivals -----------------
+    greqs = _requests(cfg, N_REQUESTS, seed=1, lam=GOODPUT_LAM)
+    cal, _ = _serve(eng, greqs, overlap=False)     # warm + SLO calibration
+    slo_s = SLO_FACTOR * float(np.median(cal["per_token_latency_s"]))
+    sync, s_out = _serve(eng, greqs, overlap=False)
+    over, o_out = _serve(eng, greqs, overlap=True)
+    _check_identity(s_out, o_out)
+    s_good, o_good = _goodput(sync, slo_s), _goodput(over, slo_s)
+
+    line_s = (f"min of {REPEATS} runs; {sync['requests']} reqs, "
+              f"{sync['emitted']} toks, {sync['tok_per_s']:.1f} tok/s; "
+              f"goodput {s_good:.0%} @ {slo_s*1e3:.1f} ms/token SLO")
+    line_o = (f"{frac:.0%} of host time hidden, dispatch-ahead max {ahead}; "
+              f"goodput {o_good:.0%}")
+    print(f"blocking   host-blocked {s_blk*1e6:.1f} us/step; {line_s}",
+          flush=True)
+    print(f"overlapped host-blocked {o_blk*1e6:.1f} us/step; {line_o}",
+          flush=True)
+    emit("async/sync_host_blocked_per_step", 1e6 * s_blk, line_s)
+    emit("async/overlap_host_blocked_per_step", 1e6 * o_blk, line_o)
+    emit("async/host_overlap_fraction", 1e6 * frac,
+         f"{frac:.1%} of host wait hidden behind device compute")
+    emit("async/goodput_sync", 1e6 * s_good,
+         f"{s_good:.0%} of requests within {slo_s*1e3:.1f} ms/token")
+    emit("async/goodput_overlap", 1e6 * o_good,
+         f"{o_good:.0%} of requests within {slo_s*1e3:.1f} ms/token")
+    if json_path:
+        payload = {
+            "meta": {"bench": "async_overlap_serving", "arch": ARCH,
+                     "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                     "n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+                     "block_steps": BLOCK_STEPS, "repeats": REPEATS,
+                     "arrival_poisson_lambda": GOODPUT_LAM,
+                     "slo_s_per_token": slo_s, "slo_factor": SLO_FACTOR,
+                     "sync_host_blocked_per_step_s": s_blk,
+                     "overlap_host_blocked_per_step_s": o_blk,
+                     "host_blocked_reduction": (s_blk - o_blk) / s_blk,
+                     "host_overlap_fraction": frac,
+                     "goodput_sync": s_good, "goodput_overlap": o_good,
+                     "token_identical_requests": len(ref)},
+            "blocked_runs": {"sync": runs[False], "overlapped": runs[True]},
+            "sync": sync,
+            "overlapped": over,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return {"sync": sync, "overlapped": over}
+
+
+if __name__ == "__main__":
+    main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

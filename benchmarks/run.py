@@ -13,6 +13,9 @@
   disagg              — disaggregated prefill/decode pools: decode ITL p95
                         under concurrent prefill load vs unified chunked
                         admission + KV-block migration traffic
+  async               — overlapped host/device engine loop vs blocking:
+                        host-blocked time per decode step + goodput under a
+                        per-token SLO at Poisson arrivals
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV; every bench also writes its own
@@ -38,11 +41,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_continuous_batching, bench_disagg,
-                            bench_one_shot, bench_paged_kv, bench_prefill,
-                            bench_specdecode, bench_sync_minimization,
-                            bench_token_latency, bench_wquant,
-                            bench_zero_copy)
+    from benchmarks import (bench_async, bench_continuous_batching,
+                            bench_disagg, bench_one_shot, bench_paged_kv,
+                            bench_prefill, bench_specdecode,
+                            bench_sync_minimization, bench_token_latency,
+                            bench_wquant, bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
@@ -55,6 +58,7 @@ def main() -> None:
         ("spec_decode", bench_specdecode.main),
         ("wquant", bench_wquant.main),
         ("disagg", bench_disagg.main),
+        ("async", bench_async.main),
     ]
     failures = []
     for name, fn in benches:

@@ -335,6 +335,16 @@ class ParallelConfig:
     # the allocator.  0 disables (unified serving).  Requires chunk-eligible
     # archs (same gate as prefill_chunk) and dp * pods >= 2.
     disagg_prefill_shards: int = 0
+    # overlapped host/device engine loop (continuous-batching schedulers):
+    # dispatch decode step N+1 while step N's token array is still a device
+    # future, running host work (drafting, admission, block allocation,
+    # migration queueing) against the previous step's landed tokens and
+    # materializing np.asarray one step late.  Host state advances on a
+    # PREDICTION (budget decrements are deterministic; EOS is the only
+    # surprise) with a one-step rollback when a landed token turns out to be
+    # EOS.  Greedy token streams are bit-identical to the blocking loop —
+    # overlap reorders host observation, not device math.
+    overlap_decode: bool = False
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,408 @@
+"""Async serving frontend: an OpenAI-compatible HTTP server over the slot
+engine — ``python -m repro.launch.frontend --arch yi-9b --port 8080``.
+
+Two pieces, both stdlib-only:
+
+``EngineService`` — bridges concurrent clients to the single-threaded
+scheduler.  The scheduler loop runs on ONE worker thread (JAX dispatch is
+not thread-safe, and the engine wants exactly one dispatcher); clients
+enqueue requests through a bounded inbox and receive tokens through
+per-request asyncio queues fed by the scheduler's ``on_token`` callback
+(``call_soon_threadsafe`` hops them onto the event loop).  The worker
+drives ``scheduler.serve_step()`` — one admit → step → retire round per
+iteration — so new requests are admitted in-flight between engine rounds,
+and with ``--overlap`` each round dispatches decode block N+1 while block
+N's tokens are still device futures.
+
+**Overload shedding**: when inbox + live requests reach ``max_pending``,
+new submissions are rejected up front with HTTP 429 + ``Retry-After``
+(counted in ``scheduler.stats["shed_requests"]``) instead of growing an
+unbounded queue — a shed request never touches the scheduler, so it can
+never corrupt slot state.  **Graceful drain**: shutdown stops accepting
+(503), serves every admitted request to completion, then exits.
+
+The API accepts token-id prompts (this repo has no tokenizer):
+
+    POST /v1/completions
+    {"prompt": [1, 2, 3], "max_tokens": 16, "stream": true,
+     "stop_token_id": 5}
+
+Responses follow the completions shape with ``token_ids`` in each choice;
+streaming uses SSE (``data: {...}\\n\\n`` chunks, then ``data: [DONE]``).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+_DONE = object()
+
+
+class TokenStream:
+    """Per-request token channel from the scheduler thread to one client
+    coroutine.  Created on the event loop; pushed from the worker thread."""
+
+    def __init__(self, loop: asyncio.AbstractEventLoop):
+        self._loop = loop
+        self._q: "asyncio.Queue" = asyncio.Queue()
+        self.request = None          # set at finish (the retired Request)
+        self.error: Optional[str] = None
+
+    # -- worker-thread side ------------------------------------------------
+    def push(self, tok: int) -> None:
+        self._loop.call_soon_threadsafe(self._q.put_nowait, tok)
+
+    def finish(self, request) -> None:
+        self.request = request
+        self._loop.call_soon_threadsafe(self._q.put_nowait, _DONE)
+
+    def fail(self, msg: str) -> None:
+        self.error = msg
+        self._loop.call_soon_threadsafe(self._q.put_nowait, _DONE)
+
+    # -- client-coroutine side ---------------------------------------------
+    async def next_token(self):
+        """The next token id, or None when the request finished/failed."""
+        item = await self._q.get()
+        return None if item is _DONE else item
+
+
+class EngineService:
+    """Owns the scheduler worker thread and the client-facing submit path."""
+
+    def __init__(self, scheduler, max_pending: int = 64,
+                 idle_wait_s: float = 0.02):
+        self.sched = scheduler
+        self.max_pending = max_pending
+        self.idle_wait_s = idle_wait_s
+        self._lock = threading.Lock()
+        self._inbox: List = []
+        self._streams = {}
+        self._live = 0               # submitted (inbox or in-engine), unfinished
+        self._draining = False
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        scheduler.stats.setdefault("shed_requests", 0)
+        prev_tok, prev_fin = scheduler.on_token, scheduler.on_finish
+
+        def on_token(rid: int, tok: int) -> None:
+            if prev_tok is not None:
+                prev_tok(rid, tok)
+            s = self._streams.get(rid)
+            if s is not None:
+                s.push(int(tok))
+
+        def on_finish(req) -> None:
+            if prev_fin is not None:
+                prev_fin(req)
+            s = self._streams.pop(req.rid, None)
+            with self._lock:
+                self._live -= 1
+            if s is not None:
+                s.finish(req)
+
+        scheduler.on_token = on_token
+        scheduler.on_finish = on_finish
+
+    # -- client side (event loop) ------------------------------------------
+    def pending(self) -> int:
+        with self._lock:
+            return self._live + len(self._inbox)
+
+    def try_submit(self, prompt, max_new: int, eos_id: Optional[int],
+                   stream: TokenStream) -> str:
+        """Returns "ok", "shed" (bounded-queue overload), or "draining"."""
+        with self._lock:
+            if self._draining:
+                return "draining"
+            if self._live >= self.max_pending:
+                self.sched.stats["shed_requests"] += 1
+                return "shed"
+            self._inbox.append((prompt, max_new, eos_id, stream))
+            self._live += 1
+        self._wake.set()
+        return "ok"
+
+    # -- worker side --------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self._lock:
+                batch, self._inbox = self._inbox, []
+            for prompt, max_new, eos_id, stream in batch:
+                try:
+                    # arrival_step = now on the virtual clock: immediately
+                    # admissible, ordering decided by the scheduler
+                    rid = self.sched.submit(
+                        np.asarray(prompt, np.int32), max_new, eos_id=eos_id,
+                        arrival_step=self.sched.step_count)
+                except ValueError as e:
+                    with self._lock:
+                        self._live -= 1
+                    stream.fail(str(e))
+                    continue
+                self._streams[rid] = stream
+            progressed = self.sched.serve_step()
+            if progressed:
+                continue
+            with self._lock:
+                idle = not self._inbox
+                stop = self._draining and idle and self._live == 0
+            if stop:
+                return
+            if idle:
+                self._wake.wait(self.idle_wait_s)
+                self._wake.clear()
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="engine-service")
+        self._thread.start()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Graceful shutdown: reject new work, serve everything admitted,
+        join the worker.  Returns True if the worker exited in time."""
+        with self._lock:
+            self._draining = True
+        self._wake.set()
+        if self._thread is None:
+            return True
+        self._thread.join(timeout)
+        return not self._thread.is_alive()
+
+
+class HttpFrontend:
+    """Minimal asyncio HTTP/1.1 server exposing the service.  One route
+    family, no dependencies: POST /v1/completions (+ GET /health)."""
+
+    MAX_BODY = 8 << 20
+
+    def __init__(self, service: EngineService, host: str = "127.0.0.1",
+                 port: int = 8080, retry_after_s: int = 1):
+        self.service = service
+        self.host = host
+        self.port = port
+        self.retry_after_s = retry_after_s
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._next_id = 0
+        self._conns = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self) -> None:
+        self.service.start()
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def serve_forever(self) -> None:
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def stop(self) -> None:
+        """Graceful drain: stop accepting, serve every admitted request to
+        completion, and let in-flight responses finish writing."""
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.service.drain)
+        while self._conns:
+            await asyncio.sleep(0.01)
+
+    # -- plumbing -----------------------------------------------------------
+    @staticmethod
+    async def _read_request(reader):
+        head = await reader.readuntil(b"\r\n\r\n")
+        lines = head.decode("latin-1").split("\r\n")
+        method, path, _ = lines[0].split(" ", 2)
+        headers = {}
+        for ln in lines[1:]:
+            if ":" in ln:
+                k, v = ln.split(":", 1)
+                headers[k.strip().lower()] = v.strip()
+        clen = int(headers.get("content-length", "0"))
+        if clen > HttpFrontend.MAX_BODY:
+            raise ValueError("body too large")
+        body = await reader.readexactly(clen) if clen else b""
+        return method, path, headers, body
+
+    @staticmethod
+    def _respond(writer, status: str, payload: dict,
+                 extra_headers: str = "") -> None:
+        body = json.dumps(payload).encode()
+        writer.write(
+            f"HTTP/1.1 {status}\r\nContent-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\nConnection: close\r\n"
+            f"{extra_headers}\r\n".encode() + body)
+
+    async def _handle(self, reader, writer) -> None:
+        self._conns += 1
+        try:
+            try:
+                method, path, _, body = await self._read_request(reader)
+            except (asyncio.IncompleteReadError, ValueError,
+                    asyncio.LimitOverrunError):
+                return
+            if method == "GET" and path in ("/health", "/v1/health"):
+                self._respond(writer, "200 OK", {
+                    "status": "ok", "pending": self.service.pending(),
+                    "shed_requests":
+                        self.service.sched.stats["shed_requests"]})
+            elif method == "POST" and path == "/v1/completions":
+                await self._completions(writer, body)
+            else:
+                self._respond(writer, "404 Not Found",
+                              {"error": {"message": f"no route {path}"}})
+            await writer.drain()
+        finally:
+            self._conns -= 1
+            writer.close()
+
+    # -- the route ----------------------------------------------------------
+    async def _completions(self, writer, body: bytes) -> None:
+        try:
+            req = json.loads(body or b"{}")
+            prompt = req["prompt"]
+            if not (isinstance(prompt, list) and len(prompt) >= 2
+                    and all(isinstance(t, int) for t in prompt)):
+                raise ValueError(
+                    "prompt must be a list of >= 2 token ids "
+                    "(this engine serves token ids; there is no tokenizer)")
+            max_new = int(req.get("max_tokens", 16))
+            if max_new < 1:
+                raise ValueError("max_tokens must be >= 1")
+            eos_id = req.get("stop_token_id")
+            eos_id = None if eos_id is None else int(eos_id)
+            do_stream = bool(req.get("stream", False))
+        except (KeyError, TypeError, ValueError) as e:
+            self._respond(writer, "400 Bad Request",
+                          {"error": {"message": str(e),
+                                     "type": "invalid_request_error"}})
+            return
+        stream = TokenStream(asyncio.get_running_loop())
+        verdict = self.service.try_submit(prompt, max_new, eos_id, stream)
+        if verdict == "shed":
+            # bounded-queue overload shedding: reject BEFORE the scheduler
+            # ever sees the request, with a client backoff hint
+            self._respond(
+                writer, "429 Too Many Requests",
+                {"error": {"message": "server overloaded, retry later",
+                           "type": "overloaded_error"}},
+                extra_headers=f"Retry-After: {self.retry_after_s}\r\n")
+            return
+        if verdict == "draining":
+            self._respond(writer, "503 Service Unavailable",
+                          {"error": {"message": "server is draining",
+                                     "type": "unavailable_error"}})
+            return
+        self._next_id += 1
+        cid = f"cmpl-{self._next_id}"
+        if do_stream:
+            await self._stream_response(writer, cid, eos_id, stream)
+        else:
+            await self._unary_response(writer, cid, eos_id, stream)
+
+    @staticmethod
+    def _finish_reason(toks: List[int], eos_id: Optional[int]) -> str:
+        return ("stop" if eos_id is not None and toks and toks[-1] == eos_id
+                else "length")
+
+    async def _unary_response(self, writer, cid, eos_id, stream) -> None:
+        toks: List[int] = []
+        while True:
+            t = await stream.next_token()
+            if t is None:
+                break
+            toks.append(t)
+        if stream.error is not None:
+            self._respond(writer, "400 Bad Request",
+                          {"error": {"message": stream.error,
+                                     "type": "invalid_request_error"}})
+            return
+        self._respond(writer, "200 OK", {
+            "id": cid, "object": "text_completion", "model": "repro",
+            "created": int(time.time()),
+            "choices": [{"index": 0, "token_ids": toks, "text": "",
+                         "finish_reason": self._finish_reason(toks, eos_id)}],
+            "usage": {"completion_tokens": len(toks)}})
+
+    async def _stream_response(self, writer, cid, eos_id, stream) -> None:
+        writer.write(b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-cache\r\nConnection: close\r\n\r\n")
+        toks: List[int] = []
+        while True:
+            t = await stream.next_token()
+            if t is None:
+                break
+            toks.append(t)
+            chunk = {"id": cid, "object": "text_completion.chunk",
+                     "choices": [{"index": 0, "token_ids": [t], "text": ""}]}
+            writer.write(f"data: {json.dumps(chunk)}\n\n".encode())
+            try:
+                await writer.drain()
+            except ConnectionError:
+                return                # client went away; engine finishes solo
+        if stream.error is not None:
+            writer.write(
+                f"data: {json.dumps({'error': stream.error})}\n\n".encode())
+        else:
+            final = {"id": cid, "object": "text_completion.chunk",
+                     "choices": [{"index": 0, "token_ids": [], "text": "",
+                                  "finish_reason":
+                                      self._finish_reason(toks, eos_id)}]}
+            writer.write(f"data: {json.dumps(final)}\n\n".encode())
+        writer.write(b"data: [DONE]\n\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    from repro.launch import serve as serve_mod
+    ap = serve_mod.build_parser(argparse.ArgumentParser(
+        description="OpenAI-compatible async serving frontend"))
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="0 picks an ephemeral port (printed at startup)")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="bounded request queue: submissions beyond this "
+                         "many live requests are shed with HTTP 429")
+    args = ap.parse_args(argv)
+    if args.scheduler == "wave":
+        ap.error("the frontend needs a continuous scheduler "
+                 "(--scheduler continuous|paged|disagg)")
+    eng = serve_mod.build_engine(args)
+    sched = serve_mod.make_scheduler(eng, args)
+    service = EngineService(sched, max_pending=args.max_pending)
+    frontend = HttpFrontend(service, host=args.host, port=args.port)
+
+    async def amain():
+        await frontend.start()
+        print(f"serving {eng.cfg.name} ({args.scheduler}"
+              f"{', overlapped' if sched.overlap else ''}) on "
+              f"http://{frontend.host}:{frontend.port}/v1/completions",
+              flush=True)
+        try:
+            await frontend.serve_forever()
+        except asyncio.CancelledError:
+            pass
+
+    try:
+        asyncio.run(amain())
+    except KeyboardInterrupt:
+        print("draining...", flush=True)
+        service.drain()
+    return frontend
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ acceptance rate and tokens/step.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -70,6 +71,7 @@ def build_engine(args):
                          spec_ngram=args.spec_ngram,
                          weight_quant=args.weight_quant,
                          wq_group_size=args.wq_group_size,
+                         overlap_decode=args.overlap,
                          disagg_prefill_shards=(args.prefill_shards
                                                 if args.scheduler == "disagg"
                                                 else 0))
@@ -116,8 +118,11 @@ def submit_workload(sched, cfg, args):
                      arrival_step=i * args.arrival_every)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser(ap=None):
+    """Engine/scheduler argument set, shared with the async frontend
+    (``repro.launch.frontend`` adds its server flags on top)."""
+    if ap is None:
+        ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--scheduler",
                     choices=("wave", "continuous", "paged", "disagg"),
@@ -197,6 +202,48 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-topk-sync", action="store_true",
                     help="disable paper §2.1b (baseline full-vocab gather)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="continuous schedulers: overlapped host/device "
+                         "engine loop — dispatch decode block N+1 against "
+                         "block N's device futures while N's tokens land on "
+                         "the host (greedy streams stay bit-identical to "
+                         "the blocking loop)")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump the scheduler's full request_summary() and "
+                         "raw stats counters (incl. overlap metrics: "
+                         "host-overlap fraction, dispatch-ahead depth, shed "
+                         "count) as JSON to PATH")
+    return ap
+
+
+def _jsonable(obj):
+    """Recursively coerce numpy scalars/arrays so json.dump accepts the
+    stats dicts."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+def dump_stats_json(sched, path, extra=None):
+    """Write request_summary() + raw stats counters (the full serving
+    telemetry, overlap metrics included) to ``path``."""
+    payload = {"request_summary": _jsonable(sched.request_summary()),
+               "stats": _jsonable(sched.stats)}
+    if extra:
+        payload.update(_jsonable(extra))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return payload
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     eng = build_engine(args)
@@ -249,6 +296,14 @@ def main(argv=None):
             print(f"  decode inter-token p50/p95 {itl['p50']*1e3:.1f}/"
                   f"{itl['p95']*1e3:.1f} ms (admission windows "
                   f"{adm['p50']*1e3:.1f}/{adm['p95']*1e3:.1f} ms)")
+        if lat.get("overlap", {}).get("enabled"):
+            ov = lat["overlap"]
+            print(f"  overlap: host-overlap {ov['host_overlap_fraction']:.0%} "
+                  f"({ov['host_overlap_s']:.2f}s hidden, "
+                  f"{ov['host_blocked_s']:.2f}s blocked, "
+                  f"{ov['host_blocked_per_step_s']*1e3:.1f} ms/step); "
+                  f"dispatch-ahead max {ov['max_dispatch_ahead']}, "
+                  f"eos rollbacks {ov['eos_rollbacks']}")
     if args.scheduler in ("paged", "disagg"):
         s = sched.stats
         print(f"  pool {sched.n_blocks} x {sched.bs}-token blocks, "
@@ -273,6 +328,15 @@ def main(argv=None):
     for r in done[:4]:
         out = r.output if r.output.ndim == 1 else r.output[..., 0]
         print(f"  req {r.rid}: {len(r.output)} tokens, first 8: {out[:8].tolist()}")
+    if args.stats_json:
+        if args.scheduler == "wave":
+            print("  --stats-json needs a continuous scheduler; skipping")
+        else:
+            dump_stats_json(sched, args.stats_json,
+                            extra={"wall_s": dt, "total_tokens": total_tokens,
+                                   "scheduler": args.scheduler,
+                                   "arch": cfg.name})
+            print(f"  stats -> {args.stats_json}")
     return done
 
 

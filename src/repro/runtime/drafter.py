@@ -76,3 +76,15 @@ class NgramDrafter:
                     [cont, np.full(self.k - len(cont), cont[-1])])
             return cont.astype(np.int32)
         return np.full(self.k, hist[-1], np.int32)
+
+    def propose_many(self, histories) -> np.ndarray:
+        """Draft for a batch of histories -> (len(histories), k) int32.
+
+        The serving loop's shape: one call per scheduler step with every
+        active slot's history, so the host drafting cost sits in one place
+        — under the overlapped engine loop this is exactly the work that
+        runs while the previous verify step is still in flight on the
+        device."""
+        if not len(histories):
+            return np.zeros((0, self.k), np.int32)
+        return np.stack([self.propose(h) for h in histories])

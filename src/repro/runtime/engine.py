@@ -656,10 +656,35 @@ class Engine:
             self.params, jnp.asarray(tokens), caches,
             jnp.asarray(admit, bool), jnp.asarray(plens, jnp.int32), rng)
 
+    @staticmethod
+    def land(*arrays):
+        """Materialize device futures to host numpy, blocking until the
+        dispatched programs that produce them have executed.  The single
+        synchronization primitive of the overlapped serving loop: every
+        ``decode_slots``/``verify_slots``/``mixed_step`` output is a device
+        future under JAX async dispatch, so a caller that chains outputs
+        into the next dispatch and ``land``s one step late overlaps all of
+        its host work with device compute.
+
+        **Async-dispatch contract** (what makes chaining safe): jitted
+        programs execute in dispatch order per device, so a program that
+        consumes another's output future always reads the produced value —
+        including donated cache buffers (``zero_copy``), provided the chain
+        stays linear: each cache future is consumed by exactly one
+        subsequent dispatch.  Host numpy arrays captured at dispatch time
+        are copied by ``jnp.asarray`` during tracing/transfer, so the
+        caller may mutate its host mirrors freely while blocks are in
+        flight."""
+        out = [np.asarray(a) for a in arrays]
+        return out[0] if len(out) == 1 else out
+
     def decode_slots(self, caches, tok, pos, done, remaining, eos, rng, *, n=1):
         """Run ``n`` fused masked decode steps over all slots.
 
-        Returns (toks (n, B[, ncb]), caches, pos, done, remaining)."""
+        Outputs are device FUTURES (JAX async dispatch): callers may chain
+        them into the next ``decode_slots`` call without materializing and
+        ``Engine.land`` them one step late — see the overlapped scheduler
+        loop.  Returns (toks (n, B[, ncb]), caches, pos, done, remaining)."""
         cb = self._cb()
         if n not in cb["decode"]:
             cb["decode"][n] = cb["build_decode"](n)

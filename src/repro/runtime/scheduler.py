@@ -152,6 +152,30 @@ class WaveScheduler:
 
 
 @dataclass
+class _Pending:
+    """One dispatched-but-unlanded fused decode block (overlapped loop).
+
+    The token/state outputs stay DEVICE FUTURES until ``_land_next``
+    materializes them one step late; the captured host context is what the
+    landing replay needs to attribute emissions exactly as the blocking
+    loop would have: the slot objects live at dispatch, the per-slot eos
+    ids, and the predicted-active mask (a superset of the device's true
+    active set — EOS surprises freeze slots earlier than prediction)."""
+
+    toks: object                  # device (n, B) sampled tokens
+    pos: object                   # device (B,) post-block positions
+    done: object                  # device (B,) post-block done mask
+    remaining: object             # device (B,) post-block budgets
+    n: int                        # fused steps in this block
+    slots: List                   # slot objects at dispatch (replay targets)
+    eos: np.ndarray               # per-slot eos ids at dispatch
+    active: np.ndarray            # predicted-active mask at dispatch
+    adm_mark: bool                # _admission_mark consumed by this block
+    itl_anchor: Optional[float]   # dispatch-time ITL anchor (disagg) or None
+    dispatch_t: float = 0.0       # host clock right after dispatch returned
+
+
+@dataclass
 class _Slot:
     req: Optional[Request] = None
     toks: List = field(default_factory=list)
@@ -183,7 +207,8 @@ class ContinuousScheduler:
                  on_token: Optional[Callable[[int, int], None]] = None,
                  prefill_chunk: Optional[int] = None,
                  spec_k: Optional[int] = None,
-                 spec_ngram: Optional[int] = None):
+                 spec_ngram: Optional[int] = None,
+                 overlap: Optional[bool] = None):
         if engine.cfg.n_codebooks != 1:
             raise NotImplementedError(
                 "ContinuousScheduler serves single-codebook archs "
@@ -224,7 +249,33 @@ class ContinuousScheduler:
             "emitted": 0, "admission_rounds": 0, "in_flight_admissions": 0,
             "prefill_calls": 0, "prefill_tokens": 0,
             "prefill_chunks": 0, "chunked_admissions": 0,
+            # host/device timing split (both loops): host_blocked_s sums the
+            # np.asarray waits (every materialization routes through
+            # _materialize), host_overlap_s sums host time spent between a
+            # dispatch and its landing — the work the overlapped loop takes
+            # off the device critical path
+            "host_blocked_s": 0.0, "host_overlap_s": 0.0, "landings": 0,
+            "eos_rollbacks": 0, "dispatch_ahead_steps": 0,
+            "max_dispatch_ahead": 0, "shed_requests": 0,
         }
+        # overlapped host/device loop: dispatch block N+1 on block N's
+        # device-future outputs, land (np.asarray) one block late.  Host
+        # decisions between dispatch and landing run on a PREDICTED state:
+        # budget decrements are deterministic, so prediction is exact except
+        # when a landed token turns out to be EOS — fixed by a one-step
+        # rollback at landing (_land_next).  Greedy streams are
+        # bit-identical to the blocking loop: overlap reorders host
+        # observation, never device math.
+        self.overlap = bool(engine.parallel.overlap_decode
+                            if overlap is None else overlap)
+        from collections import deque as _dq
+        self._pipeline: "_dq[_Pending]" = _dq()
+        # exact landed frontier (rolling pre-state for the landing replay)
+        self._exact_tok = self._exact_pos = None
+        self._exact_dones = self._exact_rem = None
+        self._stamp_itl_at_dispatch = False   # disagg overrides (see its doc)
+        # frontend hook: called with each Request as it retires
+        self.on_finish: Optional[Callable[[Request], None]] = None
         # chunked prefill: EVERY eligible prompt streams through the fused
         # mixed prefill/decode step — long ones chunk-by-chunk (admission
         # never stalls in-flight decode for more than one chunk of
@@ -293,12 +344,27 @@ class ContinuousScheduler:
         self._calls += 1
         return jax.random.fold_in(self._rng, self._calls)
 
+    def _inflight_mask(self) -> Optional[np.ndarray]:
+        """Slots with emissions still in flight (covered by an unlanded
+        block's predicted-active mask) — they may not retire or be reused
+        until their record lands."""
+        if not self._pipeline:
+            return None
+        m = np.zeros((self.B,), bool)
+        for rec in self._pipeline:
+            m |= rec.active
+        return m
+
     def _retire(self) -> None:
         now = time.monotonic()
+        infl = self._inflight_mask()
         for i, s in enumerate(self.slots):
             # mid-prefill slots ride with done=True (decode freezes them)
-            # but are NOT finished — their chunks are still streaming in
-            if s.req is not None and self.dones[i] and s.chunk_next is None:
+            # but are NOT finished — their chunks are still streaming in;
+            # under overlap, a done slot with unlanded emissions waits for
+            # its record to land (the tail tokens aren't host-visible yet)
+            if (s.req is not None and self.dones[i] and s.chunk_next is None
+                    and (infl is None or not infl[i])):
                 r = s.req
                 r.output = np.asarray(s.toks, dtype=np.int32)
                 r.stats.update({
@@ -308,6 +374,8 @@ class ContinuousScheduler:
                 })
                 self.done.append(r)
                 self.slots[i] = _Slot()
+                if self.on_finish is not None:
+                    self.on_finish(r)
 
     def _bucket(self, plen: int) -> int:
         """Pow-2 prompt bucket — FALLBACK-ARCH whole-prompt admission only
@@ -416,11 +484,31 @@ class ContinuousScheduler:
             r.stats["ttft_s"] = time.monotonic() - r.submitted_at
             self.stats["emitted"] += 1
 
+    def _decode_inputs(self):
+        """Decode-state inputs for the next engine dispatch: the newest
+        unlanded block's device-future outputs when the pipeline is
+        non-empty (exact by construction — the device chains its own
+        masking), host arrays otherwise."""
+        if self._pipeline:
+            rec = self._pipeline[-1]
+            return rec.toks[-1], rec.pos, rec.done, rec.remaining
+        return self.tok, self.pos, self.dones, self.remaining
+
+    def _materialize(self, *arrs):
+        """np.asarray with the wait accounted to ``host_blocked_s`` — the
+        single choke point both loops materialize through, so the bench's
+        blocked-time comparison is honest."""
+        t0 = time.monotonic()
+        out = [np.asarray(a) for a in arrs]
+        self.stats["host_blocked_s"] += time.monotonic() - t0
+        return out[0] if len(out) == 1 else out
+
     def _run_decode(self, n: int):
         """Engine dispatch for one fused block (overridden by the paged
         backend to thread block tables)."""
+        tok, pos, dones, remaining = self._decode_inputs()
         return self.engine.decode_slots(
-            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.caches, tok, pos, dones, remaining,
             self.eos, self._next_rng(), n=n)
 
     def _ensure_capacity(self, n: int) -> None:
@@ -429,7 +517,124 @@ class ContinuousScheduler:
     def _decode_block(self, n: int) -> None:
         self._ensure_capacity(n)
         toks, self.caches, pos, done, remaining = self._run_decode(n)
-        self._apply_decode(np.asarray(toks), pos, done, remaining, n)
+        self._apply_decode(self._materialize(toks), pos, done, remaining, n)
+
+    # -- overlapped loop (dispatch-ahead + one-step-late landing) -----------
+    def _dispatch_block(self, n: int) -> None:
+        """Dispatch one fused decode block WITHOUT landing it: outputs stay
+        device futures in a ``_Pending`` record, and the host state arrays
+        advance on a prediction (budget decrements are exact; a landed EOS
+        is the only surprise, rolled back at ``_land_next``).  The virtual
+        clock advances at dispatch so arrival admissibility matches the
+        blocking loop decision-for-decision."""
+        self._ensure_capacity(n)
+        active = (~self.dones) & (self.remaining > 0)
+        if not self._pipeline:
+            # pipeline was drained: the host arrays ARE the exact frontier
+            self._exact_tok = self.tok.copy()
+            self._exact_pos = self.pos.copy()
+            self._exact_dones = self.dones.copy()
+            self._exact_rem = self.remaining.copy()
+        toks, self.caches, pos, done, remaining = self._run_decode(n)
+        self._pipeline.append(_Pending(
+            toks=toks, pos=pos, done=done, remaining=remaining, n=n,
+            slots=list(self.slots), eos=self.eos.copy(), active=active,
+            adm_mark=self._admission_mark,
+            itl_anchor=(self._last_step_t if self._stamp_itl_at_dispatch
+                        else None),
+            dispatch_t=time.monotonic()))
+        self._admission_mark = False
+        # predicted frontier: EOS-blind replay of the device's masking
+        steps = np.where(active, np.minimum(n, self.remaining), 0)
+        self.pos = (self.pos + steps).astype(np.int32)
+        self.remaining = (self.remaining - steps).astype(np.int32)
+        self.dones = self.dones | (self.remaining <= 0)
+        self.step_count += n
+        self.stats["decode_steps"] += n
+        self.stats["slot_steps"] += n * self.B
+        depth = len(self._pipeline)
+        if depth > 1:
+            self.stats["dispatch_ahead_steps"] += n
+        self.stats["max_dispatch_ahead"] = max(
+            self.stats["max_dispatch_ahead"], depth)
+
+    def _land_next(self) -> None:
+        """Materialize the OLDEST unlanded block and run its host
+        bookkeeping: replay emissions exactly as the blocking loop's
+        ``_apply_decode`` (same appends, same on_token order, same stats),
+        stamp ITL at host-visibility, then reconcile the predicted state —
+        slots the device froze early (EOS) are rolled back in the predicted
+        arrays so later admission/capacity decisions see the truth."""
+        if not self._pipeline:
+            return
+        rec = self._pipeline.popleft()
+        t0 = time.monotonic()
+        self.stats["host_overlap_s"] += t0 - rec.dispatch_t
+        toks, pos, done, remaining = self._materialize(
+            rec.toks, rec.pos, rec.done, rec.remaining)
+        self.stats["landings"] += 1
+        # exact emission replay off the rolling landed pre-state
+        cur_done = self._exact_dones.copy()
+        cur_rem = self._exact_rem.copy()
+        emitted_block = 0
+        for s in range(rec.n):
+            for i, slot in enumerate(rec.slots):
+                if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
+                    continue
+                t = int(toks[s, i])
+                slot.toks.append(t)
+                if self.on_token is not None:
+                    self.on_token(slot.req.rid, t)
+                cur_rem[i] -= 1
+                if cur_rem[i] == 0 or (rec.eos[i] >= 0 and t == rec.eos[i]):
+                    cur_done[i] = True
+                self.stats["emitted"] += 1
+                self.stats["active_slot_steps"] += 1
+                self._tps.append(1)
+                emitted_block += 1
+        # the landed arrays are the exact post-block frontier
+        self._exact_tok = toks[-1].copy()
+        self._exact_pos = np.array(pos)
+        self._exact_dones = np.array(done)
+        self._exact_rem = np.array(remaining)
+        # one-step rollback: prediction thought these slots were still
+        # decoding, but a landed token was EOS — adopt the frozen truth so
+        # retire/admission/capacity decisions stop overshooting
+        fix = self._exact_dones & ~self.dones
+        if fix.any():
+            self.stats["eos_rollbacks"] += int(fix.sum())
+            self.dones = self.dones | fix
+            self.remaining = np.where(fix, self._exact_rem,
+                                      self.remaining).astype(np.int32)
+            self.pos = np.where(fix, self._exact_pos,
+                                self.pos).astype(np.int32)
+        if not self._pipeline:
+            # fully landed: predicted == exact (incl. the token frontier)
+            self.tok = self._exact_tok.copy()
+            self.pos = self._exact_pos.copy()
+            self.dones = self._exact_dones.copy()
+            self.remaining = self._exact_rem.copy()
+        # ITL stamps at host-visibility (satellite: never at dispatch);
+        # disagg anchors the sample at its own dispatch so the sample stays
+        # the decode dispatch's duration (see DisaggScheduler docstring)
+        if rec.itl_anchor is not None:
+            self._last_step_t = rec.itl_anchor
+        self._admission_mark = rec.adm_mark
+        self._note_itl(rec.n, emissions=emitted_block)
+        # retire replays in LANDED-BLOCK order, mirroring the blocking
+        # loop's after-every-block retire scan: a request whose final block
+        # just landed retires here (its rows are inactive in every still-
+        # unlanded record when predictions were exact), so sync and overlap
+        # retire requests in the same order, not batched up at round tops
+        self._retire()
+
+    def _drain_pipeline(self) -> None:
+        """Land every unlanded block (host state becomes exact).  Called
+        before any host decision that must merge exact values into the
+        engine state: admission, mixed/chunk steps, spec drafting,
+        migrations, preemption."""
+        while self._pipeline:
+            self._land_next()
 
     def _apply_decode(self, toks, pos, done, remaining, n: int) -> None:
         """Host bookkeeping for ``n`` executed decode steps (toks (n, B)):
@@ -542,11 +747,15 @@ class ContinuousScheduler:
             return
         vtok = np.zeros((self.B, K + 1), np.int32)
         vtok[:, 0] = self.tok
-        for i in active:
-            vtok[i, 1:] = self.drafter.propose(self._slot_history(i))
+        histories = [self._slot_history(i) for i in active]
+        if hasattr(self.drafter, "propose_many"):
+            vtok[active, 1:] = self.drafter.propose_many(histories)
+        else:                     # per-slot drafters (the pre-batch API)
+            vtok[active, 1:] = np.stack(
+                [self.drafter.propose(h) for h in histories])
         targets, n_emit, nxt, self.caches, pos, done, remaining = \
             self._run_verify(vtok)
-        targets, n_emit = np.asarray(targets), np.asarray(n_emit)
+        targets, n_emit = self._materialize(targets, n_emit)
         counts = []
         for i in active:
             e = int(n_emit[i])
@@ -632,7 +841,8 @@ class ContinuousScheduler:
         ptok, toks, self.caches, pos, done, remaining = self._run_mixed(
             tokens, admit, first, clens, starts, totals)
         self._admission_mark = True        # this step carried prefill work
-        self._apply_decode(np.asarray(toks)[None], pos, done, remaining, 1)
+        self._apply_decode(self._materialize(toks)[None], pos, done,
+                           remaining, 1)
         for i in slots_p:
             s = self.slots[i]
             s.chunk_started = True
@@ -687,7 +897,25 @@ class ContinuousScheduler:
         overall and restricted to admission windows (steps whose interval
         absorbed prefill work).  Per-request numbers live in
         ``Request.stats``; under chunked admission ``ttft_s`` is stamped at
-        the chunk that completed the prompt (first *emitted* token)."""
+        the chunk that completed the prompt (first *emitted* token).
+
+        **``_last_step_t`` semantics.**  ITL samples are intervals between
+        successive ``_note_itl`` stamps, and a stamp is ALWAYS taken when
+        tokens become host-visible — after ``np.asarray`` returns, i.e. at
+        ``_apply_decode`` in the blocking loop and at ``_land_next`` in the
+        overlapped loop — never at dispatch, which under overlap would
+        report the near-zero time to *queue* a block rather than the time
+        its tokens took to exist.  ``DisaggScheduler`` additionally anchors
+        the interval's start at its own decode dispatch (``itl_anchor``)
+        so the sample stays the decode dispatch's duration, excluding
+        same-round prefill-pool host time (see its class docstring); the
+        end of the interval is still the landing.
+
+        The ``overlap`` section reports the host/device timing split for
+        either loop: ``host_blocked_s`` (total np.asarray wait),
+        ``host_overlap_s`` (host work done between a dispatch and its
+        landing), the derived overlap fraction and per-step blocked time,
+        dispatch-ahead depth, EOS rollbacks, and frontend shed count."""
         out: Dict = {"requests": len(self.done)}
         for key in ("ttft_s", "queue_s"):
             s = percentile_summary(r.stats[key] for r in self.done
@@ -701,6 +929,21 @@ class ContinuousScheduler:
                 out["decode_itl_admission_s"] = adm
         if self._tps:
             out["tokens_per_step"] = percentile_summary(self._tps)
+        hb = self.stats["host_blocked_s"]
+        ho = self.stats["host_overlap_s"]
+        out["overlap"] = {
+            "enabled": self.overlap,
+            "host_blocked_s": hb,
+            "host_overlap_s": ho,
+            "host_overlap_fraction": (ho / (ho + hb) if ho + hb > 0 else 0.0),
+            "host_blocked_per_step_s": (
+                hb / max(1, self.stats["decode_steps"])),
+            "landings": self.stats["landings"],
+            "dispatch_ahead_steps": self.stats["dispatch_ahead_steps"],
+            "max_dispatch_ahead": self.stats["max_dispatch_ahead"],
+            "eos_rollbacks": self.stats["eos_rollbacks"],
+            "shed_requests": self.stats["shed_requests"],
+        }
         if self.stats.get("spec_steps"):
             prop = self.stats["spec_proposed"]
             slot_steps = max(1, self.stats["spec_slot_steps"])
@@ -724,31 +967,74 @@ class ContinuousScheduler:
         self.caches = self.engine.init_slot_caches(self.B)
 
     # -- main loop --------------------------------------------------------
+    def _serve_round(self) -> bool:
+        """One scheduler round (retire → admit → step); returns False when
+        fully idle — no unlanded block, no busy slot, no queued request.
+
+        The overlapped loop's shape: drain the pipeline only when this
+        round must merge exact host values into the engine state (an
+        admission could fill a slot, a chunk/spec step reads the token
+        frontier); otherwise dispatch the next block on the previous
+        block's device futures, THEN land the older block — np.asarray
+        waits only for a block whose successor is already queued on the
+        device."""
+        if self._pipeline and any(r.arrival_step <= self.step_count
+                                  for r in self.queue):
+            # an arrival could admit once done slots retire: land first so
+            # admission sees the same frontier the blocking loop would
+            if any(s.req is None or (self.dones[i] and s.chunk_next is None)
+                   for i, s in enumerate(self.slots)):
+                self._drain_pipeline()
+        self._retire()
+        self._admit()
+        if self._prefilling():
+            # chunked admission in flight: fused mixed steps advance one
+            # chunk per slot AND one decode token per active slot (reads
+            # the host token frontier — exact state required)
+            self._drain_pipeline()
+            self._mixed_step()
+            return True
+        n = self._block_size()
+        if n == 0:
+            if self._pipeline:
+                self._land_next()     # tail blocks land before going idle
+                return True
+            pending = [r.arrival_step for r in self.queue]
+            if not pending:
+                return False
+            # idle: jump the virtual clock to the next arrival
+            self.step_count = max(self.step_count, min(pending))
+            return True
+        if self.spec_k:
+            # the drafter consumes the previous step's landed tokens, so
+            # spec verify steps cannot dispatch ahead — they run blocking
+            self._drain_pipeline()
+            self._spec_step()
+        elif self.overlap:
+            self._dispatch_block(n)
+            while len(self._pipeline) > 1:
+                self._land_next()
+        else:
+            self._decode_block(n)
+        return True
+
+    def serve_step(self) -> bool:
+        """One scheduler round for external drivers (the asyncio frontend):
+        admits anything queued, advances the engine one round, retires, and
+        returns False when there is nothing left to do.  Safe to call again
+        after new ``submit``s."""
+        if self.caches is None:
+            self._init_caches()
+        return self._serve_round()
+
     def run(self) -> List[Request]:
         """Serve until queue and slots drain; returns requests in completion
         order."""
         if self.caches is None:
             self._init_caches()
-        while True:
-            self._retire()
-            self._admit()
-            if self._prefilling():
-                # chunked admission in flight: fused mixed steps advance one
-                # chunk per slot AND one decode token per active slot
-                self._mixed_step()
-                continue
-            n = self._block_size()
-            if n == 0:
-                pending = [r.arrival_step for r in self.queue]
-                if not pending:
-                    break
-                # idle: jump the virtual clock to the next arrival
-                self.step_count = max(self.step_count, min(pending))
-                continue
-            if self.spec_k:
-                self._spec_step()
-            else:
-                self._decode_block(n)
+        while self._serve_round():
+            pass
+        self._drain_pipeline()
         self._retire()
         return self.done
 
@@ -791,13 +1077,14 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  prefill_chunk: Optional[int] = None,
                  spec_k: Optional[int] = None,
                  spec_ngram: Optional[int] = None,
+                 overlap: Optional[bool] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None):
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
-                         spec_k, spec_ngram)
+                         spec_k, spec_ngram, overlap)
         cfg = engine.cfg
         if cfg.window and "local_attn" in cfg.layer_pattern:
             raise ValueError(
@@ -865,8 +1152,10 @@ class PagedContinuousScheduler(ContinuousScheduler):
         self._note_usage()
 
     def _retire(self) -> None:
+        infl = self._inflight_mask()
         for i, s in enumerate(self.slots):
-            if s.req is not None and self.dones[i] and s.chunk_next is None:
+            if (s.req is not None and self.dones[i] and s.chunk_next is None
+                    and (infl is None or not infl[i])):
                 self._release_slot(i)
         super()._retire()
 
@@ -880,6 +1169,11 @@ class PagedContinuousScheduler(ContinuousScheduler):
         need not match the discarded one.  Mid-chunk-prefill slots are also
         candidates (they hold blocks but have emitted nothing); their chunk
         progress is simply dropped with the slot."""
+        if self._pipeline:
+            # never pick a victim under an unlanded block: its in-flight
+            # emissions would replay into a cleared slot, and the evicted
+            # state must merge exactly into the engine inputs
+            self._drain_pipeline()
         cand = [i for i, s in enumerate(self.slots)
                 if s.req is not None and self._shard_of(i) == shard
                 and ((not self.dones[i] and self.remaining[i] > 0)
@@ -936,13 +1230,22 @@ class PagedContinuousScheduler(ContinuousScheduler):
             if self._grow_slot(i, need):
                 i += 1
                 continue
+            if self._pipeline:
+                # starved while blocks are tied up in unlanded requests:
+                # land first (an EOS surprise may free them via retire)
+                # before resorting to preemption — and never preempt a slot
+                # whose emissions are still in flight
+                self._drain_pipeline()
+                self._retire()
+                continue                   # re-check slot i after landing
             if not self._preempt_youngest(self._shard_of(i)):
                 raise RuntimeError("paged pool exhausted with nothing to preempt")
             # re-check slot i (it may itself have been the one evicted)
 
     def _run_decode(self, n: int):
+        tok, pos, dones, remaining = self._decode_inputs()
         return self.engine.decode_slots_paged(
-            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.caches, tok, pos, dones, remaining,
             self.eos, self.bt, self._next_rng(), n=n)
 
     # -- admission --------------------------------------------------------
@@ -1172,6 +1475,7 @@ class DisaggScheduler(PagedContinuousScheduler):
                  prefill_chunk: Optional[int] = None,
                  spec_k: Optional[int] = None,
                  spec_ngram: Optional[int] = None,
+                 overlap: Optional[bool] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
@@ -1190,9 +1494,15 @@ class DisaggScheduler(PagedContinuousScheduler):
                 f"{engine.cfg.name!r} on the unified paged engine instead")
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
-                         spec_k, spec_ngram, block_size=block_size,
+                         spec_k, spec_ngram, overlap, block_size=block_size,
                          n_blocks=n_blocks, prefix_cache=prefix_cache,
                          on_preempt=on_preempt)
+        # ITL samples anchor at the decode DISPATCH (class docstring); the
+        # overlapped landing restores this anchor per record (itl_anchor)
+        self._stamp_itl_at_dispatch = True
+        # livelock-breaker state (was loop-local before _serve_round)
+        self._stall = 0
+        self._stall_sig = None
         if not self.chunk:
             raise ValueError("disaggregated serving needs prefill_chunk > 0")
         from repro.launch.mesh import split_data_shards
@@ -1318,7 +1628,7 @@ class DisaggScheduler(PagedContinuousScheduler):
         self.stats["prefill_slot_busy"] += len(slots_p)
         self.stats["prefill_slot_total"] += len(self._pf_slots)
         self._post_chunks(slots_p)
-        ptok = np.asarray(ptok)
+        ptok = self._materialize(ptok)
         for i in emits:
             self._complete_prefill(i, int(ptok[i]))
         return True
@@ -1431,6 +1741,10 @@ class DisaggScheduler(PagedContinuousScheduler):
         """Land waiting requests into free decode slots and execute every
         queued copy in ONE batched jitted step (global block ids; cross-
         shard pairs lower to the actual device-to-device transfer)."""
+        if self._pipeline and (self._landing or self._mig_queue):
+            # landing a request rewrites its decode slot's host state row —
+            # exact values must merge before the next overlapped dispatch
+            self._drain_pipeline()
         land = np.zeros((self.B,), bool)
         totals = np.zeros((self.B,), np.int32)
         landed = []
@@ -1488,13 +1802,18 @@ class DisaggScheduler(PagedContinuousScheduler):
         # their frozen row-local rewrite must sink into the null block (the
         # _run_verify idiom) or it would clobber a freshly-written chunk.
         # _last_step_t stamps HERE so the ITL sample is the decode
-        # dispatch's own duration (see class docstring).
+        # dispatch's own duration (see class docstring).  Under overlap the
+        # predicted-active mask is a SUPERSET of the device's true active
+        # set (EOS surprises freeze rows early) — keeping a frozen row's
+        # real table is safe: its row-local rewrite lands at its own valid
+        # next position, which nothing reads.
         self._last_step_t = time.monotonic()
         active = (~self.dones) & (self.remaining > 0)
         bt = np.where(active[:, None], self.bt,
                       kvcache.NULL_BLOCK).astype(np.int32)
+        tok, pos, dones, remaining = self._decode_inputs()
         return self.engine.decode_slots_paged(
-            self.caches, self.tok, self.pos, self.dones, self.remaining,
+            self.caches, tok, pos, dones, remaining,
             self.eos, bt, self._next_rng(), n=n)
 
     def _run_verify(self, vtok):
@@ -1528,55 +1847,79 @@ class DisaggScheduler(PagedContinuousScheduler):
         return out
 
     # -- main loop ---------------------------------------------------------
-    def run(self) -> List[Request]:
-        """Serve until queue, slots, and migration pipeline drain."""
-        if self.caches is None:
-            self._init_caches()
+    def _serve_round(self) -> bool:
+        """One disagg round.  Under overlap, only decode-pool blocks
+        pipeline; any round that must land a migrated request or hand off
+        blocks (host-exact slot arming) drains first.  Chunk-prefill steps
+        do NOT force a drain — the chunk program reads only the (chained)
+        cache future, and its own ``ptok`` materialization serializes after
+        the in-flight decode blocks device-side anyway."""
         if self._block_bytes is None:
             from repro.models import transformer as tfm
             self._block_bytes = kvcache.pool_block_bytes(
                 self.caches, tfm.build_groups(self.engine.cfg))
-        stall, last_sig = 0, None
-        while True:
-            self._retire()
-            self._admit()
-            did_prefill = self._chunk_step()
-            self._advance_handoffs()
-            self._run_migrations()
-            n = self._block_size()
-            if n:
-                if self.spec_k:
-                    self._spec_step()
-                else:
-                    self._decode_block(n)
-            elif did_prefill:
-                # prefill-only round: the virtual arrival clock advances so
-                # arrivals keyed to decode steps stay admissible
-                self.step_count += 1
-            busy = any(s.req is not None for s in self.slots)
-            if not busy and not self._landing and not self._mig_queue:
-                pending = [r.arrival_step for r in self.queue]
-                if not pending:
-                    break
-                self.step_count = max(self.step_count, min(pending))
-                continue
-            # livelock breaker: a full round with zero observable progress
-            # (deferred migrations against a wedged decode pool) preempts
-            # its way out rather than spinning forever
-            sig = (len(self.done), self.stats["emitted"],
-                   self.stats["migrated_blocks"], self.stats["handoffs"],
-                   self.stats["prefill_chunks"], self.stats["decode_steps"],
-                   len(self.queue), len(self._landing))
-            if sig == last_sig:
-                stall += 1
-                if stall > 4 * self.B + 16:
-                    if not any(self._preempt_youngest(sh) for sh in
-                               (*self._dec_shards, *self._pf_shards)):
-                        raise RuntimeError(
-                            "disagg scheduler stalled: no progress and "
-                            "nothing to preempt")
-                    stall = 0
+        if self._pipeline and (self._handoff_ready or self._landing
+                               or self._mig_queue):
+            # a migration landing rewrites a decode slot's position row on
+            # the host — exact state must merge before the next dispatch
+            self._drain_pipeline()
+        self._retire()
+        self._admit()
+        did_prefill = self._chunk_step()
+        self._advance_handoffs()
+        self._run_migrations()
+        n = self._block_size()
+        if n:
+            if self.spec_k:
+                self._drain_pipeline()
+                self._spec_step()
+            elif self.overlap:
+                self._dispatch_block(n)
+                while len(self._pipeline) > 1:
+                    self._land_next()
             else:
-                stall, last_sig = 0, sig
+                self._decode_block(n)
+        elif did_prefill:
+            # prefill-only round: the virtual arrival clock advances so
+            # arrivals keyed to decode steps stay admissible
+            self.step_count += 1
+        elif self._pipeline:
+            self._land_next()
+        busy = any(s.req is not None for s in self.slots)
+        if (not busy and not self._landing and not self._mig_queue
+                and not self._pipeline):
+            pending = [r.arrival_step for r in self.queue]
+            if not pending:
+                return False
+            self.step_count = max(self.step_count, min(pending))
+            return True
+        # livelock breaker: a full round with zero observable progress
+        # (deferred migrations against a wedged decode pool) preempts
+        # its way out rather than spinning forever
+        sig = (len(self.done), self.stats["emitted"],
+               self.stats["migrated_blocks"], self.stats["handoffs"],
+               self.stats["prefill_chunks"], self.stats["decode_steps"],
+               len(self.queue), len(self._landing))
+        if sig == self._stall_sig:
+            self._stall += 1
+            if self._stall > 4 * self.B + 16:
+                self._drain_pipeline()
+                if not any(self._preempt_youngest(sh) for sh in
+                           (*self._dec_shards, *self._pf_shards)):
+                    raise RuntimeError(
+                        "disagg scheduler stalled: no progress and "
+                        "nothing to preempt")
+                self._stall = 0
+        else:
+            self._stall, self._stall_sig = 0, sig
+        return True
+
+    def run(self) -> List[Request]:
+        """Serve until queue, slots, and migration pipeline drain."""
+        if self.caches is None:
+            self._init_caches()
+        while self._serve_round():
+            pass
+        self._drain_pipeline()
         self._retire()
         return self.done
