@@ -1,0 +1,198 @@
+"""Chaos serving: fault-injected runs vs clean runs across all three
+schedulers (dense continuous, paged, disagg prefill/decode).
+
+Each backend serves the same greedy workload twice — once clean, once under
+a fault plan combining a poisoned slot (non-finite-logit stand-in), a burst
+of transient step failures (absorbed by bounded pre-dispatch retry), an
+expired deadline, and (disagg) a migration failure mid-handoff.  The
+headline number is **survivor token identity**: every request the faults
+did NOT touch must stream exactly the tokens of the clean run — 100.0 or
+the bench fails loudly.  Also recorded: survival rate, the finish_reason
+histogram (error/timeout casualties vs stop/length survivors), fault
+counters, allocator audit status, and decode-ITL degradation under chaos
+(retry drains + quarantine bookkeeping are host work; device math is never
+touched).
+
+Runs in a subprocess with 2 virtual CPU devices (bench_disagg idiom) so the
+disagg pool split is real.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_chaos.py
+(--no-json to skip writing BENCH_chaos.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+BENCH_JSON = os.path.join(HERE, "..", "BENCH_chaos.json")
+
+ARCH = "yi-9b"
+N_REQUESTS = 8
+N_SLOTS = 4
+MAX_NEW = 8
+MAX_LEN = 64
+BLOCK_SIZE = 8
+CHUNK = 8
+
+# poison hits an early-occupied slot; the step burst is retried; the
+# deadline victim is request N_REQUESTS (submitted with deadline_s=0)
+PLAN = "poison:slot=1,at=2;step:at=4,times=2"
+PLAN_DISAGG = "poison:slot=2,at=3;step:at=4,times=2;migrate:handoff=0"
+
+
+def _requests(cfg, lo=6, hi=16, seed=4):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(lo, hi))).astype(np.int32),
+             MAX_NEW, 2 * (i // 3)) for i in range(N_REQUESTS)]
+
+
+def _serve(sched, reqs, deadline_victim):
+    import time
+
+    for p, mn, arr in reqs:
+        sched.submit(p, mn, arrival_step=arr)
+    if deadline_victim:
+        sched.submit(np.arange(2, 10, dtype=np.int32), MAX_NEW,
+                     deadline_s=0.0)
+    t0 = time.perf_counter()
+    done = {r.rid: r for r in sched.run()}
+    dt = time.perf_counter() - t0
+    return done, dt, sched
+
+
+def _chaos_pair(make_sched, reqs, plan):
+    """Serve clean then injected; return the comparison record."""
+    clean, _, csched = _serve(make_sched(""), reqs, deadline_victim=False)
+    done, dt, sched = _serve(make_sched(plan), reqs, deadline_victim=True)
+    reasons = {}
+    for r in done.values():
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    survivors = [rid for rid, r in done.items()
+                 if r.finish_reason in ("stop", "length")]
+    identical = sum(
+        1 for rid in survivors
+        if np.array_equal(done[rid].output, clean[rid].output))
+    if hasattr(sched, "alloc"):
+        sched.alloc.audit(expect_no_migration=True)
+    st = sched.stats
+    itl = sched.request_summary().get("decode_itl_s", {})
+    c_itl = csched.request_summary().get("decode_itl_s", {})
+    return {
+        "requests": len(done),
+        "survivors": len(survivors),
+        "survivor_token_identity_pct": 100.0 * identical / max(1, len(survivors)),
+        "finish_reasons": reasons,
+        "faults": {k: st[k] for k in
+                   ("step_faults", "step_retries", "quarantined", "timeouts",
+                    "migration_faults", "aborts_exhaustion",
+                    "livelock_aborts")},
+        "allocator_audit": "ok" if hasattr(sched, "alloc") else "n/a",
+        "wall_s": dt,
+        "itl_p50_clean_s": c_itl.get("p50"),
+        "itl_p50_chaos_s": itl.get("p50"),
+    }
+
+
+def inner() -> dict:
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+    from repro.runtime.scheduler import (ContinuousScheduler, DisaggScheduler,
+                                         PagedContinuousScheduler)
+
+    cfg = get_config(ARCH).reduced()
+    eng1 = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=MAX_LEN)
+    eng2 = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=2, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(2, 1), max_len=MAX_LEN)
+    reqs = _requests(cfg)
+    long_reqs = _requests(cfg, lo=10, hi=22, seed=5)
+
+    out = {}
+    out["dense"] = _chaos_pair(
+        lambda plan: ContinuousScheduler(
+            eng1, n_slots=N_SLOTS, block_steps=2, fault_plan=plan,
+            retry_backoff_s=0.0),
+        reqs, PLAN)
+    eng1.dispatch_hook = None
+    out["paged"] = _chaos_pair(
+        lambda plan: PagedContinuousScheduler(
+            eng1, n_slots=N_SLOTS, block_steps=2, block_size=BLOCK_SIZE,
+            prefix_cache=False, fault_plan=plan, retry_backoff_s=0.0),
+        reqs, PLAN)
+    eng1.dispatch_hook = None
+    out["disagg"] = _chaos_pair(
+        lambda plan: DisaggScheduler(
+            eng2, n_slots=N_SLOTS, block_steps=2, block_size=BLOCK_SIZE,
+            prefill_chunk=CHUNK, prefill_shards=1, prefix_cache=False,
+            fault_plan=plan, retry_backoff_s=0.0),
+        long_reqs, PLAN_DISAGG)
+
+    for name, rec in out.items():
+        assert rec["survivor_token_identity_pct"] == 100.0, \
+            f"{name}: survivors diverged from the clean run"
+        assert rec["faults"]["step_faults"] >= 2, name
+        assert rec["faults"]["quarantined"] >= 1, name
+        assert rec["faults"]["timeouts"] == 1, name
+    assert out["disagg"]["faults"]["migration_faults"] == 1
+    return out
+
+
+def run_inner_subprocess() -> dict:
+    env = dict(os.environ)
+    env["JAX_NUM_CPU_DEVICES"] = "2"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, os.path.abspath(__file__), "--inner"],
+                       capture_output=True, text=True, timeout=3000, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main(emit=None, json_path=BENCH_JSON):
+    emit = emit or (lambda n, u, d="": print(f"{n},{u:.3f},{d}"))
+    chaos = run_inner_subprocess()
+    for name, rec in chaos.items():
+        f = rec["faults"]
+        line = (f"{rec['survivors']}/{rec['requests']} survived "
+                f"({rec['survivor_token_identity_pct']:.0f}% token-identical"
+                f" to clean); reasons {rec['finish_reasons']}; "
+                f"{f['step_faults']} step faults ({f['step_retries']} "
+                f"retried), {f['quarantined']} quarantined, "
+                f"{f['timeouts']} timeouts, {f['migration_faults']} "
+                f"migration faults; audit {rec['allocator_audit']}")
+        print(f"{name:7s} {line}", flush=True)
+        c, x = rec["itl_p50_clean_s"], rec["itl_p50_chaos_s"]
+        deg = (x / c) if (c and x) else 1.0
+        emit(f"chaos/{name}_itl_p50", 1e6 * (x or 0.0),
+             f"{deg:.2f}x clean p50; {line}")
+    if json_path:
+        payload = {"meta": {"bench": "chaos_serving", "arch": ARCH,
+                            "fault_plan": PLAN,
+                            "fault_plan_disagg": PLAN_DISAGG,
+                            "n_requests": N_REQUESTS + 1,
+                            "max_new": MAX_NEW, "n_slots": N_SLOTS},
+                   "chaos": chaos}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return chaos
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    if "--inner" in sys.argv:
+        print(json.dumps(inner()))
+    else:
+        main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

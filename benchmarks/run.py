@@ -16,6 +16,9 @@
   async               — overlapped host/device engine loop vs blocking:
                         host-blocked time per decode step + goodput under a
                         per-token SLO at Poisson arrivals
+  chaos               — fault-injected serving vs clean across all three
+                        schedulers: survivor token identity (must be 100%),
+                        survival rate, finish_reason mix, ITL degradation
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV; every bench also writes its own
@@ -41,11 +44,12 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_async, bench_continuous_batching,
-                            bench_disagg, bench_one_shot, bench_paged_kv,
-                            bench_prefill, bench_specdecode,
-                            bench_sync_minimization, bench_token_latency,
-                            bench_wquant, bench_zero_copy)
+    from benchmarks import (bench_async, bench_chaos,
+                            bench_continuous_batching, bench_disagg,
+                            bench_one_shot, bench_paged_kv, bench_prefill,
+                            bench_specdecode, bench_sync_minimization,
+                            bench_token_latency, bench_wquant,
+                            bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
@@ -59,6 +63,7 @@ def main() -> None:
         ("wquant", bench_wquant.main),
         ("disagg", bench_disagg.main),
         ("async", bench_async.main),
+        ("chaos", bench_chaos.main),
     ]
     failures = []
     for name, fn in benches:

@@ -345,6 +345,20 @@ class ParallelConfig:
     # EOS.  Greedy token streams are bit-identical to the blocking loop —
     # overlap reorders host observation, not device math.
     overlap_decode: bool = False
+    # fault tolerance (continuous-batching schedulers).  fault_plan is a
+    # compact spec string (see runtime/faults.py for the grammar) injecting
+    # deterministic failures — step exceptions, poisoned slot tokens,
+    # allocator exhaustion, migration faults, delayed steps — at chosen
+    # step indices; "" disables injection.  Kept as a str so this config
+    # stays frozen/hashable.  A transient step failure is retried up to
+    # max_step_retries times with exponential backoff starting at
+    # retry_backoff_s (the pipeline drains to the exact pre-step state
+    # before each retry); when retries exhaust, a failure attributed to one
+    # slot quarantines that request (finish_reason "error") and everything
+    # else keeps serving.
+    fault_plan: str = ""
+    max_step_retries: int = 3
+    retry_backoff_s: float = 0.05
 
 
 @dataclass(frozen=True)

@@ -77,10 +77,16 @@ class EngineService:
     """Owns the scheduler worker thread and the client-facing submit path."""
 
     def __init__(self, scheduler, max_pending: int = 64,
-                 idle_wait_s: float = 0.02):
+                 idle_wait_s: float = 0.02, watchdog_s: float = 0.0):
         self.sched = scheduler
         self.max_pending = max_pending
         self.idle_wait_s = idle_wait_s
+        # scheduler watchdog: with live work in the engine and no host-
+        # visible output for > watchdog_s, the node reports itself wedged —
+        # /health flips to 503 and new submissions are rejected, so a load
+        # balancer ejects the node instead of hanging connections on it.
+        # 0 disables.
+        self.watchdog_s = watchdog_s
         self._lock = threading.Lock()
         self._inbox: List = []
         self._streams = {}
@@ -115,16 +121,30 @@ class EngineService:
         with self._lock:
             return self._live + len(self._inbox)
 
+    def wedged(self) -> bool:
+        """Watchdog verdict: live work in the engine, but no host-visible
+        engine output for longer than ``watchdog_s`` (idle engines never
+        trip — the liveness clock only matters while work is in flight)."""
+        if not self.watchdog_s:
+            return False
+        with self._lock:
+            live = self._live
+        return live > 0 and self.sched.liveness_age() > self.watchdog_s
+
     def try_submit(self, prompt, max_new: int, eos_id: Optional[int],
-                   stream: TokenStream) -> str:
-        """Returns "ok", "shed" (bounded-queue overload), or "draining"."""
+                   stream: TokenStream,
+                   deadline_s: Optional[float] = None) -> str:
+        """Returns "ok", "shed" (bounded-queue overload), "draining", or
+        "wedged" (watchdog tripped — the engine stopped making progress)."""
+        if self.wedged():
+            return "wedged"
         with self._lock:
             if self._draining:
                 return "draining"
             if self._live >= self.max_pending:
                 self.sched.stats["shed_requests"] += 1
                 return "shed"
-            self._inbox.append((prompt, max_new, eos_id, stream))
+            self._inbox.append((prompt, max_new, eos_id, deadline_s, stream))
             self._live += 1
         self._wake.set()
         return "ok"
@@ -134,13 +154,14 @@ class EngineService:
         while True:
             with self._lock:
                 batch, self._inbox = self._inbox, []
-            for prompt, max_new, eos_id, stream in batch:
+            for prompt, max_new, eos_id, deadline_s, stream in batch:
                 try:
                     # arrival_step = now on the virtual clock: immediately
                     # admissible, ordering decided by the scheduler
                     rid = self.sched.submit(
                         np.asarray(prompt, np.int32), max_new, eos_id=eos_id,
-                        arrival_step=self.sched.step_count)
+                        arrival_step=self.sched.step_count,
+                        deadline_s=deadline_s)
                 except ValueError as e:
                     with self._lock:
                         self._live -= 1
@@ -251,10 +272,29 @@ class HttpFrontend:
                     asyncio.LimitOverrunError):
                 return
             if method == "GET" and path in ("/health", "/v1/health"):
-                self._respond(writer, "200 OK", {
-                    "status": "ok", "pending": self.service.pending(),
-                    "shed_requests":
-                        self.service.sched.stats["shed_requests"]})
+                # liveness-aware health: a load balancer ejects on 503.
+                # last_step_age_s is seconds since engine outputs last
+                # became host-visible — the scheduler watchdog signal
+                svc = self.service
+                wedged = svc.wedged()
+                with svc._lock:
+                    inbox_depth = len(svc._inbox)
+                    draining = svc._draining
+                payload = {
+                    "status": ("wedged" if wedged
+                               else "draining" if draining else "ok"),
+                    "pending": svc.pending(),
+                    "inbox_depth": inbox_depth,
+                    "draining": draining,
+                    "last_step_age_s": round(svc.sched.liveness_age(), 3),
+                    "watchdog_s": svc.watchdog_s,
+                    "shed_requests": svc.sched.stats["shed_requests"],
+                    "quarantined": svc.sched.stats.get("quarantined", 0),
+                    "timeouts": svc.sched.stats.get("timeouts", 0),
+                }
+                self._respond(writer,
+                              "503 Service Unavailable" if wedged
+                              else "200 OK", payload)
             elif method == "POST" and path == "/v1/completions":
                 await self._completions(writer, body)
             else:
@@ -280,6 +320,12 @@ class HttpFrontend:
                 raise ValueError("max_tokens must be >= 1")
             eos_id = req.get("stop_token_id")
             eos_id = None if eos_id is None else int(eos_id)
+            # per-request deadline: the scheduler retires the request with
+            # finish_reason "timeout" once max_time seconds elapse
+            max_time = req.get("max_time")
+            max_time = None if max_time is None else float(max_time)
+            if max_time is not None and max_time <= 0:
+                raise ValueError("max_time must be > 0 seconds")
             do_stream = bool(req.get("stream", False))
         except (KeyError, TypeError, ValueError) as e:
             self._respond(writer, "400 Bad Request",
@@ -287,7 +333,17 @@ class HttpFrontend:
                                      "type": "invalid_request_error"}})
             return
         stream = TokenStream(asyncio.get_running_loop())
-        verdict = self.service.try_submit(prompt, max_new, eos_id, stream)
+        verdict = self.service.try_submit(prompt, max_new, eos_id, stream,
+                                          deadline_s=max_time)
+        if verdict == "wedged":
+            # scheduler watchdog tripped: the engine stopped producing
+            # output with work in flight — fail fast so the load balancer
+            # routes around this node instead of hanging the connection
+            self._respond(writer, "503 Service Unavailable",
+                          {"error": {"message": "engine is not making "
+                                                "progress (watchdog)",
+                                     "type": "unavailable_error"}})
+            return
         if verdict == "shed":
             # bounded-queue overload shedding: reject BEFORE the scheduler
             # ever sees the request, with a client backoff hint
@@ -310,7 +366,14 @@ class HttpFrontend:
             await self._unary_response(writer, cid, eos_id, stream)
 
     @staticmethod
-    def _finish_reason(toks: List[int], eos_id: Optional[int]) -> str:
+    def _finish_reason(toks: List[int], eos_id: Optional[int],
+                       stream: Optional[TokenStream] = None) -> str:
+        # the retired Request's own verdict wins (it distinguishes "error"
+        # and "timeout" retirements from natural stop/length); the token
+        # heuristic is the fallback for failed submissions
+        if (stream is not None and stream.request is not None
+                and stream.request.finish_reason):
+            return stream.request.finish_reason
         return ("stop" if eos_id is not None and toks and toks[-1] == eos_id
                 else "length")
 
@@ -330,7 +393,8 @@ class HttpFrontend:
             "id": cid, "object": "text_completion", "model": "repro",
             "created": int(time.time()),
             "choices": [{"index": 0, "token_ids": toks, "text": "",
-                         "finish_reason": self._finish_reason(toks, eos_id)}],
+                         "finish_reason":
+                             self._finish_reason(toks, eos_id, stream)}],
             "usage": {"completion_tokens": len(toks)}})
 
     async def _stream_response(self, writer, cid, eos_id, stream) -> None:
@@ -356,7 +420,8 @@ class HttpFrontend:
             final = {"id": cid, "object": "text_completion.chunk",
                      "choices": [{"index": 0, "token_ids": [], "text": "",
                                   "finish_reason":
-                                      self._finish_reason(toks, eos_id)}]}
+                                      self._finish_reason(toks, eos_id,
+                                                          stream)}]}
             writer.write(f"data: {json.dumps(final)}\n\n".encode())
         writer.write(b"data: [DONE]\n\n")
 
@@ -376,13 +441,18 @@ def main(argv=None):
     ap.add_argument("--max-pending", type=int, default=64,
                     help="bounded request queue: submissions beyond this "
                          "many live requests are shed with HTTP 429")
+    ap.add_argument("--watchdog-s", type=float, default=30.0,
+                    help="scheduler watchdog: with live work and no engine "
+                         "output for this many seconds, /health turns 503 "
+                         "and new submissions are rejected (0 disables)")
     args = ap.parse_args(argv)
     if args.scheduler == "wave":
         ap.error("the frontend needs a continuous scheduler "
                  "(--scheduler continuous|paged|disagg)")
     eng = serve_mod.build_engine(args)
     sched = serve_mod.make_scheduler(eng, args)
-    service = EngineService(sched, max_pending=args.max_pending)
+    service = EngineService(sched, max_pending=args.max_pending,
+                            watchdog_s=args.watchdog_s)
     frontend = HttpFrontend(service, host=args.host, port=args.port)
 
     async def amain():

@@ -72,6 +72,9 @@ def build_engine(args):
                          weight_quant=args.weight_quant,
                          wq_group_size=args.wq_group_size,
                          overlap_decode=args.overlap,
+                         fault_plan=args.fault_plan,
+                         max_step_retries=args.max_step_retries,
+                         retry_backoff_s=args.retry_backoff_s,
                          disagg_prefill_shards=(args.prefill_shards
                                                 if args.scheduler == "disagg"
                                                 else 0))
@@ -208,6 +211,23 @@ def build_parser(ap=None):
                          "block N's device futures while N's tokens land on "
                          "the host (greedy streams stay bit-identical to "
                          "the blocking loop)")
+    ap.add_argument("--fault-plan", default="", metavar="SPEC",
+                    help="deterministic fault injection for chaos runs "
+                         "(continuous schedulers): ';'-separated clauses, "
+                         "e.g. 'step:at=12;poison:slot=1,at=20;"
+                         "migrate:handoff=0;alloc:at=8;delay:at=4,s=0.5' — "
+                         "see repro.runtime.faults for the grammar.  "
+                         "Injured requests are quarantined "
+                         "(finish_reason=error); survivors' greedy streams "
+                         "stay bit-identical to a clean run")
+    ap.add_argument("--max-step-retries", type=int, default=3,
+                    help="transient step failures are retried this many "
+                         "times (exponential backoff) from the exact "
+                         "pre-dispatch state before the blamed request is "
+                         "quarantined")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.05,
+                    help="base backoff before a step retry; doubles per "
+                         "consecutive failure")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump the scheduler's full request_summary() and "
                          "raw stats counters (incl. overlap metrics: "
@@ -261,9 +281,19 @@ def main(argv=None):
     sched = make_scheduler(eng, args)
     submit_workload(sched, cfg, args)
     t0 = time.monotonic()
-    done = sched.run()
-    dt = time.monotonic() - t0
-    total_tokens = sum(len(r.output) for r in done)
+    try:
+        sched.run()
+    finally:
+        # the report (and --stats-json) flushes even when the run raised or
+        # was interrupted: sched.done holds everything retired so far, so a
+        # crashed chaos run still leaves its counters on disk
+        _report(sched, cfg, args, time.monotonic() - t0)
+    return sched.done
+
+
+def _report(sched, cfg, args, dt):
+    done = sched.done
+    total_tokens = sum(len(r.output) for r in done if r.output is not None)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s -> {1000*dt/max(total_tokens,1):.1f} ms/token "
           f"({args.scheduler}; arch={cfg.name}, tp={args.tp})")
@@ -296,6 +326,16 @@ def main(argv=None):
             print(f"  decode inter-token p50/p95 {itl['p50']*1e3:.1f}/"
                   f"{itl['p95']*1e3:.1f} ms (admission windows "
                   f"{adm['p50']*1e3:.1f}/{adm['p95']*1e3:.1f} ms)")
+        if "faults" in lat:
+            fc = lat["faults"]
+            print(f"  faults: {fc['step_faults']} step faults "
+                  f"({fc['step_retries']} retried), "
+                  f"{fc['quarantined']} quarantined, "
+                  f"{fc['timeouts']} timeouts, "
+                  f"{fc['migration_faults']} migration faults, "
+                  f"{fc['aborts_exhaustion']} exhaustion aborts, "
+                  f"{fc['livelock_aborts']} livelock aborts; "
+                  f"finish_reasons {lat['finish_reasons']}")
         if lat.get("overlap", {}).get("enabled"):
             ov = lat["overlap"]
             print(f"  overlap: host-overlap {ov['host_overlap_fraction']:.0%} "
@@ -326,6 +366,8 @@ def main(argv=None):
             print(f"  migration wait p50/p95 {w['p50']*1e3:.1f}/"
                   f"{w['p95']*1e3:.1f} ms")
     for r in done[:4]:
+        if r.output is None:
+            continue
         out = r.output if r.output.ndim == 1 else r.output[..., 0]
         print(f"  req {r.rid}: {len(r.output)} tokens, first 8: {out[:8].tolist()}")
     if args.stats_json:
@@ -337,7 +379,6 @@ def main(argv=None):
                                    "scheduler": args.scheduler,
                                    "arch": cfg.name})
             print(f"  stats -> {args.stats_json}")
-    return done
 
 
 if __name__ == "__main__":

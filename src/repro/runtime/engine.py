@@ -476,6 +476,17 @@ class Engine:
                                      # load it if present (skipping bf16
                                      # materialization), else save after
                                      # quantize-at-load
+    # pre-dispatch hook, called with no arguments at the top of every
+    # retry-safe serving step (decode/mixed/chunk/verify) BEFORE the jitted
+    # program is queued.  This is the engine's fault boundary: an exception
+    # raised here leaves the donated cache chain untouched — the program
+    # never dispatched, so the exact pre-step state survives and the caller
+    # may re-dispatch (the schedulers' bounded-retry path).  Once a program
+    # holding donated buffers HAS dispatched, a host-side replay is
+    # impossible; that asymmetry is why fault injection and the watchdog
+    # delay both live at this hook.  Installed by schedulers running a
+    # FaultPlan (runtime/faults.py); None = zero overhead.
+    dispatch_hook: Optional[Any] = None
 
     def __post_init__(self):
         pod = "pod" if "pod" in self.mesh.axis_names else None
@@ -678,6 +689,12 @@ class Engine:
         out = [np.asarray(a) for a in arrays]
         return out[0] if len(out) == 1 else out
 
+    def _predispatch(self):
+        """Run the fault/watchdog hook before a retry-safe step dispatch
+        (see ``dispatch_hook``)."""
+        if self.dispatch_hook is not None:
+            self.dispatch_hook()
+
     def decode_slots(self, caches, tok, pos, done, remaining, eos, rng, *, n=1):
         """Run ``n`` fused masked decode steps over all slots.
 
@@ -685,6 +702,7 @@ class Engine:
         them into the next ``decode_slots`` call without materializing and
         ``Engine.land`` them one step late — see the overlapped scheduler
         loop.  Returns (toks (n, B[, ncb]), caches, pos, done, remaining)."""
+        self._predispatch()
         cb = self._cb()
         if n not in cb["decode"]:
             cb["decode"][n] = cb["build_decode"](n)
@@ -723,6 +741,7 @@ class Engine:
         prefill one chunk into the admitting slots AND run one masked decode
         step for the decode-active slots, in the same jitted program.
         Returns (ptok (B,), nxt (B,), caches, pos, done, remaining)."""
+        self._predispatch()
         return self._mixed(False)(
             self.params, jnp.asarray(ctokens), caches,
             jnp.asarray(admit, bool), jnp.asarray(first, bool),
@@ -737,6 +756,7 @@ class Engine:
                          rng):
         """Paged fused mixed step: ``bt_w`` routes the chunk scatter (null
         rows for every non-admitting slot), ``bt`` serves the decode half."""
+        self._predispatch()
         return self._mixed(True)(
             self.params, jnp.asarray(ctokens), caches,
             jnp.asarray(admit, bool), jnp.asarray(first, bool),
@@ -773,6 +793,7 @@ class Engine:
         """One chunk-prefill-only step over the paged pool (no decode half):
         ``bt_w`` routes the chunk scatter, with null rows for every
         non-admitting slot.  Returns (ptok (B,), caches)."""
+        self._predispatch()
         return self._chunk_only(True)(
             self.params, jnp.asarray(ctokens), caches,
             jnp.asarray(admit, bool), jnp.asarray(first, bool),
@@ -844,6 +865,7 @@ class Engine:
         draft prefix plus one bonus token, and rewind the cache past it.
         Returns (targets (B, spec_k+1), n_emit (B,), nxt (B,), caches,
         pos', done', remaining')."""
+        self._predispatch()
         vtokens = jnp.asarray(vtokens, jnp.int32)
         return self._verify(False, vtokens.shape[1])(
             self.params, vtokens, caches, jnp.asarray(pos, jnp.int32),
@@ -855,6 +877,7 @@ class Engine:
         """Paged verify step: the chunk scatter and the stripe gather both
         route through ``block_tables`` (rows for frozen slots nulled by the
         caller, confining their writes to the dead sink block)."""
+        self._predispatch()
         vtokens = jnp.asarray(vtokens, jnp.int32)
         return self._verify(True, vtokens.shape[1])(
             self.params, vtokens, caches, jnp.asarray(pos, jnp.int32),
@@ -939,6 +962,7 @@ class Engine:
     def decode_slots_paged(self, caches, tok, pos, done, remaining, eos,
                            block_tables, rng, *, n=1):
         """``n`` fused masked decode steps through the block tables."""
+        self._predispatch()
         cb = self._cb_paged()
         if n not in cb["decode"]:
             cb["decode"][n] = cb["build_decode"](n)

@@ -322,6 +322,53 @@ class BlockAllocator:
     def migrating_count(self) -> int:
         return self._migrating
 
+    def audit(self, expect_no_migration: bool = False) -> None:
+        """Invariant checker for the failure-isolation paths: raises
+        ``AssertionError`` naming the first violated invariant.  Called by
+        the chaos tests after every quarantine/preempt/rollback so a leaked
+        or double-freed block fails loudly at the fault site, not steps
+        later as silent K/V corruption.
+
+        Invariants, per shard namespace:
+        * conservation — free ∪ referenced is EXACTLY local ids 1..per-1
+          (every block is in precisely one place; the null block in neither)
+        * no double-free — the free list holds no duplicates
+        * no orphans — every referenced block has refcount >= 1, every
+          prefix-cache entry points at a live (referenced) block, and the
+          two prefix maps are mutually consistent
+        * migration pins — the in-flight counter never goes negative, and
+          (with ``expect_no_migration``) all pins have drained."""
+        per = self.blocks_per_shard
+        full = set(range(1, per))
+        for sh in range(self.n_shards):
+            free = list(self._free[sh])
+            fset = set(free)
+            assert len(free) == len(fset), \
+                f"shard {sh}: duplicate blocks on the free list"
+            refd = set(self._ref[sh])
+            assert not (fset & refd), \
+                f"shard {sh}: blocks both free and referenced: {fset & refd}"
+            assert 0 not in fset and 0 not in refd, \
+                f"shard {sh}: null block entered circulation"
+            assert fset | refd == full, \
+                (f"shard {sh}: conservation broken — "
+                 f"leaked {full - fset - refd}, foreign {fset | refd - full}")
+            for b, c in self._ref[sh].items():
+                assert c >= 1, f"shard {sh}: block {b} refcount {c} < 1"
+        for (sh, h), (b, _blk) in self._prefix.items():
+            assert self._prefix_of.get((sh, b)) == h, \
+                f"shard {sh}: prefix maps disagree for block {b}"
+            assert b in self._ref[sh], \
+                f"shard {sh}: prefix cache points at dead block {b}"
+        for (sh, b), h in self._prefix_of.items():
+            assert self._prefix.get((sh, h), (None,))[0] == b, \
+                f"shard {sh}: prefix_of entry for block {b} is orphaned"
+        assert self._migrating >= 0, \
+            f"migration pin counter underflow: {self._migrating}"
+        if expect_no_migration:
+            assert self._migrating == 0, \
+                f"{self._migrating} migration pins never drained"
+
     # -- cross-pool migration pins ---------------------------------------
     # Disaggregated serving copies blocks between shard namespaces with a
     # batched device step that executes AFTER the host has already queued

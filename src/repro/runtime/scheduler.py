@@ -45,6 +45,8 @@ import numpy as np
 from repro.models.common import pad_to
 from repro.runtime import kvcache
 from repro.runtime.engine import Engine
+from repro.runtime.faults import (FaultPlan, MigrationFault,
+                                  TransientStepError)
 
 
 def percentile_summary(vals) -> Optional[Dict[str, float]]:
@@ -74,6 +76,14 @@ class Request:
     submitted_at: float = field(default_factory=time.monotonic)
     output: Optional[np.ndarray] = None
     stats: Dict = field(default_factory=dict)
+    # why the request retired: "stop" (EOS) | "length" (budget) | "error"
+    # (quarantined: poisoned output, persistent step failure, failed
+    # handoff, pool exhaustion, livelock abort) | "timeout" (deadline)
+    finish_reason: Optional[str] = None
+    # wall-clock deadline in seconds from submission; the scheduler retires
+    # the request with finish_reason "timeout" (keeping tokens emitted so
+    # far) once it expires — queued, mid-prefill, or mid-decode alike
+    deadline_s: Optional[float] = None
 
 
 class WaveScheduler:
@@ -136,6 +146,10 @@ class WaveScheduler:
         emitted = sum(len(t) for t in cut)
         for r, toks in zip(wave, cut):
             r.output = toks
+            flat = toks if toks.ndim == 1 else toks[..., 0]
+            r.finish_reason = ("stop" if (r.eos_id is not None and len(flat)
+                                          and flat[-1] == r.eos_id)
+                               else "length")
             r.stats = {
                 "wave_batch": len(wave),
                 "queue_s": t0 - r.submitted_at,
@@ -167,6 +181,7 @@ class _Pending:
     done: object                  # device (B,) post-block done mask
     remaining: object             # device (B,) post-block budgets
     n: int                        # fused steps in this block
+    base_step: int                # engine step index of the block's first row
     slots: List                   # slot objects at dispatch (replay targets)
     eos: np.ndarray               # per-slot eos ids at dispatch
     active: np.ndarray            # predicted-active mask at dispatch
@@ -208,7 +223,10 @@ class ContinuousScheduler:
                  prefill_chunk: Optional[int] = None,
                  spec_k: Optional[int] = None,
                  spec_ngram: Optional[int] = None,
-                 overlap: Optional[bool] = None):
+                 overlap: Optional[bool] = None,
+                 fault_plan: Optional[str] = None,
+                 max_step_retries: Optional[int] = None,
+                 retry_backoff_s: Optional[float] = None):
         if engine.cfg.n_codebooks != 1:
             raise NotImplementedError(
                 "ContinuousScheduler serves single-codebook archs "
@@ -257,7 +275,35 @@ class ContinuousScheduler:
             "host_blocked_s": 0.0, "host_overlap_s": 0.0, "landings": 0,
             "eos_rollbacks": 0, "dispatch_ahead_steps": 0,
             "max_dispatch_ahead": 0, "shed_requests": 0,
+            # failure-isolation counters (all loud: request_summary surfaces
+            # them whenever any is nonzero)
+            "step_faults": 0, "step_retries": 0, "quarantined": 0,
+            "timeouts": 0, "aborts_exhaustion": 0, "livelock_aborts": 0,
+            "migration_faults": 0,
         }
+        # fault tolerance: the injection/watchdog plan (empty spec = every
+        # hook compiles to a no-op), bounded retry policy for transient
+        # step failures, and the liveness clock the frontend watchdog reads
+        par = engine.parallel
+        self.faults = FaultPlan.parse(
+            fault_plan if fault_plan is not None else par.fault_plan)
+        self.max_step_retries = int(
+            max_step_retries if max_step_retries is not None
+            else par.max_step_retries)
+        self.retry_backoff_s = float(
+            retry_backoff_s if retry_backoff_s is not None
+            else par.retry_backoff_s)
+        self._retry_streak = 0            # consecutive failures, same step
+        self.vocab = engine.cfg.vocab_size
+        self._progress_t = time.monotonic()
+        self._has_deadlines = False       # any live request carries one
+        # slots force-retired (quarantine/timeout) that the DEVICE still
+        # believes are active: landed device done-masks are OR-ed with this
+        # so in-flight blocks dispatched before the retirement cannot
+        # resurrect the slot; cleared when the slot is reassigned
+        self._forced_done = np.zeros((n_slots,), bool)
+        if self.faults:
+            engine.dispatch_hook = self._fault_dispatch
         # overlapped host/device loop: dispatch block N+1 on block N's
         # device-future outputs, land (np.asarray) one block late.  Host
         # decisions between dispatch and landing run on a PREDICTED state:
@@ -321,7 +367,8 @@ class ContinuousScheduler:
 
     # -- submission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
-               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
+               eos_id: Optional[int] = None, arrival_step: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         prompt = np.asarray(prompt)
         if len(prompt) + max_new > self.engine.max_len:
             raise ValueError(
@@ -336,7 +383,10 @@ class ContinuousScheduler:
             raise ValueError("prompts must have >= 2 tokens")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, prompt, max_new, eos_id, arrival_step))
+        self.queue.append(Request(rid, prompt, max_new, eos_id, arrival_step,
+                                  deadline_s=deadline_s))
+        if deadline_s is not None:
+            self._has_deadlines = True
         return rid
 
     # -- internals --------------------------------------------------------
@@ -367,6 +417,10 @@ class ContinuousScheduler:
                     and (infl is None or not infl[i])):
                 r = s.req
                 r.output = np.asarray(s.toks, dtype=np.int32)
+                if r.finish_reason is None:
+                    r.finish_reason = (
+                        "stop" if (r.eos_id is not None and s.toks
+                                   and s.toks[-1] == r.eos_id) else "length")
                 r.stats.update({
                     "emitted": len(s.toks),
                     "finished_at": now,
@@ -423,6 +477,7 @@ class ContinuousScheduler:
         short = []
         for slot, r in zip(free, chosen):
             self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
+            self._forced_done[slot] = False
             r.stats["queue_s"] = now - r.submitted_at
             r.stats["admitted_step"] = self.step_count
             if self.chunk:
@@ -473,6 +528,13 @@ class ContinuousScheduler:
         self.tok = np.where(admit, new_tok, self.tok)
         for slot, r in zip(free, chosen):
             t = int(new_tok[slot])
+            if not 0 <= t < self.vocab:
+                # poisoned prefill output (the int32 image of non-finite
+                # logits): quarantine before the garbage id reaches the
+                # stream — the first decode dispatch masks the slot out
+                self._quarantine_slot(
+                    slot, "error", f"poisoned prefill token {t}")
+                continue
             self.slots[slot].toks.append(t)
             if self.on_token is not None:
                 self.on_token(r.rid, t)
@@ -500,7 +562,11 @@ class ContinuousScheduler:
         blocked-time comparison is honest."""
         t0 = time.monotonic()
         out = [np.asarray(a) for a in arrs]
-        self.stats["host_blocked_s"] += time.monotonic() - t0
+        now = time.monotonic()
+        self.stats["host_blocked_s"] += now - t0
+        # liveness: engine outputs just became host-visible — the watchdog
+        # signal /health reports (a wedged device stops advancing this)
+        self._progress_t = now
         return out[0] if len(out) == 1 else out
 
     def _run_decode(self, n: int):
@@ -538,6 +604,7 @@ class ContinuousScheduler:
         toks, self.caches, pos, done, remaining = self._run_decode(n)
         self._pipeline.append(_Pending(
             toks=toks, pos=pos, done=done, remaining=remaining, n=n,
+            base_step=self.step_count,
             slots=list(self.slots), eos=self.eos.copy(), active=active,
             adm_mark=self._admission_mark,
             itl_anchor=(self._last_step_t if self._stamp_itl_at_dispatch
@@ -573,15 +640,28 @@ class ContinuousScheduler:
         toks, pos, done, remaining = self._materialize(
             rec.toks, rec.pos, rec.done, rec.remaining)
         self.stats["landings"] += 1
+        if self.faults:
+            toks = self.faults.corrupt_tokens(
+                toks, rec.base_step,
+                active=(np.array([s.req is not None for s in rec.slots])
+                        & ~self._exact_dones & (self._exact_rem > 0)))
         # exact emission replay off the rolling landed pre-state
         cur_done = self._exact_dones.copy()
         cur_rem = self._exact_rem.copy()
         emitted_block = 0
+        poisoned: Dict[int, int] = {}
         for s in range(rec.n):
             for i, slot in enumerate(rec.slots):
                 if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
                     continue
                 t = int(toks[s, i])
+                if not 0 <= t < self.vocab:
+                    # poisoned step output: freeze the slot NOW so no later
+                    # token from this block reaches its stream; quarantine
+                    # below, after the exact frontier is adopted
+                    poisoned[i] = t
+                    cur_done[i] = True
+                    continue
                 slot.toks.append(t)
                 if self.on_token is not None:
                     self.on_token(slot.req.rid, t)
@@ -592,11 +672,15 @@ class ContinuousScheduler:
                 self.stats["active_slot_steps"] += 1
                 self._tps.append(1)
                 emitted_block += 1
-        # the landed arrays are the exact post-block frontier
+        # the landed arrays are the exact post-block frontier.  The device
+        # never learns about host-forced retirements (quarantine/timeout),
+        # so its done-mask is OR-ed with the forced set — otherwise a block
+        # dispatched before the retirement would resurrect the dead slot.
         self._exact_tok = toks[-1].copy()
         self._exact_pos = np.array(pos)
-        self._exact_dones = np.array(done)
-        self._exact_rem = np.array(remaining)
+        self._exact_dones = np.array(done) | self._forced_done
+        self._exact_rem = np.where(self._forced_done, 0,
+                                   np.array(remaining)).astype(np.int32)
         # one-step rollback: prediction thought these slots were still
         # decoding, but a landed token was EOS — adopt the frozen truth so
         # retire/admission/capacity decisions stop overshooting
@@ -621,6 +705,9 @@ class ContinuousScheduler:
             self._last_step_t = rec.itl_anchor
         self._admission_mark = rec.adm_mark
         self._note_itl(rec.n, emissions=emitted_block)
+        for i, t in poisoned.items():
+            self._quarantine_slot(
+                i, "error", f"poisoned step output (token {t})")
         # retire replays in LANDED-BLOCK order, mirroring the blocking
         # loop's after-every-block retire scan: a request whose final block
         # just landed retires here (its rows are inactive in every still-
@@ -640,14 +727,24 @@ class ContinuousScheduler:
         """Host bookkeeping for ``n`` executed decode steps (toks (n, B)):
         replay the device's masking rule to tell real emissions from
         frozen-slot repeats; final state must agree with the device's."""
+        if self.faults:
+            toks = self.faults.corrupt_tokens(
+                toks, self.step_count,
+                active=(np.array([s.req is not None for s in self.slots])
+                        & ~self.dones & (self.remaining > 0)))
         cur_done = self.dones.copy()
         cur_rem = self.remaining.copy()
         emitted_block = 0
+        poisoned: Dict[int, int] = {}
         for s in range(n):
             for i, slot in enumerate(self.slots):
                 if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
                     continue
                 t = int(toks[s, i])
+                if not 0 <= t < self.vocab:
+                    poisoned[i] = t
+                    cur_done[i] = True
+                    continue
                 slot.toks.append(t)
                 if self.on_token is not None:
                     self.on_token(slot.req.rid, t)
@@ -666,6 +763,9 @@ class ContinuousScheduler:
         self.stats["decode_steps"] += n
         self.stats["slot_steps"] += n * self.B
         self._note_itl(n, emissions=emitted_block)
+        for i, t in poisoned.items():
+            self._quarantine_slot(
+                i, "error", f"poisoned step output (token {t})")
 
     def _note_itl(self, n: int, emissions: Optional[int] = None,
                   tokens_per_slot: Optional[List[int]] = None) -> None:
@@ -694,6 +794,129 @@ class ContinuousScheduler:
                         self._itl.extend([(dt / e, self._admission_mark)] * e)
         self._last_step_t = now
         self._admission_mark = False
+
+    # -- failure isolation (quarantine, bounded retry, deadlines) -----------
+    def liveness_age(self) -> float:
+        """Seconds since engine outputs last became host-visible — the
+        scheduler-watchdog signal the frontend's /health surfaces so a load
+        balancer can eject a wedged node."""
+        return time.monotonic() - self._progress_t
+
+    def _release_slot(self, i: int) -> None:
+        """Backend storage release for slot ``i`` (paged: blocks/refcounts;
+        disagg: queued copies unpinned, destination blocks returned).  The
+        dense engine owns nothing per slot."""
+
+    def _quarantine_slot(self, i: int, finish_reason: str = "error",
+                         error: Optional[str] = None) -> None:
+        """Retire slot ``i``'s request IMMEDIATELY with a failure
+        finish_reason, releasing everything it holds, without touching any
+        other slot's stream.  Safe while blocks are still in flight: the
+        forced-done mask keeps landed device state from resurrecting the
+        slot, and already-dispatched programs reading its freed blocks are
+        harmless — the device executes in dispatch order, so those reads
+        complete before any later program could overwrite them."""
+        s = self.slots[i]
+        if s.req is None:
+            return
+        r = s.req
+        self._release_slot(i)
+        r.output = np.asarray(s.toks, dtype=np.int32)
+        r.finish_reason = finish_reason
+        if error is not None:
+            r.stats["error"] = error
+        r.stats.update({
+            "emitted": len(s.toks),
+            "finished_at": time.monotonic(),
+            "decode_steps_held": self.step_count - s.admitted_step,
+        })
+        self.slots[i] = _Slot()
+        self.tok[i] = 0
+        self.dones[i] = True
+        self.remaining[i] = 0
+        self._forced_done[i] = True
+        if self._pipeline and self._exact_dones is not None:
+            self._exact_tok[i] = 0
+            self._exact_dones[i] = True
+            self._exact_rem[i] = 0
+        self.stats["timeouts" if finish_reason == "timeout"
+                   else "quarantined"] += 1
+        self.done.append(r)
+        if self.faults:
+            self.faults.on_quarantine(i)
+        if self.on_finish is not None:
+            self.on_finish(r)
+
+    def _fault_dispatch(self) -> None:
+        """Installed as ``Engine.dispatch_hook`` when a fault plan is
+        active: consulted immediately before every retry-safe step dispatch
+        (the only boundary where a raise leaves the donated cache chain
+        untouched — see ``runtime/faults.py``)."""
+        self.faults.on_dispatch(self.step_count)
+
+    def _try_step(self, fn):
+        """Run one engine-step thunk under the bounded-retry fault policy.
+
+        A :class:`TransientStepError` at the dispatch boundary consumed no
+        state: the step's rng draw is rolled back (``_next_rng`` evaluates
+        as a call argument, before the engine method's hook runs), the
+        pipeline is drained to the exact landed frontier, and the round
+        simply ends — the next round re-issues the identical work, so the
+        replay is bit-exact by construction.  When retries exhaust, a
+        slot-attributed failure quarantines that request; an unattributed
+        one propagates (honestly fatal)."""
+        calls0 = self._calls
+        try:
+            out = fn()
+        except TransientStepError as e:
+            self._calls = calls0
+            self._recover_step_fault(e)
+            return None
+        self._retry_streak = 0
+        return out
+
+    def _recover_step_fault(self, e: TransientStepError) -> None:
+        self._drain_pipeline()
+        self.stats["step_faults"] += 1
+        self._retry_streak += 1
+        if self._retry_streak <= self.max_step_retries:
+            self.stats["step_retries"] += 1
+            backoff = self.retry_backoff_s * (2 ** (self._retry_streak - 1))
+            if backoff > 0:
+                time.sleep(backoff)
+            return
+        self._retry_streak = 0
+        slot = e.slot
+        if slot is not None and self.slots[slot].req is not None:
+            self._quarantine_slot(slot, "error",
+                                  f"persistent step failure: {e}")
+            return
+        raise e
+
+    def _expire_deadlines(self) -> None:
+        """Retire every request whose wall-clock deadline passed —
+        queued (never admitted: empty output) or slot-resident (keeps the
+        tokens emitted so far) — with finish_reason "timeout".  No pipeline
+        drain needed: the forced-done mask drops the victim's unlanded
+        emissions at landing."""
+        now = time.monotonic()
+
+        def late(r: Request) -> bool:
+            return (r.deadline_s is not None
+                    and now - r.submitted_at >= r.deadline_s)
+
+        for r in [r for r in self.queue if late(r)]:
+            self.queue.remove(r)
+            r.output = np.zeros((0,), np.int32)
+            r.finish_reason = "timeout"
+            r.stats.update({"emitted": 0, "finished_at": now})
+            self.done.append(r)
+            self.stats["timeouts"] += 1
+            if self.on_finish is not None:
+                self.on_finish(r)
+        for i, s in enumerate(self.slots):
+            if s.req is not None and late(s.req):
+                self._quarantine_slot(i, "timeout")
 
     # -- speculative decoding (fused multi-token verify steps) -------------
     def _active_slots(self) -> List[int]:
@@ -961,6 +1184,15 @@ class ContinuousScheduler:
                 "mean_accepted_per_step": (self.stats["spec_accepted"]
                                            / slot_steps),
             }
+        fr: Dict[str, int] = {}
+        for r in self.done:
+            key = r.finish_reason or "length"
+            fr[key] = fr.get(key, 0) + 1
+        out["finish_reasons"] = fr
+        fkeys = ("step_faults", "step_retries", "quarantined", "timeouts",
+                 "aborts_exhaustion", "livelock_aborts", "migration_faults")
+        if any(self.stats.get(k) for k in fkeys):
+            out["faults"] = {k: self.stats.get(k, 0) for k in fkeys}
         return out
 
     def _init_caches(self) -> None:
@@ -978,6 +1210,8 @@ class ContinuousScheduler:
         block's device futures, THEN land the older block — np.asarray
         waits only for a block whose successor is already queued on the
         device."""
+        if self._has_deadlines:
+            self._expire_deadlines()
         if self._pipeline and any(r.arrival_step <= self.step_count
                                   for r in self.queue):
             # an arrival could admit once done slots retire: land first so
@@ -992,7 +1226,7 @@ class ContinuousScheduler:
             # chunk per slot AND one decode token per active slot (reads
             # the host token frontier — exact state required)
             self._drain_pipeline()
-            self._mixed_step()
+            self._try_step(self._mixed_step)
             return True
         n = self._block_size()
         if n == 0:
@@ -1009,14 +1243,17 @@ class ContinuousScheduler:
             # the drafter consumes the previous step's landed tokens, so
             # spec verify steps cannot dispatch ahead — they run blocking
             self._drain_pipeline()
-            self._spec_step()
+            self._try_step(self._spec_step)
         elif self.overlap:
-            self._dispatch_block(n)
-            while len(self._pipeline) > 1:
-                self._land_next()
+            self._try_step(lambda: self._overlap_turn(n))
         else:
-            self._decode_block(n)
+            self._try_step(lambda: self._decode_block(n))
         return True
+
+    def _overlap_turn(self, n: int) -> None:
+        self._dispatch_block(n)
+        while len(self._pipeline) > 1:
+            self._land_next()
 
     def serve_step(self) -> bool:
         """One scheduler round for external drivers (the asyncio frontend):
@@ -1078,13 +1315,17 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  spec_k: Optional[int] = None,
                  spec_ngram: Optional[int] = None,
                  overlap: Optional[bool] = None,
+                 fault_plan: Optional[str] = None,
+                 max_step_retries: Optional[int] = None,
+                 retry_backoff_s: Optional[float] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None):
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
-                         spec_k, spec_ngram, overlap)
+                         spec_k, spec_ngram, overlap, fault_plan,
+                         max_step_retries, retry_backoff_s)
         cfg = engine.cfg
         if cfg.window and "local_attn" in cfg.layer_pattern:
             raise ValueError(
@@ -1130,14 +1371,16 @@ class PagedContinuousScheduler(ContinuousScheduler):
         self.stats["blocks_hwm"] = max(self.stats["blocks_hwm"], used)
 
     def submit(self, prompt: np.ndarray, max_new: int,
-               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
+               eos_id: Optional[int] = None, arrival_step: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         prompt = np.asarray(prompt)
         need = -(-(len(prompt) + max_new) // self.bs)
         usable = self.alloc.blocks_per_shard - 1
         if self.has_attn and need > usable:
             raise ValueError(
                 f"request needs {need} blocks > per-shard pool {usable}")
-        return super().submit(prompt, max_new, eos_id, arrival_step)
+        return super().submit(prompt, max_new, eos_id, arrival_step,
+                              deadline_s)
 
     def _init_caches(self) -> None:
         self.caches = self.engine.init_paged_caches(
@@ -1201,6 +1444,8 @@ class PagedContinuousScheduler(ContinuousScheduler):
         have = len(self.slot_blocks[i])
         if n_needed <= have:
             return True
+        if self.faults and self.faults.deny_alloc(self.step_count):
+            return False                  # injected pool exhaustion
         fresh = self.alloc.alloc(self._shard_of(i), n_needed - have)
         if fresh is None:
             return False
@@ -1239,7 +1484,14 @@ class PagedContinuousScheduler(ContinuousScheduler):
                 self._retire()
                 continue                   # re-check slot i after landing
             if not self._preempt_youngest(self._shard_of(i)):
-                raise RuntimeError("paged pool exhausted with nothing to preempt")
+                # terminal starvation: no block, nothing evictable.  Abort
+                # THIS request (loud counter) instead of killing the serve
+                # loop — every other stream keeps decoding
+                self.stats["aborts_exhaustion"] += 1
+                self._quarantine_slot(
+                    i, "error", "paged pool exhausted with nothing to preempt")
+                i += 1
+                continue
             # re-check slot i (it may itself have been the one evicted)
 
     def _run_decode(self, n: int):
@@ -1296,6 +1548,7 @@ class PagedContinuousScheduler(ContinuousScheduler):
         short = []
         for slot, r in zip(free, chosen):
             self.slots[slot] = _Slot(req=r, admitted_step=self.step_count)
+            self._forced_done[slot] = False
             r.stats["queue_s"] = now - r.submitted_at
             r.stats["admitted_step"] = self.step_count
             r.stats["prefill_tokens_saved"] = starts_of[r.rid]
@@ -1476,6 +1729,9 @@ class DisaggScheduler(PagedContinuousScheduler):
                  spec_k: Optional[int] = None,
                  spec_ngram: Optional[int] = None,
                  overlap: Optional[bool] = None,
+                 fault_plan: Optional[str] = None,
+                 max_step_retries: Optional[int] = None,
+                 retry_backoff_s: Optional[float] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
@@ -1494,7 +1750,9 @@ class DisaggScheduler(PagedContinuousScheduler):
                 f"{engine.cfg.name!r} on the unified paged engine instead")
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
-                         spec_k, spec_ngram, overlap, block_size=block_size,
+                         spec_k, spec_ngram, overlap, fault_plan,
+                         max_step_retries, retry_backoff_s,
+                         block_size=block_size,
                          n_blocks=n_blocks, prefix_cache=prefix_cache,
                          on_preempt=on_preempt)
         # ITL samples anchor at the decode DISPATCH (class docstring); the
@@ -1646,6 +1904,10 @@ class DisaggScheduler(PagedContinuousScheduler):
     def _complete_prefill(self, i: int, tok: int) -> None:
         """The slot's chunk completed its prompt: record the first emitted
         token (sampled by the chunk program) and stage the handoff."""
+        if not 0 <= tok < self.vocab:
+            self._quarantine_slot(
+                i, "error", f"poisoned prefill token {tok}")
+            return
         s = self.slots[i]
         r = s.req
         s.toks.append(tok)
@@ -1721,7 +1983,17 @@ class DisaggScheduler(PagedContinuousScheduler):
         and move the request to the landing list."""
         for i in list(self._handoff_ready):
             s = self.slots[i]
-            self._enqueue_migration(i, final=True)
+            try:
+                if self.faults:
+                    self.faults.on_handoff()
+                self._enqueue_migration(i, final=True)
+            except MigrationFault as e:
+                # failed mid-handoff: roll the whole handoff back (queued
+                # copies unpinned, dst blocks freed — _release_slot) and
+                # quarantine the request; nothing reached the decode pool
+                self.stats["migration_faults"] += 1
+                self._quarantine_slot(i, "error", str(e))
+                continue
             m = self._mig[i]
             if m["sent"] < -(-len(s.req.prompt) // self.bs):
                 continue                   # starved for dst blocks; retry
@@ -1761,6 +2033,7 @@ class DisaggScheduler(PagedContinuousScheduler):
             s = _Slot(req=r, admitted_step=self.step_count)
             s.toks = list(rec["toks"])
             self.slots[slot] = s
+            self._forced_done[slot] = False
             self.slot_blocks[slot] = list(rec["blocks"])
             self.bt[slot, :] = kvcache.NULL_BLOCK
             self.bt[slot, :len(rec["blocks"])] = rec["blocks"]
@@ -1794,6 +2067,72 @@ class DisaggScheduler(PagedContinuousScheduler):
         self.stats["migration_bytes"] += n * (self._block_bytes or 0)
         self.stats["migration_steps"] += 1
         self._note_usage()
+
+    # -- failure isolation (migration-aware) --------------------------------
+    def _finish_landing_record(self, rec: Dict, finish_reason: str,
+                               error: Optional[str] = None) -> None:
+        """Abort a fully-migrated request still waiting for a decode slot:
+        free its destination blocks and retire it.  Callers must ensure the
+        copy queue is EMPTY first — a queued batched copy still targets
+        these blocks, and freeing them mid-queue would let the copy write
+        into storage another request may have claimed."""
+        assert not self._mig_queue, "landing abort with copies in flight"
+        self._landing.remove(rec)
+        self.alloc.free(rec["shard"], rec["blocks"])
+        r = rec["req"]
+        r.output = np.asarray(rec["toks"], np.int32)
+        r.finish_reason = finish_reason
+        if error is not None:
+            r.stats["error"] = error
+        r.stats.update({"emitted": len(rec["toks"]),
+                        "finished_at": time.monotonic()})
+        self.done.append(r)
+        self.stats["timeouts" if finish_reason == "timeout"
+                   else "quarantined"] += 1
+        self._note_usage()
+        if self.on_finish is not None:
+            self.on_finish(r)
+
+    def _abort_stuck_entity(self) -> bool:
+        """Last-resort livelock escape: abort ONE stuck request so every
+        other stream keeps its slot.  Deterministic priority: a slot wedged
+        mid-handoff, then a landed-but-unplaced request (only once the copy
+        queue is drained — see ``_finish_landing_record``), then a
+        mid-prefill slot."""
+        victim = False
+        if self._handoff_ready:
+            self._quarantine_slot(self._handoff_ready[0], "error",
+                                  "livelock: migration handoff stuck")
+            victim = True
+        elif self._landing and not self._mig_queue:
+            self._finish_landing_record(
+                self._landing[0], "error",
+                "livelock: no decode slot ever freed for landing")
+            victim = True
+        else:
+            for i, s in enumerate(self.slots):
+                if s.req is not None and s.chunk_next is not None:
+                    self._quarantine_slot(i, "error",
+                                          "livelock: prefill stuck")
+                    victim = True
+                    break
+        if victim:
+            self.stats["livelock_aborts"] += 1
+        return victim
+
+    def _expire_deadlines(self) -> None:
+        super()._expire_deadlines()
+        # landed-but-unplaced requests hold destination blocks while they
+        # wait for a decode slot — they time out too, but only once the
+        # copy queue is empty (it drains every round via _run_migrations)
+        if not self._landing or self._mig_queue:
+            return
+        now = time.monotonic()
+        for rec in [rec for rec in self._landing
+                    if rec["req"].deadline_s is not None
+                    and now - rec["req"].submitted_at
+                    >= rec["req"].deadline_s]:
+            self._finish_landing_record(rec, "timeout")
 
     # -- decode-pool stepping ----------------------------------------------
     def _run_decode(self, n: int):
@@ -1858,6 +2197,8 @@ class DisaggScheduler(PagedContinuousScheduler):
             from repro.models import transformer as tfm
             self._block_bytes = kvcache.pool_block_bytes(
                 self.caches, tfm.build_groups(self.engine.cfg))
+        if self._has_deadlines:
+            self._expire_deadlines()
         if self._pipeline and (self._handoff_ready or self._landing
                                or self._mig_queue):
             # a migration landing rewrites a decode slot's position row on
@@ -1865,20 +2206,18 @@ class DisaggScheduler(PagedContinuousScheduler):
             self._drain_pipeline()
         self._retire()
         self._admit()
-        did_prefill = self._chunk_step()
+        did_prefill = bool(self._try_step(self._chunk_step))
         self._advance_handoffs()
         self._run_migrations()
         n = self._block_size()
         if n:
             if self.spec_k:
                 self._drain_pipeline()
-                self._spec_step()
+                self._try_step(self._spec_step)
             elif self.overlap:
-                self._dispatch_block(n)
-                while len(self._pipeline) > 1:
-                    self._land_next()
+                self._try_step(lambda: self._overlap_turn(n))
             else:
-                self._decode_block(n)
+                self._try_step(lambda: self._decode_block(n))
         elif did_prefill:
             # prefill-only round: the virtual arrival clock advances so
             # arrivals keyed to decode steps stay admissible
@@ -1906,9 +2245,13 @@ class DisaggScheduler(PagedContinuousScheduler):
                 self._drain_pipeline()
                 if not any(self._preempt_youngest(sh) for sh in
                            (*self._dec_shards, *self._pf_shards)):
-                    raise RuntimeError(
-                        "disagg scheduler stalled: no progress and "
-                        "nothing to preempt")
+                    # nothing preemptible either: abort ONE stuck request
+                    # (loud counter) instead of killing the serve loop —
+                    # the remaining streams get another full stall window
+                    if not self._abort_stuck_entity():
+                        raise RuntimeError(
+                            "disagg scheduler stalled: no progress and "
+                            "nothing to preempt or abort")
                 self._stall = 0
         else:
             self._stall, self._stall_sig = 0, sig

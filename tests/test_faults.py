@@ -1,0 +1,442 @@
+"""Fault-injection harness and failure isolation: FaultPlan grammar/firing,
+poisoned-slot quarantine with survivor bit-identity (dense, paged, overlapped),
+bounded retry of transient step faults, per-request deadlines, allocator
+exhaustion aborts, disagg migration-fault rollback, and the livelock breaker.
+
+The load-bearing invariant everywhere: a fault on one request NEVER perturbs
+another request's greedy stream — survivors are compared token-for-token
+against an uninjected run of the same workload.  Allocator audits run after
+every quarantine/preempt path (satellite: refcount conservation)."""
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.engine import Engine
+from repro.runtime.faults import (POISON_TOKEN, FaultPlan, MigrationFault,
+                                  TransientStepError)
+from repro.runtime.scheduler import (ContinuousScheduler, DisaggScheduler,
+                                     PagedContinuousScheduler, Request)
+
+needs2 = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs 2 devices (JAX_NUM_CPU_DEVICES/XLA_FLAGS)")
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices (JAX_NUM_CPU_DEVICES/XLA_FLAGS)")
+
+
+def greedy_engine(arch: str, max_len: int = 64, parallel=None,
+                  mesh=None) -> Engine:
+    cfg = get_config(arch).reduced()
+    return Engine(cfg=cfg,
+                  parallel=parallel or ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=mesh or make_local_mesh(1, 1), max_len=max_len)
+
+
+@pytest.fixture(scope="module")
+def yi_engine():
+    return greedy_engine("yi-9b")
+
+
+@pytest.fixture(autouse=True)
+def _clear_hook(request):
+    """Fault-planned schedulers install Engine.dispatch_hook; drop it after
+    each test so the module-scoped engine stays clean."""
+    yield
+    if "yi_engine" in request.fixturenames:
+        request.getfixturevalue("yi_engine").dispatch_hook = None
+
+
+def fault_requests(cfg, n=5):
+    """EOS-free requests with max_new >= 8 so every admitted slot is still
+    emitting through the early engine steps fault clauses target."""
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(n):
+        p = rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(4, 12))).astype(np.int32)
+        reqs.append((p, 8 + i % 3, None, 2 * (i // 3)))
+    return reqs
+
+
+def run_sched(sched, reqs):
+    for p, mn, eos, arr in reqs:
+        sched.submit(p, mn, eos_id=eos, arrival_step=arr)
+    return {r.rid: r for r in sched.run()}
+
+
+def audited(sched):
+    """Satellite hook: run the allocator invariant checker after EVERY
+    quarantine and preemption the scheduler performs."""
+    orig_q = sched._quarantine_slot
+
+    def q(i, finish_reason="error", error=None):
+        orig_q(i, finish_reason, error)
+        sched.alloc.audit()
+
+    sched._quarantine_slot = q
+    sched.on_preempt = lambda rid: sched.alloc.audit()
+    return sched
+
+
+@pytest.fixture(scope="module")
+def clean_ref(yi_engine):
+    """Uninjected dense outputs for the shared workload (the bit-identity
+    reference: dense == paged == disagg is covered by the other suites)."""
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=4)
+    return run_sched(sched, fault_requests(yi_engine.cfg))
+
+
+def check_survivors(done, clean, n_bad=1, reason="error"):
+    bad = [r for r in done.values() if r.finish_reason == reason]
+    assert len(bad) == n_bad
+    for rid, r in done.items():
+        if r.finish_reason == reason:
+            continue
+        assert r.finish_reason in ("stop", "length")
+        np.testing.assert_array_equal(r.output, clean[rid].output)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: grammar and firing (no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_parse_grammar():
+    plan = FaultPlan.parse("step:at=12,times=2,slot=1; poison:slot=0,at=20;"
+                           "alloc:at=5;migrate:handoff=1;delay:at=3,s=0.5;"
+                           "seed:n=7")
+    assert bool(plan) and len(plan.clauses) == 5
+    st = plan.clauses[0]
+    assert (st.kind, st.at, st.times, st.slot) == ("step", 12, 2, 1)
+    assert plan.clauses[3].handoff == 1
+    assert plan.clauses[4].seconds == 0.5
+    assert not FaultPlan.parse("")
+    assert not FaultPlan.parse(None)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("fry:at=1")
+    with pytest.raises(ValueError, match="unknown fault key"):
+        FaultPlan.parse("step:when=1")
+    with pytest.raises(ValueError, match="needs slot"):
+        FaultPlan.parse("poison:at=4")
+
+
+def test_plan_step_firing_and_disarm():
+    plan = FaultPlan.parse("step:at=5,times=2,slot=1")
+    plan.on_dispatch(4)                     # below threshold: no fire
+    for _ in range(2):
+        with pytest.raises(TransientStepError) as ei:
+            plan.on_dispatch(7)
+        assert ei.value.slot == 1
+    plan.on_dispatch(7)                     # times exhausted: disarmed
+    plan2 = FaultPlan.parse("step:at=0,times=9,slot=2;poison:slot=2,at=50")
+    plan2.on_quarantine(2)                  # victim gone -> clauses disarm
+    plan2.on_dispatch(10)
+    assert all(c.times == 0 for c in plan2.clauses)
+
+
+def test_plan_corrupt_tokens_copy_on_write():
+    plan = FaultPlan.parse("poison:slot=1,at=6")
+    toks = np.arange(12, dtype=np.int32).reshape(4, 3)
+    toks.setflags(write=False)              # np.asarray(device_array) idiom
+    same = plan.corrupt_tokens(toks, base_step=0)
+    assert same is toks                     # block ends before target: no-op
+    idle = plan.corrupt_tokens(toks, base_step=4,
+                               active=np.array([True, False, True]))
+    assert idle is toks                     # target slot idle: DEFER
+    assert plan.clauses[0].times == 1       # ...without consuming the clause
+    out = plan.corrupt_tokens(toks, base_step=4)
+    assert out is not toks and out[2, 1] == POISON_TOKEN
+    mask = np.ones((4, 3), bool)
+    mask[2, 1] = False
+    np.testing.assert_array_equal(out[mask], toks[mask])
+    assert plan.corrupt_tokens(toks, base_step=4) is toks   # spent
+
+
+def test_plan_alloc_delay_handoff():
+    plan = FaultPlan.parse("alloc:at=3,times=2;delay:at=0,s=0.05;"
+                           "migrate:handoff=1")
+    t0 = time.monotonic()
+    plan.on_dispatch(0)                     # delay clause sleeps once
+    assert time.monotonic() - t0 >= 0.05
+    assert not plan.deny_alloc(2)
+    assert plan.deny_alloc(3) and plan.deny_alloc(9)
+    assert not plan.deny_alloc(9)           # times exhausted
+    plan.on_handoff()                       # handoff #0 < target: clean
+    with pytest.raises(MigrationFault):
+        plan.on_handoff()                   # handoff #1
+
+
+# ---------------------------------------------------------------------------
+# Poisoned slot: quarantine + survivor bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_poison_quarantine_dense(yi_engine, clean_ref):
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=4,
+                                fault_plan="poison:slot=1,at=2")
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    bad = check_survivors(done, clean_ref)
+    assert "poisoned" in bad[0].stats["error"]
+    assert bad[0].output is not None        # partial stream preserved
+    assert sched.stats["quarantined"] == 1
+    summ = sched.request_summary()
+    assert summ["faults"]["quarantined"] == 1
+    assert summ["finish_reasons"]["error"] == 1
+
+
+def test_poison_quarantine_overlap(yi_engine, clean_ref):
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=4,
+                                overlap=True, fault_plan="poison:slot=0,at=4")
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    check_survivors(done, clean_ref)
+    assert sched.stats["quarantined"] == 1
+
+
+def test_poison_quarantine_paged_audited(yi_engine, clean_ref):
+    sched = audited(PagedContinuousScheduler(
+        yi_engine, n_slots=3, block_steps=4, block_size=8,
+        prefix_cache=False, fault_plan="poison:slot=0,at=3"))
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    check_survivors(done, clean_ref)
+    assert sched.stats["quarantined"] == 1
+    sched.alloc.audit(expect_no_migration=True)
+    # every request retired -> the quarantined slot's blocks came back too
+    for shard in range(sched.alloc.n_shards):
+        assert sched.alloc.used_count(shard) == 0
+
+
+# ---------------------------------------------------------------------------
+# Transient step faults: bounded retry, then slot-blamed quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_transient_retry_bit_identical(yi_engine, clean_ref):
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=4,
+                                fault_plan="step:at=3,times=2",
+                                max_step_retries=3, retry_backoff_s=0.0)
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    check_survivors(done, clean_ref, n_bad=0)     # NOTHING failed
+    assert sched.stats["step_faults"] == 2
+    assert sched.stats["step_retries"] == 2
+    assert sched.stats["quarantined"] == 0
+
+
+def test_retry_exhaustion_quarantines_blamed_slot(yi_engine, clean_ref):
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=4,
+                                fault_plan="step:at=3,times=99,slot=0",
+                                max_step_retries=2, retry_backoff_s=0.0)
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    bad = check_survivors(done, clean_ref)
+    assert "persistent step failure" in bad[0].stats["error"]
+    assert sched.stats["step_faults"] == 3        # 2 retries + the last straw
+    assert sched.stats["step_retries"] == 2
+    assert sched.stats["quarantined"] == 1
+    # quarantine disarmed the clause blamed on the evicted slot
+    assert all(c.times == 0 for c in sched.faults.clauses)
+
+
+def test_retry_exhaustion_unattributed_is_fatal(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=4,
+                                fault_plan="step:at=0,times=99",
+                                max_step_retries=1, retry_backoff_s=0.0)
+    sched.submit(np.arange(2, 8, dtype=np.int32), 4)
+    with pytest.raises(TransientStepError):
+        sched.run()
+    assert sched.stats["step_faults"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: queued and slot-resident timeouts
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_queued_request(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=4)
+    ra = sched.submit(np.arange(2, 8, dtype=np.int32), 4)
+    rb = sched.submit(np.arange(3, 9, dtype=np.int32), 4, deadline_s=0.0)
+    done = {r.rid: r for r in sched.run()}
+    assert done[rb].finish_reason == "timeout"
+    assert done[rb].output.size == 0              # never admitted
+    assert done[ra].finish_reason in ("stop", "length")
+    assert len(done[ra].output) == 4
+    assert sched.stats["timeouts"] == 1
+    assert sched.request_summary()["finish_reasons"]["timeout"] == 1
+
+
+def test_deadline_expires_slot_resident_request(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    rid = sched.submit(np.arange(2, 8, dtype=np.int32), 24, deadline_s=60.0)
+    while not sched.done:
+        sched.serve_step()
+        slot = next((s for s in sched.slots if s.req is not None), None)
+        if slot is not None and len(slot.toks) >= 2:
+            slot.req.deadline_s = 0.0             # deadline passes mid-decode
+    done = {r.rid: r for r in sched.run()}
+    r = done[rid]
+    assert r.finish_reason == "timeout"
+    assert 2 <= len(r.output) < 24                # partial stream kept
+    assert sched.stats["timeouts"] == 1
+
+
+def test_liveness_age_and_watchdog(yi_engine):
+    from repro.launch.frontend import EngineService
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    sched._progress_t = time.monotonic() - 5.0
+    assert sched.liveness_age() >= 5.0
+    svc = EngineService(sched, watchdog_s=1.0)
+    assert not svc.wedged()                       # idle engines never wedge
+    svc._live = 1
+    assert svc.wedged()                           # live work, stale progress
+    svc_off = EngineService(sched, watchdog_s=0.0)
+    svc_off._live = 1
+    assert not svc_off.wedged()                   # watchdog disabled
+
+
+# ---------------------------------------------------------------------------
+# Allocator exhaustion: injected denial -> preempt; terminal -> loud abort
+# ---------------------------------------------------------------------------
+
+
+def test_injected_alloc_denial_recovers(yi_engine, clean_ref):
+    sched = audited(PagedContinuousScheduler(
+        yi_engine, n_slots=3, block_steps=4, block_size=8,
+        prefix_cache=False, fault_plan="alloc:at=2,times=1"))
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    check_survivors(done, clean_ref, n_bad=0)     # denial absorbed
+    assert all(c.times == 0 for c in sched.faults.clauses)
+    assert sched.stats["aborts_exhaustion"] == 0
+    sched.alloc.audit(expect_no_migration=True)
+
+
+def test_terminal_exhaustion_aborts_request(yi_engine, clean_ref):
+    sched = audited(PagedContinuousScheduler(
+        yi_engine, n_slots=3, block_steps=4, block_size=8,
+        prefix_cache=False, fault_plan="alloc:at=2,times=1"))
+    sched._preempt_youngest = lambda shard: False  # nothing evictable
+    done = run_sched(sched, fault_requests(yi_engine.cfg))
+    bad = check_survivors(done, clean_ref)
+    assert "exhausted" in bad[0].stats["error"]
+    assert sched.stats["aborts_exhaustion"] == 1
+    assert sched.stats["quarantined"] == 1
+    sched.alloc.audit(expect_no_migration=True)
+    for shard in range(sched.alloc.n_shards):
+        assert sched.alloc.used_count(shard) == 0
+
+
+def test_preempt_requeue_cycles_conserve_pool(yi_engine):
+    """Satellite: repeated preempt -> requeue -> re-admit churn under a tiny
+    pool keeps refcounts conserved (audited at every preemption) and outputs
+    identical to an unconstrained-pool run."""
+    roomy = PagedContinuousScheduler(yi_engine, n_slots=2, block_steps=4,
+                                     block_size=8, prefix_cache=False)
+    tiny = audited(PagedContinuousScheduler(yi_engine, n_slots=2,
+                                            block_steps=4, block_size=8,
+                                            n_blocks=7, prefix_cache=False))
+    rng = np.random.default_rng(8)
+    reqs = [(rng.integers(0, yi_engine.cfg.vocab_size, 9).astype(np.int32),
+             20, None, 0),
+            (rng.integers(0, yi_engine.cfg.vocab_size, 8).astype(np.int32),
+             16, None, 0)]
+    ref = run_sched(roomy, reqs)
+    done = run_sched(tiny, reqs)
+    assert tiny.stats["preemptions"] >= 1
+    assert tiny.stats["quarantined"] == 0
+    for rid in ref:
+        assert done[rid].finish_reason in ("stop", "length")
+        np.testing.assert_array_equal(done[rid].output, ref[rid].output)
+    tiny.alloc.audit(expect_no_migration=True)
+    for shard in range(tiny.alloc.n_shards):
+        assert tiny.alloc.used_count(shard) == 0
+
+
+# ---------------------------------------------------------------------------
+# Disagg: migration faults mid-handoff, livelock breaker (>= 2 devices)
+# ---------------------------------------------------------------------------
+
+
+def _disagg_requests(cfg, n=5):
+    rng = np.random.default_rng(11)
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(10, 22))).astype(np.int32),
+             6 + i % 3, None, 2 * i) for i in range(n)]
+
+
+def _run_disagg_fault(dp, prefill_shards):
+    eng = greedy_engine("yi-9b",
+                        parallel=ParallelConfig(tp=1, dp=dp, remat=False),
+                        mesh=make_local_mesh(dp, 1))
+    reqs = _disagg_requests(eng.cfg)
+    kw = dict(n_slots=2 * dp, block_steps=2, block_size=8, prefill_chunk=8,
+              prefill_shards=prefill_shards, prefix_cache=False)
+    clean = run_sched(DisaggScheduler(eng, **kw), reqs)
+    sched = audited(DisaggScheduler(eng, fault_plan="migrate:handoff=0",
+                                    **kw))
+    done = run_sched(sched, reqs)
+    eng.dispatch_hook = None
+    bad = check_survivors(done, clean)
+    assert "migration" in bad[0].stats["error"]
+    assert sched.stats["migration_faults"] == 1
+    assert sched.stats["quarantined"] == 1
+    sched.alloc.audit(expect_no_migration=True)
+    for shard in range(sched.alloc.n_shards):
+        assert sched.alloc.used_count(shard) == 0
+
+
+@needs2
+def test_disagg_migration_fault_rollback():
+    _run_disagg_fault(dp=2, prefill_shards=1)
+
+
+@needs4
+def test_disagg_migration_fault_2p2():
+    _run_disagg_fault(dp=4, prefill_shards=2)
+
+
+@needs2
+def test_disagg_livelock_abort_frees_landing_blocks():
+    eng = greedy_engine("yi-9b",
+                        parallel=ParallelConfig(tp=1, dp=2, remat=False),
+                        mesh=make_local_mesh(2, 1))
+    sched = DisaggScheduler(eng, n_slots=4, block_steps=2, block_size=8,
+                            prefill_chunk=8, prefill_shards=1,
+                            prefix_cache=False)
+    assert not sched._abort_stuck_entity()        # nothing stuck: no victim
+    # synthesize a landed-but-unplaceable request holding decode-pool blocks
+    shard = 1
+    blocks = sched.alloc.alloc(shard, 2)
+    req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32), max_new=8)
+    sched._landing.append({"req": req, "shard": shard, "blocks": blocks,
+                           "toks": [7], "ready_t": time.monotonic()})
+    assert sched._abort_stuck_entity()
+    assert req.finish_reason == "error"
+    assert "livelock" in req.stats["error"]
+    assert sched.stats["livelock_aborts"] == 1
+    assert not sched._landing and sched.alloc.used_count(shard) == 0
+    sched.alloc.audit(expect_no_migration=True)
+
+
+# ---------------------------------------------------------------------------
+# Crash-path reporting: stats flush even when the serve loop dies
+# ---------------------------------------------------------------------------
+
+
+def test_stats_json_flushes_on_fatal_fault(tmp_path):
+    from repro.launch import serve
+    path = tmp_path / "stats.json"
+    argv = ["--arch", "yi-9b", "--scheduler", "continuous", "--requests", "2",
+            "--slots", "2", "--prompt-len", "6", "--max-new", "4",
+            "--max-len", "64", "--block-steps", "2",
+            "--fault-plan", "step:at=0,times=99", "--max-step-retries", "0",
+            "--retry-backoff-s", "0", "--stats-json", str(path)]
+    with pytest.raises(TransientStepError):
+        serve.main(argv)
+    payload = json.loads(path.read_text())        # flushed from finally
+    assert payload["stats"]["step_faults"] >= 1
