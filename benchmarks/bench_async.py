@@ -36,6 +36,11 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks import loadgen
+except ImportError:           # executed directly: benchmarks/ is sys.path[0]
+    import loadgen
+
 HERE = os.path.dirname(__file__)
 BENCH_JSON = os.path.join(HERE, "..", "BENCH_async.json")
 
@@ -64,17 +69,9 @@ def _mid_cfg():
 
 
 def _requests(cfg, n, seed=0, lam=0.0):
-    rng = np.random.default_rng(seed)
-    arrival, reqs = 0, []
-    for _ in range(n):
-        p = rng.integers(0, cfg.vocab_size,
-                         int(rng.integers(PROMPT_MIN, PROMPT_MAX + 1)))
-        reqs.append((p.astype(np.int32),
-                     int(rng.integers(MAX_NEW_MIN, MAX_NEW_MAX + 1)),
-                     arrival))
-        if lam > 0.0:
-            arrival += int(rng.poisson(lam))
-    return reqs
+    return loadgen.make_requests(cfg.vocab_size, n, seed=seed,
+                                 prompt_len=(PROMPT_MIN, PROMPT_MAX),
+                                 max_new=(MAX_NEW_MIN, MAX_NEW_MAX), lam=lam)
 
 
 def _serve(eng, reqs, overlap: bool):
@@ -83,7 +80,7 @@ def _serve(eng, reqs, overlap: bool):
     sched = ContinuousScheduler(eng, n_slots=N_SLOTS,
                                 block_steps=BLOCK_STEPS,
                                 prefill_chunk=PREFILL_CHUNK, overlap=overlap)
-    for p, mn, arr in reqs:
+    for p, mn, arr, _cls in reqs:
         sched.submit(p, mn, arrival_step=arr)
     t0 = time.perf_counter()
     done = sched.run()

@@ -28,6 +28,11 @@ import sys
 
 import numpy as np
 
+try:
+    from benchmarks import loadgen
+except ImportError:           # executed directly: benchmarks/ is sys.path[0]
+    import loadgen
+
 HERE = os.path.dirname(__file__)
 BENCH_JSON = os.path.join(HERE, "..", "BENCH_chaos.json")
 
@@ -46,16 +51,17 @@ PLAN_DISAGG = "poison:slot=2,at=3;step:at=4,times=2;migrate:handoff=0"
 
 
 def _requests(cfg, lo=6, hi=16, seed=4):
-    rng = np.random.default_rng(seed)
-    return [(rng.integers(0, cfg.vocab_size,
-                          int(rng.integers(lo, hi))).astype(np.int32),
-             MAX_NEW, 2 * (i // 3)) for i in range(N_REQUESTS)]
+    # loadgen's prompt_len range is inclusive; the original inline
+    # generator drew integers(lo, hi) exclusive, hence hi - 1
+    return loadgen.make_requests(cfg.vocab_size, N_REQUESTS, seed=seed,
+                                 prompt_len=(lo, hi - 1), max_new=MAX_NEW,
+                                 arrival_fn=lambda i: 2 * (i // 3))
 
 
 def _serve(sched, reqs, deadline_victim):
     import time
 
-    for p, mn, arr in reqs:
+    for p, mn, arr, _cls in reqs:
         sched.submit(p, mn, arrival_step=arr)
     if deadline_victim:
         sched.submit(np.arange(2, 10, dtype=np.int32), MAX_NEW,

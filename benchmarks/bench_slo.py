@@ -1,0 +1,263 @@
+"""Priority-aware serving under overload vs a class-blind baseline.
+
+One deterministic ~2x-capacity Poisson burst (seeded loadgen trace: 20
+burst arrivals + 4 spaced tail arrivals so the degradation ladder can
+drain and restore) is served by every scheduler backend (dense
+continuous, paged, disagg prefill/decode) in both engine-loop modes
+(blocking, overlapped), twice per mode:
+
+* **blind** — every request submitted as ``standard``: admission is FIFO,
+  nothing is shed, no degradation.  The true classes ride in a side
+  table so the same per-class metrics can be computed.
+* **aware** — real priority classes + one interactive reserve slot (+ a
+  block reserve on the paged pool) + the overload degradation ladder
+  (queue-depth hysteresis; shed batch -> spec-off -> tight admission).
+
+Both consume the IDENTICAL trace (loadgen draws classes from a side rng
+stream), so the comparison is apples-to-apples.  Latency is measured on
+the VIRTUAL decode-step clock — per-token latency of a request is
+``(finished_step - arrival_step) / emitted`` — so every number here is
+exactly reproducible run to run and across machines (scheduling under
+the overload controller's queue-depth signal is fully deterministic;
+wall-clock only enters the advisory ITL signal, unused here).  The
+per-token SLO is calibrated per backend from an unloaded blocking
+reference run (``SLO_FACTOR`` x its median steps/token, which is queue-
+free) — the same reference provides the greedy streams for the identity
+check.
+
+Asserted, per backend x mode:
+
+* interactive SLO attainment strictly better aware than blind, and
+  interactive p95 per-token step latency strictly lower;
+* the aware run sheds only batch (>= 1 shed; interactive sheds = 0);
+* the ladder engages (max level >= 1) and fully recovers (final level 0);
+* every request the aware run completed streams exactly the unloaded
+  reference's tokens — degradation changes which/when, never what.
+
+Runs in a subprocess with 2 virtual CPU devices (bench_chaos idiom) so
+the disagg pool split is real.
+
+Run directly:  PYTHONPATH=src python benchmarks/bench_slo.py
+(--no-json to skip writing BENCH_slo.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+try:
+    from benchmarks import loadgen
+except ImportError:           # executed directly: benchmarks/ is sys.path[0]
+    import loadgen
+
+HERE = os.path.dirname(__file__)
+BENCH_JSON = os.path.join(HERE, "..", "BENCH_slo.json")
+
+ARCH = "yi-9b"
+N_REQUESTS = 24
+TAIL = 4                      # spaced arrivals after the burst (recovery)
+TAIL_GAP = 18
+N_SLOTS = 4
+MAX_NEW = 8
+MAX_LEN = 64
+BLOCK_SIZE = 8
+BLOCK_STEPS = 2
+CHUNK = 8
+LAM = 1.0                     # ~1 arrival/step vs ~0.5/step service rate
+MIX = {"interactive": 1, "standard": 1, "batch": 2}
+SLO_FACTOR = 2.0
+OVERLOAD = {"enabled": True, "queue_hi": 8, "queue_lo": 2,
+            "patience": 3, "cooldown": 2}
+CLASSES = ("interactive", "standard", "batch")
+
+
+def _trace(cfg):
+    reqs = loadgen.make_requests(cfg.vocab_size, N_REQUESTS, seed=11,
+                                 prompt_len=(6, 14), max_new=MAX_NEW,
+                                 lam=LAM, class_mix=MIX)
+    burst_end = reqs[N_REQUESTS - TAIL - 1].arrival
+    tail = [r._replace(arrival=burst_end + 16 + TAIL_GAP * j)
+            for j, r in enumerate(reqs[-TAIL:])]
+    return reqs[:-TAIL] + tail
+
+
+def _serve(sched, reqs, blind):
+    info = {}
+    for r in reqs:
+        rid = sched.submit(r.prompt, r.max_new, arrival_step=r.arrival,
+                           priority="standard" if blind else r.priority)
+        info[rid] = (r.priority, r.arrival)
+    done = {r.rid: r for r in sched.run()}
+    return done, info
+
+
+def _metrics(done, info, slo_steps):
+    """Per-class SLO metrics over the BURST portion of the trace (the
+    spaced tail exists to let the ladder drain and restore, not to be
+    measured).  Per-token latency is deterministic virtual-clock steps
+    from arrival to retirement."""
+    burst = sorted(info)[:N_REQUESTS - TAIL]
+    per = {}
+    for cls in CLASSES:
+        recs = [(done[rid], info[rid][1]) for rid in burst
+                if info[rid][0] == cls]
+        fin = [(r, arr) for r, arr in recs
+               if r.finish_reason in ("stop", "length")]
+        lat = sorted((r.stats["finished_step"] - arr) / r.stats["emitted"]
+                     for r, arr in fin if r.stats.get("emitted", 0) > 0)
+        per[cls] = {
+            "requests": len(recs),
+            "completed": len(fin),
+            "shed": sum(1 for r, _ in recs if r.finish_reason == "shed"),
+            "slo_attainment": (sum(1 for v in lat if v <= slo_steps)
+                               / max(1, len(recs))),
+            "p95_steps_per_token": (float(np.percentile(lat, 95))
+                                    if lat else None),
+        }
+    return per
+
+
+def _identity_pct(done, ref):
+    fin = [r for r in done.values() if r.finish_reason in ("stop", "length")]
+    same = sum(1 for r in fin
+               if np.array_equal(r.output, ref[r.rid].output))
+    return 100.0 * same / max(1, len(fin))
+
+
+def inner() -> dict:
+    from repro.configs import ParallelConfig, SamplingConfig, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime.engine import Engine
+    from repro.runtime.scheduler import (ContinuousScheduler, DisaggScheduler,
+                                         PagedContinuousScheduler)
+
+    cfg = get_config(ARCH).reduced()
+    eng1 = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=MAX_LEN)
+    eng2 = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=2, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(2, 1), max_len=MAX_LEN)
+    trace = _trace(cfg)
+    unloaded = [r._replace(arrival=12 * i) for i, r in enumerate(trace)]
+
+    def make(kind, overlap, aware):
+        kw = dict(n_slots=N_SLOTS, block_steps=BLOCK_STEPS, overlap=overlap)
+        if aware:
+            kw.update(reserve_slots=1, overload_opts=dict(OVERLOAD))
+        if kind == "dense":
+            return ContinuousScheduler(eng1, **kw)
+        if aware:
+            kw.update(reserve_blocks=2)
+        kw.update(block_size=BLOCK_SIZE, prefix_cache=False)
+        if kind == "paged":
+            return PagedContinuousScheduler(eng1, **kw)
+        return DisaggScheduler(eng2, prefill_chunk=CHUNK, prefill_shards=1,
+                               **kw)
+
+    out = {}
+    for kind in ("dense", "paged", "disagg"):
+        # unloaded blocking reference: greedy streams + SLO calibration.
+        # Arrivals are spread far apart, so (finished_step - arrival) /
+        # emitted is the backend's queue-free service cost in steps per
+        # token; the SLO grants SLO_FACTOR of queueing headroom over it.
+        ref, rinfo = _serve(make(kind, overlap=False, aware=False), unloaded,
+                            blind=False)
+        cal = sorted((r.stats["finished_step"] - rinfo[rid][1])
+                     / r.stats["emitted"] for rid, r in ref.items())
+        slo_steps = SLO_FACTOR * float(np.median(cal))
+        rec = {"slo_steps_per_token": slo_steps, "modes": {}}
+        for overlap in (False, True):
+            mode = "overlapped" if overlap else "blocking"
+            blind_done, info = _serve(
+                make(kind, overlap, aware=False), trace, blind=True)
+            aware_sched = make(kind, overlap, aware=True)
+            aware_done, _ = _serve(aware_sched, trace, blind=False)
+            if hasattr(aware_sched, "alloc"):
+                aware_sched.alloc.audit(
+                    expect_no_migration=(kind != "disagg"))
+            blind_m = _metrics(blind_done, info, slo_steps)
+            aware_m = _metrics(aware_done, info, slo_steps)
+            ov = aware_sched.overload_ctl.summary()
+            ident = _identity_pct(aware_done, ref)
+            tag = f"{kind}/{mode}"
+            bi, ai = blind_m["interactive"], aware_m["interactive"]
+            assert ai["slo_attainment"] > bi["slo_attainment"], (
+                f"{tag}: aware interactive attainment "
+                f"{ai['slo_attainment']:.2f} not above blind "
+                f"{bi['slo_attainment']:.2f}")
+            assert ai["p95_steps_per_token"] < bi["p95_steps_per_token"], (
+                f"{tag}: aware interactive p95 not below blind")
+            assert aware_m["batch"]["shed"] >= 1, \
+                f"{tag}: batch absorbed no shedding"
+            assert ai["shed"] == 0, f"{tag}: interactive was shed"
+            assert ov["max_level"] >= 1, f"{tag}: ladder never engaged"
+            assert ov["level"] == 0, \
+                f"{tag}: ladder did not recover (level {ov['level']})"
+            assert ident == 100.0, \
+                f"{tag}: aware survivors diverged from unloaded reference"
+            rec["modes"][mode] = {
+                "blind": blind_m, "aware": aware_m, "overload": ov,
+                "aware_survivor_token_identity_pct": ident,
+                "aware_classes": aware_sched.stats["classes"],
+            }
+        out[kind] = rec
+    return out
+
+
+def run_inner_subprocess() -> dict:
+    env = dict(os.environ)
+    env["JAX_NUM_CPU_DEVICES"] = "2"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, os.path.abspath(__file__), "--inner"],
+                       capture_output=True, text=True, timeout=3000, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main(emit=None, json_path=BENCH_JSON):
+    emit = emit or (lambda n, u, d="": print(f"{n},{u:.3f},{d}"))
+    slo = run_inner_subprocess()
+    for kind, rec in slo.items():
+        for mode, m in rec["modes"].items():
+            bi, ai = m["blind"]["interactive"], m["aware"]["interactive"]
+            ov = m["overload"]
+            line = (f"interactive SLO {ai['slo_attainment']:.0%} aware vs "
+                    f"{bi['slo_attainment']:.0%} blind "
+                    f"@ {rec['slo_steps_per_token']:.1f} steps/token; "
+                    f"p95 {ai['p95_steps_per_token']:.1f} vs "
+                    f"{bi['p95_steps_per_token']:.1f} steps; "
+                    f"batch shed {m['aware']['batch']['shed']}, "
+                    f"ladder peak {ov['max_level_name']} "
+                    f"({ov['escalations']} esc/{ov['restorations']} rst), "
+                    f"identity {m['aware_survivor_token_identity_pct']:.0f}%")
+            print(f"{kind:7s} {mode:10s} {line}", flush=True)
+            emit(f"slo/{kind}_{mode}_interactive_attainment",
+                 1e6 * ai["slo_attainment"], line)
+    if json_path:
+        payload = {"meta": {"bench": "slo_priority_serving", "arch": ARCH,
+                            "n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+                            "max_new": MAX_NEW, "poisson_lambda": LAM,
+                            "class_mix": MIX, "slo_factor": SLO_FACTOR,
+                            "overload": OVERLOAD},
+                   "slo": slo}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(json_path)}")
+    return slo
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    if "--inner" in sys.argv:
+        print(json.dumps(inner()))
+    else:
+        main(json_path=None if "--no-json" in sys.argv else BENCH_JSON)

@@ -1,0 +1,86 @@
+"""Shared deterministic load generator for the serving benchmarks.
+
+One seeded ``numpy`` Generator produces the whole trace, so a (seed,
+parameters) pair names a reproducible workload that two runs — or two
+scheduler modes under comparison — consume identically.
+
+Draw-order contract (load-bearing: BENCH_async/BENCH_chaos traces predate
+this module and must stay bit-identical).  Per request the generator
+consumes, in order:
+
+1. prompt length       — ``integers(lo, hi + 1)`` over the INCLUSIVE
+                         ``prompt_len`` range;
+2. prompt content      — ``integers(0, vocab, plen)``;
+3. decode budget       — only when the ``max_new`` range is non-degenerate
+                         (an int or ``(k, k)`` burns no draw);
+4. Poisson gap         — only when ``lam > 0`` (the gap lands AFTER the
+                         current request: the first arrival is step 0).
+
+Priority classes draw from a SEPARATE rng stream derived from the seed,
+so a class-aware trace carries the exact prompts/budgets/arrivals of its
+class-blind baseline — the apples-to-apples property the SLO bench's
+blind-vs-aware comparison rests on.
+
+``arrival_fn`` (e.g. ``lambda i: 2 * (i // 3)``) replaces the Poisson
+clock with a deterministic stride and burns no draws.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+
+
+class GenRequest(NamedTuple):
+    prompt: np.ndarray
+    max_new: int
+    arrival: int            # virtual decode-step clock
+    priority: str
+
+
+def normalize_mix(class_mix) -> Optional[Tuple[List[str], List[float]]]:
+    """``{"interactive": 1, "batch": 3}`` (or ``[(cls, w), ...]``) into
+    ``(classes, probabilities)``; None passes through."""
+    if not class_mix:
+        return None
+    items = (list(class_mix.items()) if isinstance(class_mix, dict)
+             else [tuple(x) for x in class_mix])
+    classes = [c for c, _ in items]
+    weights = [float(w) for _, w in items]
+    total = sum(weights)
+    if total <= 0:
+        raise ValueError("class mix weights must sum to > 0")
+    return classes, [w / total for w in weights]
+
+
+def make_requests(vocab: int,
+                  n: int,
+                  seed: int = 0,
+                  *,
+                  prompt_len: Tuple[int, int] = (8, 16),
+                  max_new: Union[int, Tuple[int, int]] = (24, 32),
+                  lam: float = 0.0,
+                  arrival_fn: Optional[Callable[[int], int]] = None,
+                  class_mix: Optional[Union[Dict[str, float],
+                                            List[Tuple[str, float]]]] = None,
+                  ) -> List[GenRequest]:
+    """Generate ``n`` requests under the documented draw order."""
+    rng = np.random.default_rng(seed)
+    mix = normalize_mix(class_mix)
+    cls_rng = np.random.default_rng((seed, 0xC1A55)) if mix else None
+    if isinstance(max_new, int):
+        max_new = (max_new, max_new)
+    arrival = 0
+    reqs: List[GenRequest] = []
+    for i in range(n):
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        mn = (int(rng.integers(max_new[0], max_new[1] + 1))
+              if max_new[0] != max_new[1] else max_new[0])
+        arr = arrival_fn(i) if arrival_fn is not None else arrival
+        if arrival_fn is None and lam > 0.0:
+            arrival += int(rng.poisson(lam))
+        cls = (mix[0][int(cls_rng.choice(len(mix[0]), p=mix[1]))]
+               if mix else "standard")
+        reqs.append(GenRequest(prompt, mn, arr, cls))
+    return reqs

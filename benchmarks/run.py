@@ -19,6 +19,11 @@
   chaos               — fault-injected serving vs clean across all three
                         schedulers: survivor token identity (must be 100%),
                         survival rate, finish_reason mix, ITL degradation
+  slo                 — priority-aware serving under a 2x-capacity burst vs
+                        a class-blind baseline on the same trace:
+                        interactive SLO attainment/p95, batch shedding,
+                        degradation-ladder engage + recover, survivor
+                        token identity
   roofline            — §Roofline terms from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV; every bench also writes its own
@@ -47,9 +52,9 @@ def main() -> None:
     from benchmarks import (bench_async, bench_chaos,
                             bench_continuous_batching, bench_disagg,
                             bench_one_shot, bench_paged_kv, bench_prefill,
-                            bench_specdecode, bench_sync_minimization,
-                            bench_token_latency, bench_wquant,
-                            bench_zero_copy)
+                            bench_slo, bench_specdecode,
+                            bench_sync_minimization, bench_token_latency,
+                            bench_wquant, bench_zero_copy)
 
     benches = [
         ("token_latency", bench_token_latency.main),
@@ -64,6 +69,7 @@ def main() -> None:
         ("disagg", bench_disagg.main),
         ("async", bench_async.main),
         ("chaos", bench_chaos.main),
+        ("slo", bench_slo.main),
     ]
     failures = []
     for name, fn in benches:

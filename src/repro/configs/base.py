@@ -359,6 +359,34 @@ class ParallelConfig:
     fault_plan: str = ""
     max_step_retries: int = 3
     retry_backoff_s: float = 0.05
+    # overload resilience (continuous-batching schedulers).  Requests carry
+    # a priority class ("interactive" | "standard" | "batch"); the slo_*_s
+    # fields are per-class PER-TOKEN latency targets in seconds (0 = no
+    # target).  interactive_reserve_slots / _blocks hold back a quota of
+    # slots (dense + paged) and free KV blocks (paged) that only
+    # interactive-class admissions may consume, so a background flood can
+    # never starve the latency class.  overload_degrade enables the
+    # graceful-degradation controller (runtime/overload.py): it watches
+    # arrived-queue depth and recently landed ITL every round and, under
+    # sustained pressure, walks a ladder — shed batch at admission, disable
+    # spec decode, cap the admission window — restoring in reverse as
+    # pressure clears.  queue_hi/lo are the hysteresis thresholds in queued
+    # requests (0 = auto from n_slots); patience/cooldown are the number of
+    # consecutive pressured/clear rounds before escalating/restoring;
+    # itl_hi/lo scale the interactive SLO into the ITL pressure band.
+    # Every lever changes WHICH requests run and WHEN — never their tokens.
+    slo_interactive_s: float = 0.0
+    slo_standard_s: float = 0.0
+    slo_batch_s: float = 0.0
+    interactive_reserve_slots: int = 0
+    interactive_reserve_blocks: int = 0
+    overload_degrade: bool = False
+    overload_queue_hi: int = 0
+    overload_queue_lo: int = 0
+    overload_patience: int = 3
+    overload_cooldown: int = 6
+    overload_itl_hi: float = 1.5
+    overload_itl_lo: float = 1.0
 
 
 @dataclass(frozen=True)

@@ -18,14 +18,22 @@ N's tokens are still device futures.
 new submissions are rejected up front with HTTP 429 + ``Retry-After``
 (counted in ``scheduler.stats["shed_requests"]``) instead of growing an
 unbounded queue — a shed request never touches the scheduler, so it can
-never corrupt slot state.  **Graceful drain**: shutdown stops accepting
-(503), serves every admitted request to completion, then exits.
+never corrupt slot state.  Shedding is CLASS-AWARE: requests carry a
+``priority`` (``interactive`` | ``standard`` | ``batch``, default
+standard); at capacity a newcomer displaces a strictly lower-class entry
+still waiting in the inbox (the victim gets the 429) before the newcomer
+itself is shed, ``--pending-reserve`` holds back inbox headroom only
+interactive may use, the 429 ``Retry-After`` hint scales per class
+(batch backs off longest), and while the scheduler's degradation ladder
+is shedding batch (level 1+), batch submissions are rejected at the door.
+**Graceful drain**: shutdown stops accepting (503), serves every admitted
+request to completion, then exits.
 
 The API accepts token-id prompts (this repo has no tokenizer):
 
     POST /v1/completions
     {"prompt": [1, 2, 3], "max_tokens": 16, "stream": true,
-     "stop_token_id": 5}
+     "stop_token_id": 5, "priority": "interactive"}
 
 Responses follow the completions shape with ``token_ids`` in each choice;
 streaming uses SSE (``data: {...}\\n\\n`` chunks, then ``data: [DONE]``).
@@ -41,7 +49,14 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.runtime.scheduler import PRIORITY_CLASSES, PRIORITY_RANK
+
 _DONE = object()
+
+# Retry-After scale per class: latency classes retry soonest, batch backs
+# off longest (it is also the first class the degradation ladder sheds).
+# standard stays at 1x so the default-class backoff hint is unchanged.
+CLASS_RETRY_SCALE = {"interactive": 1, "standard": 1, "batch": 4}
 
 
 class TokenStream:
@@ -53,6 +68,9 @@ class TokenStream:
         self._q: "asyncio.Queue" = asyncio.Queue()
         self.request = None          # set at finish (the retired Request)
         self.error: Optional[str] = None
+        self.error_status = "400 Bad Request"
+        self.error_type = "invalid_request_error"
+        self.priority = "standard"
 
     # -- worker-thread side ------------------------------------------------
     def push(self, tok: int) -> None:
@@ -62,8 +80,11 @@ class TokenStream:
         self.request = request
         self._loop.call_soon_threadsafe(self._q.put_nowait, _DONE)
 
-    def fail(self, msg: str) -> None:
+    def fail(self, msg: str, status: str = "400 Bad Request",
+             err_type: str = "invalid_request_error") -> None:
         self.error = msg
+        self.error_status = status
+        self.error_type = err_type
         self._loop.call_soon_threadsafe(self._q.put_nowait, _DONE)
 
     # -- client-coroutine side ---------------------------------------------
@@ -77,9 +98,13 @@ class EngineService:
     """Owns the scheduler worker thread and the client-facing submit path."""
 
     def __init__(self, scheduler, max_pending: int = 64,
-                 idle_wait_s: float = 0.02, watchdog_s: float = 0.0):
+                 idle_wait_s: float = 0.02, watchdog_s: float = 0.0,
+                 pending_reserve: int = 0):
         self.sched = scheduler
         self.max_pending = max_pending
+        # inbox headroom only interactive-class submissions may use: the
+        # effective bound for standard/batch is max_pending - reserve
+        self.pending_reserve = max(0, int(pending_reserve))
         self.idle_wait_s = idle_wait_s
         # scheduler watchdog: with live work in the engine and no host-
         # visible output for > watchdog_s, the node reports itself wedged —
@@ -131,20 +156,59 @@ class EngineService:
             live = self._live
         return live > 0 and self.sched.liveness_age() > self.watchdog_s
 
+    def _count_shed(self, priority: str) -> None:
+        """Shed accounting (lock held): the global counter plus the
+        per-class bucket the scheduler's ``request_summary`` reads."""
+        self.sched.stats["shed_requests"] += 1
+        buckets = self.sched.stats.setdefault("classes", {}).setdefault(
+            priority, {"served": 0, "shed": 0, "timeout": 0, "error": 0})
+        buckets["shed"] += 1
+
     def try_submit(self, prompt, max_new: int, eos_id: Optional[int],
                    stream: TokenStream,
-                   deadline_s: Optional[float] = None) -> str:
+                   deadline_s: Optional[float] = None,
+                   priority: str = "standard") -> str:
         """Returns "ok", "shed" (bounded-queue overload), "draining", or
-        "wedged" (watchdog tripped — the engine stopped making progress)."""
+        "wedged" (watchdog tripped — the engine stopped making progress).
+
+        Class-aware shedding, lowest class first: while the scheduler's
+        degradation ladder sheds batch, batch is rejected at the door; a
+        non-interactive submission is shed once the inbox reserve is
+        reached; and at full capacity a newcomer displaces a strictly
+        LOWER-class entry still waiting in the inbox (the latest-submitted
+        entry of the worst class — its stream fails with a 429) before the
+        newcomer itself is shed."""
         if self.wedged():
             return "wedged"
+        rank = PRIORITY_RANK[priority]
         with self._lock:
             if self._draining:
                 return "draining"
-            if self._live >= self.max_pending:
-                self.sched.stats["shed_requests"] += 1
+            if (priority == "batch" and self.sched.overload_level() >= 1):
+                self._count_shed(priority)
                 return "shed"
-            self._inbox.append((prompt, max_new, eos_id, deadline_s, stream))
+            cap = (self.max_pending if priority == "interactive"
+                   else self.max_pending - self.pending_reserve)
+            if self._live >= cap:
+                victim = None
+                if self._live >= self.max_pending:
+                    worst = max((PRIORITY_RANK[e[5]] for e in self._inbox),
+                                default=-1)
+                    if worst > rank:
+                        victim = next(e for e in reversed(self._inbox)
+                                      if PRIORITY_RANK[e[5]] == worst)
+                if victim is None:
+                    self._count_shed(priority)
+                    return "shed"
+                self._inbox.remove(victim)
+                self._live -= 1
+                self._count_shed(victim[5])
+                victim[4].fail(
+                    "server overloaded: displaced by a higher-priority "
+                    "request", status="429 Too Many Requests",
+                    err_type="overloaded_error")
+            self._inbox.append((prompt, max_new, eos_id, deadline_s, stream,
+                                priority))
             self._live += 1
         self._wake.set()
         return "ok"
@@ -154,14 +218,15 @@ class EngineService:
         while True:
             with self._lock:
                 batch, self._inbox = self._inbox, []
-            for prompt, max_new, eos_id, deadline_s, stream in batch:
+            for prompt, max_new, eos_id, deadline_s, stream, priority \
+                    in batch:
                 try:
                     # arrival_step = now on the virtual clock: immediately
                     # admissible, ordering decided by the scheduler
                     rid = self.sched.submit(
                         np.asarray(prompt, np.int32), max_new, eos_id=eos_id,
                         arrival_step=self.sched.step_count,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s, priority=priority)
                 except ValueError as e:
                     with self._lock:
                         self._live -= 1
@@ -291,6 +356,15 @@ class HttpFrontend:
                     "shed_requests": svc.sched.stats["shed_requests"],
                     "quarantined": svc.sched.stats.get("quarantined", 0),
                     "timeouts": svc.sched.stats.get("timeouts", 0),
+                    # per-class served/shed/timeout/error counters and the
+                    # degradation-ladder state (level 0 = normal)
+                    "classes": svc.sched.stats.get("classes", {}),
+                    "overload": (
+                        svc.sched.overload_ctl.summary()
+                        if getattr(svc.sched, "overload_ctl", None)
+                        is not None
+                        else {"level": svc.sched.overload_level(),
+                              "level_name": "normal"}),
                 }
                 self._respond(writer,
                               "503 Service Unavailable" if wedged
@@ -327,14 +401,21 @@ class HttpFrontend:
             if max_time is not None and max_time <= 0:
                 raise ValueError("max_time must be > 0 seconds")
             do_stream = bool(req.get("stream", False))
+            priority = str(req.get("priority", "standard"))
+            if priority not in PRIORITY_RANK:
+                raise ValueError(
+                    f"unknown priority class {priority!r}; expected one "
+                    f"of {PRIORITY_CLASSES}")
         except (KeyError, TypeError, ValueError) as e:
             self._respond(writer, "400 Bad Request",
                           {"error": {"message": str(e),
                                      "type": "invalid_request_error"}})
             return
         stream = TokenStream(asyncio.get_running_loop())
+        stream.priority = priority
         verdict = self.service.try_submit(prompt, max_new, eos_id, stream,
-                                          deadline_s=max_time)
+                                          deadline_s=max_time,
+                                          priority=priority)
         if verdict == "wedged":
             # scheduler watchdog tripped: the engine stopped producing
             # output with work in flight — fail fast so the load balancer
@@ -346,12 +427,14 @@ class HttpFrontend:
             return
         if verdict == "shed":
             # bounded-queue overload shedding: reject BEFORE the scheduler
-            # ever sees the request, with a client backoff hint
+            # ever sees the request, with a per-class client backoff hint
+            # (batch clients are told to back off longest)
+            retry = self.retry_after_s * CLASS_RETRY_SCALE[priority]
             self._respond(
                 writer, "429 Too Many Requests",
                 {"error": {"message": "server overloaded, retry later",
                            "type": "overloaded_error"}},
-                extra_headers=f"Retry-After: {self.retry_after_s}\r\n")
+                extra_headers=f"Retry-After: {retry}\r\n")
             return
         if verdict == "draining":
             self._respond(writer, "503 Service Unavailable",
@@ -385,9 +468,18 @@ class HttpFrontend:
                 break
             toks.append(t)
         if stream.error is not None:
-            self._respond(writer, "400 Bad Request",
+            # the stream carries its own verdict: validation failures stay
+            # 400, priority displacement surfaces as 429 with the same
+            # per-class Retry-After hint the door-shed path uses
+            extra = ""
+            if stream.error_status.startswith("429"):
+                retry = (self.retry_after_s
+                         * CLASS_RETRY_SCALE.get(stream.priority, 1))
+                extra = f"Retry-After: {retry}\r\n"
+            self._respond(writer, stream.error_status,
                           {"error": {"message": stream.error,
-                                     "type": "invalid_request_error"}})
+                                     "type": stream.error_type}},
+                          extra_headers=extra)
             return
         self._respond(writer, "200 OK", {
             "id": cid, "object": "text_completion", "model": "repro",
@@ -445,6 +537,10 @@ def main(argv=None):
                     help="scheduler watchdog: with live work and no engine "
                          "output for this many seconds, /health turns 503 "
                          "and new submissions are rejected (0 disables)")
+    ap.add_argument("--pending-reserve", type=int, default=0,
+                    help="slots of the pending queue held back for "
+                         "interactive-class requests (non-interactive "
+                         "submissions shed this much earlier)")
     args = ap.parse_args(argv)
     if args.scheduler == "wave":
         ap.error("the frontend needs a continuous scheduler "
@@ -452,7 +548,8 @@ def main(argv=None):
     eng = serve_mod.build_engine(args)
     sched = serve_mod.make_scheduler(eng, args)
     service = EngineService(sched, max_pending=args.max_pending,
-                            watchdog_s=args.watchdog_s)
+                            watchdog_s=args.watchdog_s,
+                            pending_reserve=args.pending_reserve)
     frontend = HttpFrontend(service, host=args.host, port=args.port)
 
     async def amain():

@@ -75,6 +75,16 @@ def build_engine(args):
                          fault_plan=args.fault_plan,
                          max_step_retries=args.max_step_retries,
                          retry_backoff_s=args.retry_backoff_s,
+                         slo_interactive_s=args.slo_interactive,
+                         slo_standard_s=args.slo_standard,
+                         slo_batch_s=args.slo_batch,
+                         interactive_reserve_slots=args.interactive_reserve_slots,
+                         interactive_reserve_blocks=args.interactive_reserve_blocks,
+                         overload_degrade=args.overload_degrade,
+                         overload_queue_hi=args.overload_queue_hi,
+                         overload_queue_lo=args.overload_queue_lo,
+                         overload_patience=args.overload_patience,
+                         overload_cooldown=args.overload_cooldown,
                          disagg_prefill_shards=(args.prefill_shards
                                                 if args.scheduler == "disagg"
                                                 else 0))
@@ -104,9 +114,32 @@ def make_scheduler(eng, args):
     return WaveScheduler(eng, batch_size=args.batch)
 
 
+def parse_class_mix(spec):
+    """Parse ``interactive=0.25,standard=0.5,batch=0.25`` into
+    ``(classes, probabilities)``; None for an empty spec.  Weights are
+    normalized, so integer ratios (``interactive=1,batch=3``) work too."""
+    if not spec:
+        return None
+    classes, weights = [], []
+    for item in spec.split(","):
+        k, _, v = item.strip().partition("=")
+        if k not in ("interactive", "standard", "batch"):
+            raise ValueError(f"unknown priority class {k!r} in class mix")
+        classes.append(k)
+        weights.append(float(v) if v else 1.0)
+    total = sum(weights)
+    if total <= 0:
+        raise ValueError("class mix weights must sum to > 0")
+    return classes, [w / total for w in weights]
+
+
 def submit_workload(sched, cfg, args):
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).astype(np.int32)
+    mix = parse_class_mix(getattr(args, "class_mix", ""))
+    # the class draw uses its own rng stream so --class-mix never perturbs
+    # the prompt/budget sequence of an existing workload
+    cls_rng = np.random.default_rng(0xC1A55) if mix else None
     for i in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))
         shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
@@ -117,8 +150,11 @@ def submit_workload(sched, cfg, args):
         prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
         if args.shared_prefix and cfg.n_codebooks == 1:
             prompt = np.concatenate([shared, prompt])
+        priority = (mix[0][int(cls_rng.choice(len(mix[0]), p=mix[1]))]
+                    if mix else "standard")
         sched.submit(prompt, max_new=max_new,
-                     arrival_step=i * args.arrival_every)
+                     arrival_step=i * args.arrival_every,
+                     priority=priority)
 
 
 def build_parser(ap=None):
@@ -228,6 +264,45 @@ def build_parser(ap=None):
     ap.add_argument("--retry-backoff-s", type=float, default=0.05,
                     help="base backoff before a step retry; doubles per "
                          "consecutive failure")
+    ap.add_argument("--class-mix", default="", metavar="SPEC",
+                    help="per-request priority classes for the synthetic "
+                         "workload, drawn from a weighted mix, e.g. "
+                         "'interactive=0.25,standard=0.5,batch=0.25' "
+                         "(empty = everything 'standard')")
+    ap.add_argument("--slo-interactive", type=float, default=0.0,
+                    metavar="S", help="interactive-class per-token SLO "
+                    "target in seconds (0 = unset); reported as "
+                    "slo_attainment per class and consulted by the "
+                    "overload controller's latency signal")
+    ap.add_argument("--slo-standard", type=float, default=0.0, metavar="S",
+                    help="standard-class per-token SLO target (seconds)")
+    ap.add_argument("--slo-batch", type=float, default=0.0, metavar="S",
+                    help="batch-class per-token SLO target (seconds)")
+    ap.add_argument("--interactive-reserve-slots", type=int, default=0,
+                    help="decode slots held back for interactive requests: "
+                         "non-interactive admission stops once free slots "
+                         "drop to this reserve")
+    ap.add_argument("--interactive-reserve-blocks", type=int, default=0,
+                    help="paged/disagg: KV pool blocks held back for "
+                         "interactive admissions")
+    ap.add_argument("--overload-degrade", action="store_true",
+                    help="enable the adaptive degradation ladder (shed "
+                         "batch -> suspend spec decode -> tighten "
+                         "admission), walked with hysteresis from queue "
+                         "depth + landed inter-token latency; see "
+                         "repro.runtime.overload")
+    ap.add_argument("--overload-queue-hi", type=int, default=0,
+                    help="queue depth that counts as pressure "
+                         "(0 = auto: 2x slots)")
+    ap.add_argument("--overload-queue-lo", type=int, default=0,
+                    help="queue depth that counts as clear "
+                         "(0 = auto: slots/2)")
+    ap.add_argument("--overload-patience", type=int, default=3,
+                    help="consecutive pressured rounds before escalating "
+                         "one ladder level")
+    ap.add_argument("--overload-cooldown", type=int, default=6,
+                    help="consecutive clear rounds before restoring one "
+                         "ladder level")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump the scheduler's full request_summary() and "
                          "raw stats counters (incl. overlap metrics: "
@@ -336,6 +411,24 @@ def _report(sched, cfg, args, dt):
                   f"{fc['aborts_exhaustion']} exhaustion aborts, "
                   f"{fc['livelock_aborts']} livelock aborts; "
                   f"finish_reasons {lat['finish_reasons']}")
+        if "classes" in lat:
+            for name, c in lat["classes"].items():
+                line = (f"  class {name}: {c.get('served', 0)} served, "
+                        f"{c.get('shed', 0)} shed, "
+                        f"{c.get('timeout', 0)} timed out")
+                if "itl_s" in c:
+                    line += (f"; itl p50/p95 {c['itl_s']['p50']*1e3:.1f}/"
+                             f"{c['itl_s']['p95']*1e3:.1f} ms")
+                if "slo_attainment" in c:
+                    line += (f"; SLO {c['slo_attainment']:.0%} "
+                             f"@ {c['slo_target_s']*1e3:.0f} ms/token")
+                print(line)
+        if "overload" in lat:
+            ov = lat["overload"]
+            print(f"  overload ladder: level {ov['level']} "
+                  f"({ov['level_name']}), peak {ov['max_level_name']}, "
+                  f"{ov['escalations']} escalations / "
+                  f"{ov['restorations']} restorations")
         if lat.get("overlap", {}).get("enabled"):
             ov = lat["overlap"]
             print(f"  overlap: host-overlap {ov['host_overlap_fraction']:.0%} "

@@ -45,6 +45,20 @@ Spec grammar — clauses separated by ``;``, each ``kind:key=val,key=val``::
     delay:at=N,s=F[,times=M]             sleep F seconds before the first
                                          dispatch with step >= N (drives
                                          the liveness watchdog).
+    burst:at=N,count=K[,plen=P][,new=M]  inject K synthetic requests
+         [,cls=C][,times=T][,every=E]    (prompt length P, default 8;
+                                         decode budget M, default 4;
+                                         priority class C, default
+                                         "standard") at the first serving
+                                         round with step >= N.  times=T
+                                         refires the burst T times,
+                                         every=E spacing refires E steps
+                                         apart — a deterministic overload
+                                         wave for degradation tests.
+                                         Prompts come from an rng seeded
+                                         by the firing step, so two runs
+                                         of the same plan inject
+                                         identical traffic.
     seed:n=K                             seed for probabilistic clauses
                                          (default 0; the plan is fully
                                          deterministic either way).
@@ -87,18 +101,26 @@ class MigrationFault(InjectedFault):
 
 @dataclass
 class _Clause:
-    kind: str                     # step | poison | alloc | migrate | delay
+    kind: str                     # step|poison|alloc|migrate|delay|burst
     at: int = 0                   # engine-step threshold
     times: int = 1                # remaining fires (counts down to 0)
     slot: Optional[int] = None    # blamed/targeted slot
     handoff: int = 0              # migrate: 0-based handoff index
     seconds: float = 0.0          # delay: sleep duration
     p: float = 1.0                # per-opportunity fire probability
+    count: int = 0                # burst: requests injected per fire
+    plen: int = 8                 # burst: synthetic prompt length
+    new: int = 4                  # burst: per-request decode budget
+    cls: str = "standard"         # burst: priority class of injected load
+    every: int = 0                # burst: step spacing between refires
+    fired: int = 0                # burst: fires consumed so far
 
 
-_KINDS = ("step", "poison", "alloc", "migrate", "delay", "seed")
-_INT_KEYS = ("at", "times", "slot", "handoff", "n")
+_KINDS = ("step", "poison", "alloc", "migrate", "delay", "burst", "seed")
+_INT_KEYS = ("at", "times", "slot", "handoff", "n", "count", "plen",
+             "new", "every")
 _FLOAT_KEYS = ("s", "p")
+_STR_KEYS = ("cls",)
 
 
 class FaultPlan:
@@ -136,6 +158,8 @@ class FaultPlan:
                     kw[k] = int(v)
                 elif k in _FLOAT_KEYS:
                     kw[k] = float(v)
+                elif k in _STR_KEYS:
+                    kw[k] = v.strip()
                 else:
                     raise ValueError(f"unknown fault key {k!r} in {part!r}")
             if kind == "seed":
@@ -144,9 +168,14 @@ class FaultPlan:
             c = _Clause(kind=kind, at=kw.get("at", 0),
                         times=kw.get("times", 1), slot=kw.get("slot"),
                         handoff=kw.get("handoff", 0),
-                        seconds=kw.get("s", 0.0), p=kw.get("p", 1.0))
+                        seconds=kw.get("s", 0.0), p=kw.get("p", 1.0),
+                        count=kw.get("count", 0), plen=kw.get("plen", 8),
+                        new=kw.get("new", 4), cls=kw.get("cls", "standard"),
+                        every=kw.get("every", 0))
             if kind == "poison" and c.slot is None:
                 raise ValueError(f"poison clause needs slot= in {part!r}")
+            if kind == "burst" and c.count <= 0:
+                raise ValueError(f"burst clause needs count= in {part!r}")
             clauses.append(c)
         return cls(clauses, seed=seed)
 
@@ -198,6 +227,26 @@ class FaultPlan:
                     out = np.array(toks)
                 out[max(0, c.at - base_step), c.slot] = POISON_TOKEN
         return out
+
+    def burst(self, step: int) -> List[tuple]:
+        """Consulted at each serving-round start; returns a list of
+        ``(count, plen, max_new, cls, fire_step)`` burst specs due now.
+
+        A clause's i-th fire (0-based) is due once ``step >= at + i *
+        every``; ``times`` bounds total fires.  ``fire_step`` is the step
+        the fire was *scheduled* for (not the observed step), so prompt
+        synthesis seeded by it is identical run-to-run even if rounds
+        land on slightly different step indices."""
+        due = []
+        for c in self.clauses:
+            if c.kind != "burst":
+                continue
+            while c.times > 0 and step >= c.at + c.fired * max(0, c.every):
+                due.append((c.count, max(2, c.plen), max(1, c.new),
+                            c.cls, c.at + c.fired * max(0, c.every)))
+                c.fired += 1
+                c.times -= 1
+        return due
 
     def deny_alloc(self, step: int) -> bool:
         """True when an allocation at ``step`` should report exhaustion."""

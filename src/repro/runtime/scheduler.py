@@ -32,6 +32,18 @@ Arrivals are measured on a virtual clock of *decode steps* so schedules are
 deterministic and testable: a request with ``arrival_step=s`` becomes
 admissible once ``s`` decode steps have executed.  ``WaveScheduler`` ignores
 arrivals (it drains whatever is queued) — it is the pessimistic baseline.
+
+**Priority classes & overload.**  Every request carries a priority class —
+``interactive`` | ``standard`` | ``batch`` — with an optional per-class
+per-token SLO target.  Admission orders arrivals by class (stable within a
+class, so FIFO and preemption's requeue-at-head survive), a configurable
+slot/block quota can be held back for ``interactive``, preemption evicts
+the lowest-class-youngest victim, and an optional degradation controller
+(``runtime/overload.py``) sheds ``batch`` / suspends spec decode / tightens
+the admission window under sustained overload, restoring in reverse with
+hysteresis.  Every lever changes *which* requests run and *when* — never
+their tokens: admitted survivors' greedy streams stay bit-identical to an
+unloaded run.
 """
 from __future__ import annotations
 
@@ -66,6 +78,21 @@ def percentile_summary(vals) -> Optional[Dict[str, float]]:
     }
 
 
+# Priority classes, best first.  Rank 0 (interactive) admits first, is
+# never shed by the degradation ladder, and is protected by the reserve
+# quotas; rank 2 (batch) is shed first and preempted first.
+PRIORITY_CLASSES = ("interactive", "standard", "batch")
+PRIORITY_RANK = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
+
+
+def _check_priority(priority: str) -> str:
+    if priority not in PRIORITY_RANK:
+        raise ValueError(
+            f"unknown priority class {priority!r}; expected one of "
+            f"{PRIORITY_CLASSES}")
+    return priority
+
+
 @dataclass
 class Request:
     rid: int
@@ -84,6 +111,12 @@ class Request:
     # the request with finish_reason "timeout" (keeping tokens emitted so
     # far) once it expires — queued, mid-prefill, or mid-decode alike
     deadline_s: Optional[float] = None
+    # priority class (PRIORITY_CLASSES): drives admission order, the
+    # interactive reserve quotas, preemption victim choice, and which
+    # requests the degradation ladder sheds.  "shed" joins the
+    # finish_reason vocabulary: retired at admission under overload,
+    # empty output, never held a slot.
+    priority: str = "standard"
 
 
 class WaveScheduler:
@@ -96,11 +129,15 @@ class WaveScheduler:
         self._next_id = 0
 
     def submit(self, prompt: np.ndarray, max_new: int,
-               eos_id: Optional[int] = None, arrival_step: int = 0) -> int:
+               eos_id: Optional[int] = None, arrival_step: int = 0,
+               priority: str = "standard") -> int:
         rid = self._next_id
         self._next_id += 1
+        # wave mode records the class for reporting but schedules blind:
+        # it is the pessimistic baseline on purpose
         self.queue.append(Request(rid, np.asarray(prompt), max_new, eos_id,
-                                  arrival_step))
+                                  arrival_step,
+                                  priority=_check_priority(priority)))
         return rid
 
     def _form_wave(self) -> List[Request]:
@@ -226,7 +263,11 @@ class ContinuousScheduler:
                  overlap: Optional[bool] = None,
                  fault_plan: Optional[str] = None,
                  max_step_retries: Optional[int] = None,
-                 retry_backoff_s: Optional[float] = None):
+                 retry_backoff_s: Optional[float] = None,
+                 slo_targets: Optional[Dict[str, float]] = None,
+                 reserve_slots: Optional[int] = None,
+                 reserve_blocks: Optional[int] = None,
+                 overload_opts: Optional[Dict] = None):
         if engine.cfg.n_codebooks != 1:
             raise NotImplementedError(
                 "ContinuousScheduler serves single-codebook archs "
@@ -364,11 +405,54 @@ class ContinuousScheduler:
         # emitted tokens per (engine step, active slot): 1 for plain masked
         # decode, 1..spec_k+1 under speculative decoding
         self._tps: "deque[int]" = deque(maxlen=65536)
+        # overload resilience: per-class per-token SLO targets, the
+        # interactive reserve quotas (slots here; blocks read by the paged
+        # backend), and the graceful-degradation controller.  Constructor
+        # args override ParallelConfig; ``overload_opts`` merges over the
+        # config-derived controller knobs (and its "enabled" key can turn
+        # the controller on for a single scheduler on a shared engine).
+        self.slo_targets = {"interactive": par.slo_interactive_s,
+                            "standard": par.slo_standard_s,
+                            "batch": par.slo_batch_s}
+        if slo_targets:
+            self.slo_targets.update(slo_targets)
+        self.reserve_slots = int(par.interactive_reserve_slots
+                                 if reserve_slots is None else reserve_slots)
+        self.reserve_blocks = int(par.interactive_reserve_blocks
+                                  if reserve_blocks is None
+                                  else reserve_blocks)
+        opts = {"enabled": par.overload_degrade,
+                "queue_hi": par.overload_queue_hi,
+                "queue_lo": par.overload_queue_lo,
+                "slo_s": float(self.slo_targets.get("interactive") or 0.0),
+                "itl_hi": par.overload_itl_hi,
+                "itl_lo": par.overload_itl_lo,
+                "patience": par.overload_patience,
+                "cooldown": par.overload_cooldown}
+        opts.update(overload_opts or {})
+        self.overload_ctl = None
+        if opts.pop("enabled"):
+            if opts["queue_hi"] <= 0:
+                opts["queue_hi"] = 2 * n_slots
+            if opts["queue_lo"] <= 0:
+                opts["queue_lo"] = max(1, n_slots // 2)
+            opts["queue_lo"] = min(opts["queue_lo"], opts["queue_hi"])
+            from repro.runtime.overload import OverloadController
+            self.overload_ctl = OverloadController(**opts)
+        self.stats["classes"] = {c: {"served": 0, "shed": 0, "timeout": 0,
+                                     "error": 0} for c in PRIORITY_CLASSES}
+        self.stats.update({"burst_injected": 0, "overload_transitions": 0,
+                           "spec_off_rounds": 0})
+        # recent landed per-step ITL window the controller reads (wall
+        # clock — advisory next to the deterministic queue-depth signal)
+        self._itl_recent: "deque[float]" = deque(
+            maxlen=(self.overload_ctl.window if self.overload_ctl else 32))
 
     # -- submission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
                eos_id: Optional[int] = None, arrival_step: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               priority: str = "standard") -> int:
         prompt = np.asarray(prompt)
         if len(prompt) + max_new > self.engine.max_len:
             raise ValueError(
@@ -384,7 +468,8 @@ class ContinuousScheduler:
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, prompt, max_new, eos_id, arrival_step,
-                                  deadline_s=deadline_s))
+                                  deadline_s=deadline_s,
+                                  priority=_check_priority(priority)))
         if deadline_s is not None:
             self._has_deadlines = True
         return rid
@@ -404,6 +489,36 @@ class ContinuousScheduler:
         for rec in self._pipeline:
             m |= rec.active
         return m
+
+    def _finish(self, r: Request) -> None:
+        """The single retirement funnel: every path that moves a request to
+        ``done`` (retire, quarantine, deadline expiry, admission shed,
+        landing abort) routes here so the per-class counters and the
+        frontend's ``on_finish`` hook can never drift apart.
+
+        ``finished_step`` stamps retirement on the virtual decode-step
+        clock — with arrival_step it gives a latency measure that is
+        exactly reproducible run to run (the SLO bench compares scheduling
+        policies on it, free of wall-clock noise)."""
+        r.stats["finished_step"] = self.step_count
+        buckets = self.stats["classes"].setdefault(
+            r.priority, {"served": 0, "shed": 0, "timeout": 0, "error": 0})
+        fr = r.finish_reason or "length"
+        buckets["served" if fr in ("stop", "length")
+                else fr if fr in ("shed", "timeout") else "error"] += 1
+        self.done.append(r)
+        if self.on_finish is not None:
+            self.on_finish(r)
+
+    def _shed_request(self, r: Request) -> None:
+        """Admission-time load shed (degradation lever): the queued request
+        retires immediately with finish_reason "shed" and an empty output —
+        it never held a slot, so no stream or pool state is touched."""
+        r.output = np.zeros((0,), np.int32)
+        r.finish_reason = "shed"
+        r.stats.update({"emitted": 0, "finished_at": time.monotonic()})
+        self.stats["shed_requests"] += 1
+        self._finish(r)
 
     def _retire(self) -> None:
         now = time.monotonic()
@@ -426,10 +541,8 @@ class ContinuousScheduler:
                     "finished_at": now,
                     "decode_steps_held": self.step_count - s.admitted_step,
                 })
-                self.done.append(r)
                 self.slots[i] = _Slot()
-                if self.on_finish is not None:
-                    self.on_finish(r)
+                self._finish(r)
 
     def _bucket(self, plen: int) -> int:
         """Pow-2 prompt bucket — FALLBACK-ARCH whole-prompt admission only
@@ -462,12 +575,54 @@ class ContinuousScheduler:
         the prefill pool; landings fill decode-pool slots directly)."""
         return [i for i, s in enumerate(self.slots) if s.req is None]
 
+    def _admissible(self) -> List[Request]:
+        """Arrived queue entries in class-aware order.  Classes the
+        degradation ladder is shedding retire immediately (finish_reason
+        "shed"); the rest sort STABLY by priority rank — interactive first
+        — so FIFO order (and preemption's requeue-at-head) is preserved
+        within each class."""
+        arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
+        ctl = self.overload_ctl
+        if ctl is not None and ctl.shed_classes and arrived:
+            for r in [r for r in arrived if r.priority in ctl.shed_classes]:
+                self.queue.remove(r)
+                self._shed_request(r)
+            arrived = [r for r in arrived
+                       if r.priority not in ctl.shed_classes]
+        arrived.sort(key=lambda r: PRIORITY_RANK[r.priority])
+        return arrived
+
+    def _admission_quota(self, n_free: int) -> int:
+        """Admissions allowed this round: the free-slot count, tightened to
+        the degradation ladder's cap on CONCURRENT admissions (counting
+        slots still mid-chunk-prefill) at tight-admission."""
+        ctl = self.overload_ctl
+        if ctl is not None and ctl.admission_cap is not None:
+            n_free = min(n_free,
+                         max(0, ctl.admission_cap - len(self._prefilling())))
+        return n_free
+
     def _admit(self) -> int:
         free = self._free_slots()
-        arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
+        arrived = self._admissible()
         if not free or not arrived:
             return 0
-        chosen = arrived[: len(free)]
+        # class-ordered selection; non-interactive requests may not eat
+        # into the interactive slot reserve.  Arrivals are class-sorted, so
+        # the first refusal ends the scan (everything after is the same
+        # class or lower — no reordering under pressure beyond class rank).
+        quota = self._admission_quota(len(free))
+        chosen: List[Request] = []
+        left = len(free)
+        for r in arrived:
+            if len(chosen) >= quota:
+                break
+            if r.priority != "interactive" and left <= self.reserve_slots:
+                break
+            chosen.append(r)
+            left -= 1
+        if not chosen:
+            return 0
         for r in chosen:
             self.queue.remove(r)
         in_flight = any(s.req is not None
@@ -785,6 +940,7 @@ class ContinuousScheduler:
         now = time.monotonic()
         if self._last_step_t is not None:
             dt = (now - self._last_step_t) / n
+            self._itl_recent.append(dt)
             if tokens_per_slot is None:
                 m = n if emissions is None else emissions
                 self._itl.extend([(dt, self._admission_mark)] * m)
@@ -841,11 +997,9 @@ class ContinuousScheduler:
             self._exact_rem[i] = 0
         self.stats["timeouts" if finish_reason == "timeout"
                    else "quarantined"] += 1
-        self.done.append(r)
         if self.faults:
             self.faults.on_quarantine(i)
-        if self.on_finish is not None:
-            self.on_finish(r)
+        self._finish(r)
 
     def _fault_dispatch(self) -> None:
         """Installed as ``Engine.dispatch_hook`` when a fault plan is
@@ -910,13 +1064,69 @@ class ContinuousScheduler:
             r.output = np.zeros((0,), np.int32)
             r.finish_reason = "timeout"
             r.stats.update({"emitted": 0, "finished_at": now})
-            self.done.append(r)
             self.stats["timeouts"] += 1
-            if self.on_finish is not None:
-                self.on_finish(r)
+            self._finish(r)
         for i, s in enumerate(self.slots):
             if s.req is not None and late(s.req):
                 self._quarantine_slot(i, "timeout")
+
+    # -- overload resilience (burst injection + degradation ladder) ---------
+    def _inject_bursts(self) -> None:
+        """Submit the fault plan's due ``burst:`` clauses: deterministic
+        synthetic load (prompts seeded by the scheduled fire step) arriving
+        NOW on the virtual clock — the reproducible overload wave the
+        degradation tests ride."""
+        for count, plen, max_new, cls, fire_step in \
+                self.faults.burst(self.step_count):
+            rng = np.random.default_rng(0xB0057 + fire_step)
+            plen = min(plen, self.prompt_limit,
+                       max(2, self.engine.max_len - max_new))
+            for _ in range(count):
+                self.submit(rng.integers(0, self.vocab, plen,
+                                         dtype=np.int32),
+                            max_new, arrival_step=self.step_count,
+                            priority=cls)
+                self.stats["burst_injected"] += 1
+
+    def _overload_observe(self) -> None:
+        """One controller observation per round: arrived-queue depth (the
+        deterministic primary signal) plus the recent landed per-step ITL
+        window (advisory, SLO-scaled)."""
+        ctl = self.overload_ctl
+        depth = sum(1 for r in self.queue
+                    if r.arrival_step <= self.step_count)
+        recent = (float(np.mean(self._itl_recent))
+                  if self._itl_recent else None)
+        before = ctl.level
+        ctl.observe(depth, recent)
+        if ctl.level != before:
+            self.stats["overload_transitions"] += 1
+
+    def _round_prologue(self) -> None:
+        """Shared head of every serving round (unified and disagg): burst
+        injection, deadline expiry, then one degradation-controller
+        observation."""
+        if self.faults:
+            self._inject_bursts()
+        if self._has_deadlines:
+            self._expire_deadlines()
+        if self.overload_ctl is not None:
+            self._overload_observe()
+
+    def _spec_suspended(self) -> bool:
+        """True while the degradation ladder has turned spec decode off
+        (level 2+).  Safe lever: greedy spec decode is token-identical to
+        plain decode, so suspension changes speed, never streams."""
+        ctl = self.overload_ctl
+        if ctl is not None and ctl.spec_off:
+            self.stats["spec_off_rounds"] += 1
+            return True
+        return False
+
+    def overload_level(self) -> int:
+        """Current degradation-ladder level (0 = normal / controller off);
+        the frontend's ``/health`` surfaces this."""
+        return 0 if self.overload_ctl is None else self.overload_ctl.level
 
     # -- speculative decoding (fused multi-token verify steps) -------------
     def _active_slots(self) -> List[int]:
@@ -1193,7 +1403,55 @@ class ContinuousScheduler:
                  "aborts_exhaustion", "livelock_aborts", "migration_faults")
         if any(self.stats.get(k) for k in fkeys):
             out["faults"] = {k: self.stats.get(k, 0) for k in fkeys}
+        classes = self._class_summary()
+        if classes:
+            out["classes"] = classes
+        if self.overload_ctl is not None:
+            out["overload"] = self.overload_ctl.summary()
         return out
+
+    def _class_summary(self) -> Dict:
+        """Per-priority-class latency breakdown over the completed set:
+        outcome counters, TTFT percentiles, per-request decode ITL
+        percentiles (token cadence between first emission and completion),
+        and — when the class carries an SLO target — the attainment
+        fraction: completed requests (finish_reason stop/length) whose
+        per-token latency ``(finished_at - submitted_at) / emitted`` met
+        the target, over ALL retired requests of the class, so shed and
+        timed-out requests count against attainment."""
+        counters = self.stats.get("classes", {})
+        classes: Dict = {}
+        for cls in PRIORITY_CLASSES:
+            recs = [r for r in self.done if r.priority == cls]
+            counts = counters.get(cls, {})
+            if not recs and not any(counts.values()):
+                continue
+            entry: Dict = {"requests": len(recs)}
+            entry.update(counts)
+            s = percentile_summary(r.stats["ttft_s"] for r in recs
+                                   if "ttft_s" in r.stats)
+            if s is not None:
+                entry["ttft_s"] = s
+            s = percentile_summary(
+                (r.stats["finished_at"] - r.submitted_at - r.stats["ttft_s"])
+                / (r.stats["emitted"] - 1)
+                for r in recs
+                if r.stats.get("emitted", 0) >= 2 and "ttft_s" in r.stats
+                and "finished_at" in r.stats)
+            if s is not None:
+                entry["itl_s"] = s
+            target = float(self.slo_targets.get(cls) or 0.0)
+            if target > 0 and recs:
+                ok = sum(1 for r in recs
+                         if r.finish_reason in ("stop", "length")
+                         and r.stats.get("emitted", 0) > 0
+                         and "finished_at" in r.stats
+                         and (r.stats["finished_at"] - r.submitted_at)
+                         / r.stats["emitted"] <= target)
+                entry["slo_target_s"] = target
+                entry["slo_attainment"] = ok / len(recs)
+            classes[cls] = entry
+        return classes
 
     def _init_caches(self) -> None:
         self.caches = self.engine.init_slot_caches(self.B)
@@ -1210,8 +1468,7 @@ class ContinuousScheduler:
         block's device futures, THEN land the older block — np.asarray
         waits only for a block whose successor is already queued on the
         device."""
-        if self._has_deadlines:
-            self._expire_deadlines()
+        self._round_prologue()
         if self._pipeline and any(r.arrival_step <= self.step_count
                                   for r in self.queue):
             # an arrival could admit once done slots retire: land first so
@@ -1239,7 +1496,7 @@ class ContinuousScheduler:
             # idle: jump the virtual clock to the next arrival
             self.step_count = max(self.step_count, min(pending))
             return True
-        if self.spec_k:
+        if self.spec_k and not self._spec_suspended():
             # the drafter consumes the previous step's landed tokens, so
             # spec verify steps cannot dispatch ahead — they run blocking
             self._drain_pipeline()
@@ -1318,6 +1575,10 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  fault_plan: Optional[str] = None,
                  max_step_retries: Optional[int] = None,
                  retry_backoff_s: Optional[float] = None,
+                 slo_targets: Optional[Dict[str, float]] = None,
+                 reserve_slots: Optional[int] = None,
+                 reserve_blocks: Optional[int] = None,
+                 overload_opts: Optional[Dict] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
@@ -1325,7 +1586,9 @@ class PagedContinuousScheduler(ContinuousScheduler):
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
                          spec_k, spec_ngram, overlap, fault_plan,
-                         max_step_retries, retry_backoff_s)
+                         max_step_retries, retry_backoff_s,
+                         slo_targets, reserve_slots, reserve_blocks,
+                         overload_opts)
         cfg = engine.cfg
         if cfg.window and "local_attn" in cfg.layer_pattern:
             raise ValueError(
@@ -1372,7 +1635,8 @@ class PagedContinuousScheduler(ContinuousScheduler):
 
     def submit(self, prompt: np.ndarray, max_new: int,
                eos_id: Optional[int] = None, arrival_step: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               priority: str = "standard") -> int:
         prompt = np.asarray(prompt)
         need = -(-(len(prompt) + max_new) // self.bs)
         usable = self.alloc.blocks_per_shard - 1
@@ -1380,7 +1644,7 @@ class PagedContinuousScheduler(ContinuousScheduler):
             raise ValueError(
                 f"request needs {need} blocks > per-shard pool {usable}")
         return super().submit(prompt, max_new, eos_id, arrival_step,
-                              deadline_s)
+                              deadline_s, priority)
 
     def _init_caches(self) -> None:
         self.caches = self.engine.init_paged_caches(
@@ -1403,15 +1667,19 @@ class PagedContinuousScheduler(ContinuousScheduler):
         super()._retire()
 
     def _preempt_youngest(self, shard: int) -> bool:
-        """Evict the most recently admitted running request on ``shard``:
-        free its blocks, requeue it (recompute on readmission) at the queue
-        head.  Its generated-so-far tokens are DISCARDED (recompute restarts
-        from the prompt): the emitted counter rolls back, and streaming
-        clients are told via ``on_preempt(rid)`` to drop what they buffered
-        for that request — under stochastic sampling the regenerated stream
-        need not match the discarded one.  Mid-chunk-prefill slots are also
-        candidates (they hold blocks but have emitted nothing); their chunk
-        progress is simply dropped with the slot."""
+        """Evict the LOWEST-PRIORITY, most recently admitted running
+        request on ``shard`` (victim key: worst class rank, then youngest
+        admission, then highest rid — the method keeps its historical name;
+        with a single class it degenerates to exactly the old
+        youngest-first rule): free its blocks, requeue it (recompute on
+        readmission) at the queue head.  Its generated-so-far tokens are
+        DISCARDED (recompute restarts from the prompt): the emitted counter
+        rolls back, and streaming clients are told via ``on_preempt(rid)``
+        to drop what they buffered for that request — under stochastic
+        sampling the regenerated stream need not match the discarded one.
+        Mid-chunk-prefill slots are also candidates (they hold blocks but
+        have emitted nothing); their chunk progress is simply dropped with
+        the slot."""
         if self._pipeline:
             # never pick a victim under an unlanded block: its in-flight
             # emissions would replay into a cleared slot, and the evicted
@@ -1423,8 +1691,10 @@ class PagedContinuousScheduler(ContinuousScheduler):
                      or s.chunk_next is not None)]
         if not cand:
             return False
-        i = max(cand, key=lambda j: (self.slots[j].admitted_step,
-                                     self.slots[j].req.rid))
+        i = max(cand,
+                key=lambda j: (PRIORITY_RANK[self.slots[j].req.priority],
+                               self.slots[j].admitted_step,
+                               self.slots[j].req.rid))
         req = self.slots[i].req
         self.stats["emitted"] -= len(self.slots[i].toks)
         self._release_slot(i)
@@ -1503,19 +1773,30 @@ class PagedContinuousScheduler(ContinuousScheduler):
     # -- admission --------------------------------------------------------
     def _admit(self) -> int:
         free = self._free_slots()
-        arrived = [r for r in self.queue if r.arrival_step <= self.step_count]
+        arrived = self._admissible()
         if not free or not arrived:
             return 0
         in_flight = any(s.req is not None
                         and (not self.dones[i] or s.chunk_next is not None)
                         for i, s in enumerate(self.slots))
-        # block-aware selection: FIFO over arrivals, stop at the first
-        # request whose blocks don't fit (no reordering under pressure)
+        # block-aware selection: class-ordered arrivals (interactive first,
+        # FIFO within a class), stop at the first request whose blocks —
+        # or whose claim on the interactive slot/block reserves — don't
+        # fit.  Arrivals are class-sorted, so stopping never starves a
+        # higher class behind a refused lower one, and the (request, slot)
+        # zip pairing stays aligned for the assignment below.
+        quota = self._admission_quota(len(free))
         chosen, starts_of = [], {}
+        left = len(free)
         for r, slot in zip(arrived, free):
+            if len(chosen) >= quota:
+                break
+            if r.priority != "interactive" and left <= self.reserve_slots:
+                break
             if not self.has_attn:   # recurrent-only: no pools to reserve
                 starts_of[r.rid] = 0
                 chosen.append(r)
+                left -= 1
                 continue
             shard = self._shard_of(slot)
             plen = len(r.prompt)
@@ -1526,6 +1807,12 @@ class PagedContinuousScheduler(ContinuousScheduler):
                     shared = shared[:-1]
                     n_cached -= self.bs
             need = -(-plen // self.bs) - len(shared)
+            if (r.priority != "interactive"
+                    and self.alloc.free_count(shard) - need
+                    < self.reserve_blocks):
+                # the blocks exist but are held for interactive admissions
+                self.stats["deferred_admissions"] += 1
+                break
             fresh = self.alloc.alloc(shard, need)
             if fresh is None:
                 self.stats["deferred_admissions"] += 1
@@ -1539,6 +1826,7 @@ class PagedContinuousScheduler(ContinuousScheduler):
             self.bt[slot, :len(blocks)] = blocks
             starts_of[r.rid] = n_cached
             chosen.append(r)
+            left -= 1
         if not chosen:
             return 0
         self._note_usage()
@@ -1732,6 +2020,10 @@ class DisaggScheduler(PagedContinuousScheduler):
                  fault_plan: Optional[str] = None,
                  max_step_retries: Optional[int] = None,
                  retry_backoff_s: Optional[float] = None,
+                 slo_targets: Optional[Dict[str, float]] = None,
+                 reserve_slots: Optional[int] = None,
+                 reserve_blocks: Optional[int] = None,
+                 overload_opts: Optional[Dict] = None,
                  *, block_size: Optional[int] = None,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
@@ -1752,6 +2044,8 @@ class DisaggScheduler(PagedContinuousScheduler):
                          responsive_blocks, on_token, prefill_chunk,
                          spec_k, spec_ngram, overlap, fault_plan,
                          max_step_retries, retry_backoff_s,
+                         slo_targets, reserve_slots, reserve_blocks,
+                         overload_opts,
                          block_size=block_size,
                          n_blocks=n_blocks, prefix_cache=prefix_cache,
                          on_preempt=on_preempt)
@@ -2086,12 +2380,10 @@ class DisaggScheduler(PagedContinuousScheduler):
             r.stats["error"] = error
         r.stats.update({"emitted": len(rec["toks"]),
                         "finished_at": time.monotonic()})
-        self.done.append(r)
         self.stats["timeouts" if finish_reason == "timeout"
                    else "quarantined"] += 1
         self._note_usage()
-        if self.on_finish is not None:
-            self.on_finish(r)
+        self._finish(r)
 
     def _abort_stuck_entity(self) -> bool:
         """Last-resort livelock escape: abort ONE stuck request so every
@@ -2197,8 +2489,7 @@ class DisaggScheduler(PagedContinuousScheduler):
             from repro.models import transformer as tfm
             self._block_bytes = kvcache.pool_block_bytes(
                 self.caches, tfm.build_groups(self.engine.cfg))
-        if self._has_deadlines:
-            self._expire_deadlines()
+        self._round_prologue()
         if self._pipeline and (self._handoff_ready or self._landing
                                or self._mig_queue):
             # a migration landing rewrites a decode slot's position row on
@@ -2211,7 +2502,7 @@ class DisaggScheduler(PagedContinuousScheduler):
         self._run_migrations()
         n = self._block_size()
         if n:
-            if self.spec_k:
+            if self.spec_k and not self._spec_suspended():
                 self._drain_pipeline()
                 self._try_step(self._spec_step)
             elif self.overlap:

@@ -1,0 +1,387 @@
+"""Overload-resilient serving: priority classes, SLO accounting, and the
+adaptive degradation ladder.
+
+Covers the tentpole end to end: priority validation and class-ordered
+admission, the interactive slot/block reserves, lowest-class-youngest
+preemption (allocator audited after every eviction, requeued streams
+bit-identical to an unconstrained run), the shed-batch -> spec-off ->
+tight-admission ladder engaging AND fully recovering under a synthetic
+``burst:`` fault-plan wave, per-class latency/SLO summaries, and the
+frontend's class-aware inbox (priority displacement with 429 verdicts,
+reserve headroom, per-class /health counters).
+
+The load-bearing invariant throughout: degradation changes WHICH requests
+run and WHEN — admitted survivors' greedy streams stay bit-identical to
+an unloaded run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, SamplingConfig, get_config
+from repro.launch.frontend import EngineService, TokenStream
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.engine import Engine
+from repro.runtime.faults import FaultPlan
+from repro.runtime.overload import LADDER, OverloadController
+from repro.runtime.scheduler import (PRIORITY_CLASSES, PRIORITY_RANK,
+                                     ContinuousScheduler, DisaggScheduler,
+                                     PagedContinuousScheduler)
+
+needs2 = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs 2 devices (JAX_NUM_CPU_DEVICES/XLA_FLAGS)")
+
+
+@pytest.fixture(scope="module")
+def yi_engine():
+    cfg = get_config("yi-9b").reduced()
+    return Engine(cfg=cfg,
+                  parallel=ParallelConfig(tp=1, dp=1, remat=False),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=64)
+
+
+def mixed_requests(cfg, n=10, seed=9, max_new=6):
+    """Deterministic prompts with a fixed class rotation (i, s, b, s, ...)."""
+    rng = np.random.default_rng(seed)
+    rot = ("interactive", "standard", "batch", "standard")
+    return [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(4, 12))).astype(np.int32),
+             max_new, rot[i % len(rot)]) for i in range(n)]
+
+
+def run_mixed(sched, reqs, arrival_every=0):
+    rids = {}
+    for i, (p, mn, cls) in enumerate(reqs):
+        rid = sched.submit(p, mn, arrival_step=i * arrival_every,
+                           priority=cls)
+        rids[rid] = cls
+    return {r.rid: r for r in sched.run()}, rids
+
+
+# -- validation & controller unit behavior ---------------------------------
+
+def test_priority_validation(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    with pytest.raises(ValueError, match="unknown priority class"):
+        sched.submit(np.arange(2, 8, dtype=np.int32), 4, priority="vip")
+    assert PRIORITY_CLASSES == ("interactive", "standard", "batch")
+    assert PRIORITY_RANK["interactive"] < PRIORITY_RANK["batch"]
+
+
+def test_overload_controller_hysteresis():
+    ctl = OverloadController(queue_hi=4, queue_lo=1, patience=2, cooldown=3)
+    # one pressured round is not enough (patience 2)
+    assert ctl.observe(10) == 0
+    assert ctl.observe(10) == 1 and ctl.shed_classes == ("batch",)
+    # dead band holds the level and resets both streaks
+    assert ctl.observe(2) == 1
+    assert ctl.observe(0) == 1 and ctl.observe(0) == 1
+    assert ctl.observe(0) == 0          # third clear round restores
+    for _ in range(8):
+        ctl.observe(10)
+    assert ctl.level == LADDER.index("tight-admission")
+    assert ctl.spec_off and ctl.admission_cap == 1
+    s = ctl.summary()
+    assert s["max_level_name"] == "tight-admission"
+    assert s["escalations"] == 4 and s["restorations"] == 1
+    with pytest.raises(ValueError):
+        OverloadController(queue_hi=1, queue_lo=2)
+
+
+def test_burst_clause_parse_and_schedule():
+    plan = FaultPlan.parse("burst:at=4,count=3,plen=6,new=5,cls=batch,"
+                           "times=2,every=8")
+    assert plan.burst(3) == []
+    assert plan.burst(4) == [(3, 6, 5, "batch", 4)]
+    # second fire is due at at + every, stamped with its SCHEDULED step
+    # even when the observing round lands later
+    assert plan.burst(15) == [(3, 6, 5, "batch", 12)]
+    assert plan.burst(99) == []          # times exhausted
+    with pytest.raises(ValueError, match="burst clause needs count="):
+        FaultPlan.parse("burst:at=4")
+    with pytest.raises(ValueError, match="unknown fault key"):
+        FaultPlan.parse("burst:count=1,nope=2")
+
+
+# -- class-aware admission --------------------------------------------------
+
+def test_admission_prefers_interactive(yi_engine):
+    """With everything arrived at once and 2 slots, both interactive
+    requests are admitted in the first round even though they were
+    submitted LAST."""
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    rng = np.random.default_rng(1)
+    rids = {}
+    for cls in ("batch", "standard", "interactive", "interactive"):
+        p = rng.integers(0, yi_engine.cfg.vocab_size, 6).astype(np.int32)
+        rids[sched.submit(p, 4, priority=cls)] = cls
+    done = {r.rid: r for r in sched.run()}
+    first = {cls for rid, cls in rids.items()
+             if done[rid].stats["admitted_step"] == 0}
+    assert first == {"interactive"}
+    # FIFO preserved within a class: the two interactive keep rid order
+    ia = [done[rid].stats["admitted_step"] for rid, c in rids.items()
+          if c == "interactive"]
+    assert ia == sorted(ia)
+    assert all(r.finish_reason in ("stop", "length") for r in done.values())
+
+
+def test_interactive_reserve_slots(yi_engine):
+    """reserve_slots=1 on 2 slots: only one standard admits up front; the
+    held-back slot serves the interactive arrival immediately."""
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2,
+                                reserve_slots=1)
+    rng = np.random.default_rng(2)
+    p = lambda: rng.integers(0, yi_engine.cfg.vocab_size, 6).astype(np.int32)
+    s1 = sched.submit(p(), 8, priority="standard")
+    s2 = sched.submit(p(), 8, priority="standard")
+    it = sched.submit(p(), 4, arrival_step=2, priority="interactive")
+    done = {r.rid: r for r in sched.run()}
+    assert done[s1].stats["admitted_step"] == 0
+    assert done[it].stats["admitted_step"] <= 4
+    # the second standard had to wait for a slot to FREE, not just for its
+    # arrival: it admits strictly after the interactive request
+    assert (done[s2].stats["admitted_step"]
+            > done[it].stats["admitted_step"])
+    assert all(r.finish_reason in ("stop", "length") for r in done.values())
+
+
+# -- preemption priority + audit + identity --------------------------------
+
+def test_preempt_victims_lowest_class_youngest_first(yi_engine):
+    """Overcommitted paged pool with mixed classes: every preemption victim
+    is the worst-class / youngest-admission running request (never
+    interactive while a batch slot exists), the allocator audits clean
+    after every eviction, and every request's final stream is bit-identical
+    to an uncontended run."""
+    reqs = mixed_requests(yi_engine.cfg, n=8, seed=7, max_new=8)
+    big = PagedContinuousScheduler(yi_engine, n_slots=3, block_steps=2,
+                                   block_size=4, prefix_cache=False)
+    ref, _ = run_mixed(big, reqs, arrival_every=2)
+
+    sched = PagedContinuousScheduler(yi_engine, n_slots=3, block_steps=2,
+                                     block_size=4, n_blocks=12,
+                                     prefix_cache=False)
+    victims = []
+    orig = sched._preempt_youngest
+
+    def spy(shard):
+        running = {i: (PRIORITY_RANK[s.req.priority], s.admitted_step,
+                       s.req.rid)
+                   for i, s in enumerate(sched.slots)
+                   if s.req is not None and sched._shard_of(i) == shard
+                   and ((not sched.dones[i] and sched.remaining[i] > 0)
+                        or s.chunk_next is not None)}
+        before = {i: s.req.rid if s.req else None
+                  for i, s in enumerate(sched.slots)}
+        ok = orig(shard)
+        if ok:
+            evicted = [i for i, s in enumerate(sched.slots)
+                       if before[i] is not None
+                       and (s.req is None or s.req.rid != before[i])]
+            assert len(evicted) == 1
+            victims.append((running, running[evicted[0]]))
+            sched.alloc.audit(expect_no_migration=True)
+        return ok
+
+    sched._preempt_youngest = spy
+    done, rids = run_mixed(sched, reqs, arrival_every=2)
+    assert sched.stats["preemptions"] >= 1
+    for running, chosen in victims:
+        assert chosen == max(running.values()), \
+            "victim was not the lowest-class, youngest running request"
+    sched.alloc.audit(expect_no_migration=True)
+    # requeue-recompute preserves every greedy stream exactly
+    for rid, r in done.items():
+        assert r.finish_reason in ("stop", "length")
+        np.testing.assert_array_equal(r.output, ref[rid].output)
+
+
+# -- degradation ladder ----------------------------------------------------
+
+def test_ladder_sheds_batch_and_recovers(yi_engine):
+    """A burst: fault-plan wave drives the queue past the threshold; the
+    ladder engages, batch is shed at admission, and once the wave drains
+    the ladder walks all the way back to normal."""
+    sched = ContinuousScheduler(
+        yi_engine, n_slots=2, block_steps=2,
+        fault_plan="burst:at=2,count=8,cls=batch,new=4",
+        overload_opts={"enabled": True, "queue_hi": 4, "queue_lo": 1,
+                       "patience": 1, "cooldown": 2})
+    rng = np.random.default_rng(5)
+    keep = [sched.submit(rng.integers(0, yi_engine.cfg.vocab_size, 6)
+                         .astype(np.int32), 10, arrival_step=4 * i,
+                         priority="interactive") for i in range(6)]
+    done = {r.rid: r for r in sched.run()}
+    st = sched.stats
+    assert st["burst_injected"] == 8
+    assert st["classes"]["batch"]["shed"] >= 1
+    assert st["classes"]["interactive"]["shed"] == 0
+    ov = sched.request_summary()["overload"]
+    assert ov["max_level"] >= 1, "ladder never engaged"
+    assert ov["level"] == 0, "ladder did not restore to normal"
+    assert ov["escalations"] >= 1 and ov["restorations"] >= 1
+    assert st["overload_transitions"] == ov["transitions"]
+    for rid in keep:
+        assert done[rid].finish_reason in ("stop", "length")
+
+
+def test_burst_injection_deterministic(yi_engine):
+    """Two runs of the same burst plan inject bit-identical traffic."""
+    outs = []
+    for _ in range(2):
+        sched = ContinuousScheduler(
+            yi_engine, n_slots=2, block_steps=2,
+            fault_plan="burst:at=0,count=3,plen=6,new=5,cls=standard")
+        sched.submit(np.arange(2, 8, dtype=np.int32), 4)
+        done = sched.run()
+        assert sched.stats["burst_injected"] == 3
+        outs.append({r.rid: r.output for r in done})
+    assert sorted(outs[0]) == sorted(outs[1])
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[0][rid], outs[1][rid])
+
+
+def test_spec_off_lever_token_identical(yi_engine):
+    """Force the ladder to spec-off while speculative decoding is on: the
+    lever must fire (spec_off_rounds > 0) without changing any stream
+    relative to a plain unloaded run."""
+    reqs = mixed_requests(yi_engine.cfg, n=8, seed=3, max_new=8)
+    reqs = [(p, mn, "interactive") for p, mn, _ in reqs]  # nothing shed
+    plain = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    ref, _ = run_mixed(plain, reqs)
+    sched = ContinuousScheduler(
+        yi_engine, n_slots=2, block_steps=2, spec_k=2,
+        overload_opts={"enabled": True, "queue_hi": 2, "queue_lo": 1,
+                       "patience": 1, "cooldown": 1})
+    done, _ = run_mixed(sched, reqs)
+    assert sched.stats["spec_off_rounds"] > 0
+    assert sched.request_summary()["overload"]["max_level"] >= 2
+    for rid, r in done.items():
+        np.testing.assert_array_equal(r.output, ref[rid].output)
+
+
+def test_overlap_degradation_identity(yi_engine):
+    """Ladder + priorities under the overlapped engine loop: survivors stay
+    bit-identical to a blocking unloaded run."""
+    reqs = mixed_requests(yi_engine.cfg, n=10, seed=6, max_new=6)
+    plain = ContinuousScheduler(yi_engine, n_slots=4, block_steps=2)
+    ref, _ = run_mixed(plain, reqs, arrival_every=4)
+    sched = ContinuousScheduler(
+        yi_engine, n_slots=2, block_steps=2, overlap=True, reserve_slots=1,
+        overload_opts={"enabled": True, "queue_hi": 3, "queue_lo": 1,
+                       "patience": 1, "cooldown": 2})
+    done, rids = run_mixed(sched, reqs)
+    assert sched.request_summary()["overload"]["max_level"] >= 1
+    survivors = [rid for rid, r in done.items()
+                 if r.finish_reason in ("stop", "length")]
+    assert survivors, "everything was shed"
+    for rid in survivors:
+        np.testing.assert_array_equal(done[rid].output, ref[rid].output)
+    shed = [rid for rid, r in done.items() if r.finish_reason == "shed"]
+    assert all(rids[rid] == "batch" for rid in shed)
+
+
+# -- per-class telemetry ---------------------------------------------------
+
+def test_class_summary_and_slo_attainment(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=3, block_steps=2,
+                                slo_targets={"interactive": 60.0,
+                                             "batch": 1e-9})
+    done, rids = run_mixed(sched, mixed_requests(yi_engine.cfg, n=8))
+    classes = sched.request_summary()["classes"]
+    for cls in PRIORITY_CLASSES:
+        n = sum(1 for c in rids.values() if c == cls)
+        assert classes[cls]["requests"] == n
+        assert classes[cls]["served"] == n
+        assert classes[cls]["itl_s"]["p50"] > 0.0
+        assert classes[cls]["ttft_s"]["p95"] >= classes[cls]["ttft_s"]["p50"]
+    # a 60 s/token target is unmissable; a 1 ns target unmeetable
+    assert classes["interactive"]["slo_attainment"] == 1.0
+    assert classes["batch"]["slo_attainment"] == 0.0
+    assert "slo_target_s" not in classes["standard"]
+    # stats counters mirror the summary
+    assert sched.stats["classes"]["interactive"]["served"] == \
+        classes["interactive"]["served"]
+
+
+# -- frontend class-aware inbox --------------------------------------------
+
+class _Loop:
+    """Minimal stand-in for the asyncio loop TokenStream schedules onto."""
+
+    def call_soon_threadsafe(self, fn, *a):
+        fn(*a)
+
+
+def test_frontend_priority_displacement_and_reserve(yi_engine):
+    sched = ContinuousScheduler(yi_engine, n_slots=2, block_steps=2)
+    svc = EngineService(sched, max_pending=2, pending_reserve=1)
+    # worker NOT started: submissions stay queued in the inbox
+    prompt = [2, 3, 4, 5]
+    streams = [TokenStream(_Loop()) for _ in range(4)]
+    assert svc.try_submit(prompt, 4, None, streams[0],
+                          priority="batch") == "ok"
+    # the reserve keeps the last inbox slot for interactive
+    assert svc.try_submit(prompt, 4, None, streams[1],
+                          priority="standard") == "shed"
+    assert svc.try_submit(prompt, 4, None, streams[1],
+                          priority="interactive") == "ok"
+    # full inbox: a newcomer displaces the strictly lower batch entry...
+    assert svc.try_submit(prompt, 4, None, streams[2],
+                          priority="standard") == "ok"
+    assert streams[0].error is not None
+    assert streams[0].error_status.startswith("429")
+    assert streams[0].error_type == "overloaded_error"
+    # ...but an equal-or-lower newcomer is shed, not a displacer
+    assert svc.try_submit(prompt, 4, None, streams[3],
+                          priority="standard") == "shed"
+    assert sched.stats["classes"]["batch"]["shed"] == 1
+    assert sched.stats["classes"]["standard"]["shed"] == 2
+    assert sched.stats["shed_requests"] == 3
+
+
+def test_frontend_batch_door_shed_under_degradation(yi_engine):
+    sched = ContinuousScheduler(
+        yi_engine, n_slots=2, block_steps=2,
+        overload_opts={"enabled": True, "queue_hi": 1, "queue_lo": 1,
+                       "patience": 1, "cooldown": 1})
+    sched.overload_ctl.observe(5)          # force level 1 (shed-batch)
+    assert sched.overload_level() == 1
+    svc = EngineService(sched, max_pending=8)
+    s = TokenStream(_Loop())
+    assert svc.try_submit([2, 3, 4], 4, None, s, priority="batch") == "shed"
+    assert svc.try_submit([2, 3, 4], 4, None, s,
+                          priority="interactive") == "ok"
+    assert sched.stats["classes"]["batch"]["shed"] == 1
+
+
+# -- disagg ----------------------------------------------------------------
+
+@needs2
+def test_disagg_priority_classes_and_reserves():
+    cfg = get_config("yi-9b").reduced()
+    eng = Engine(cfg=cfg, parallel=ParallelConfig(tp=1, dp=2, remat=False),
+                 sampling=SamplingConfig(greedy=True, top_k=1),
+                 mesh=make_local_mesh(2, 1), max_len=64)
+    reqs = mixed_requests(cfg, n=10, seed=8, max_new=6)
+    plain = DisaggScheduler(eng, n_slots=4, block_steps=2, block_size=8,
+                            prefill_chunk=8, prefill_shards=1,
+                            prefix_cache=False)
+    ref, _ = run_mixed(plain, reqs, arrival_every=4)
+    sched = DisaggScheduler(
+        eng, n_slots=4, block_steps=2, block_size=8, prefill_chunk=8,
+        prefill_shards=1, prefix_cache=False, reserve_blocks=1,
+        overload_opts={"enabled": True, "queue_hi": 4, "queue_lo": 1,
+                       "patience": 1, "cooldown": 2})
+    done, rids = run_mixed(sched, reqs)
+    sched.alloc.audit()
+    st = sched.stats
+    assert st["classes"]["interactive"]["shed"] == 0
+    assert sched.request_summary()["overload"]["max_level"] >= 1
+    for rid, r in done.items():
+        if r.finish_reason in ("stop", "length"):
+            np.testing.assert_array_equal(r.output, ref[rid].output)
+        else:
+            assert r.finish_reason == "shed" and rids[rid] == "batch"
