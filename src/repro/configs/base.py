@@ -306,17 +306,20 @@ class ParallelConfig:
     # this many tokens are admitted chunk-by-chunk through the fused mixed
     # prefill/decode step, so a long prompt never stalls in-flight decode
     # for more than one chunk's worth of compute.  0 disables chunking
-    # (whole-prompt admission only); attention-pure GQA archs only — MLA,
-    # windowed, and recurrent families fall back automatically.
+    # (whole-prompt admission only).  Eligibility is declared per arch by
+    # the capability registry (core.capabilities): ineligible archs clamp
+    # this config default to whole-prompt admission; an explicit scheduler
+    # constructor override raises the registry error instead.
     prefill_chunk: int = 256
     # speculative decoding (continuous-batching schedulers): propose spec_k
     # draft tokens per active slot from a host-side n-gram prompt-lookup
     # drafter and score all spec_k+1 positions in ONE fused verify step (a
     # width-(k+1) chunk at the decode frontier), emitting 1..spec_k+1
     # tokens per step.  0 disables (plain one-token decode).  Greedy spec
-    # decode is token-identical to plain greedy decode; eligibility matches
-    # chunked prefill (attention-pure GQA archs — MLA, windowed, and
-    # recurrent families fall back automatically).
+    # decode is token-identical to plain greedy decode; eligibility comes
+    # from the capability registry's "spec" path (same derivation as
+    # chunked prefill — ineligible archs clamp this default to plain
+    # decode, explicit constructor overrides raise).
     spec_k: int = 0
     spec_ngram: int = 3         # longest n-gram the prompt-lookup drafter
                                 # matches (falls through to shorter n-grams)
@@ -332,8 +335,9 @@ class ParallelConfig:
     # and chunk-prefill there), the remaining shards the DECODE POOL;
     # finished KV blocks migrate between the per-shard block namespaces via
     # a batched device-to-device copy, with refcounts handed off through
-    # the allocator.  0 disables (unified serving).  Requires chunk-eligible
-    # archs (same gate as prefill_chunk) and dp * pods >= 2.
+    # the allocator.  0 disables (unified serving).  Requires an arch whose
+    # capability record supports "disagg" (chunked + paged with no
+    # blockers) and dp * pods >= 2.
     disagg_prefill_shards: int = 0
     # overlapped host/device engine loop (continuous-batching schedulers):
     # dispatch decode step N+1 while step N's token array is still a device

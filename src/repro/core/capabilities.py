@@ -1,0 +1,235 @@
+"""Declarative per-architecture serving capabilities.
+
+One :class:`ArchCapabilities` record per architecture, derived from its
+:class:`~repro.configs.base.ModelConfig` at engine construction.  Every
+scheduler / engine / serve entry point consults the record through a single
+``require(path)`` choke point instead of scattering per-family ``isinstance``
+checks and ad-hoc clamps: an ineligible (arch, path) combination raises ONE
+uniformly worded error naming the blocking capability and the fallback.
+
+Serving paths
+-------------
+``chunked``   chunked prefill through the fused mixed prefill/decode step
+``spec``      speculative decoding (n-gram draft + fused multi-token verify)
+``paged``     paged KV backend (block pool + block tables + prefix cache)
+``disagg``    disaggregated prefill/decode pools with KV-block migration
+``overlap``   overlapped host/device engine loop
+
+Derivation rules (all structural, no per-arch tables):
+
+* ``chunked`` / ``spec`` need a resumable token-position cache: every mixer
+  is attention (``attn``/``local_attn`` — dense, MLA latent, and
+  sliding-window ring layouts all replay positions), no modality-prefix
+  frontend, and a single-codebook head.  Recurrent mixers (``ssd``/``rglru``)
+  carry state across the chunk boundary that the fused step does not
+  checkpoint, so they fall back to whole-prompt admission.
+* ``paged`` needs every attention cache to be block-addressable: the
+  sliding-window ring layout is not pageable (a ring index is not a block
+  offset), and the frontend / multi-codebook admission paths only exist on
+  the dense slot engine.  Recurrent state is per-slot and constant-size, so
+  SSM archs page fine.
+* ``disagg`` = ``chunked`` AND ``paged`` (prefill resumes mid-cache on a
+  separate pool, then blocks migrate).
+* ``overlap`` reorders host observation, not device math — every arch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+# Canonical serving-path ids, in display order.
+PATHS: Tuple[str, ...] = ("chunked", "spec", "paged", "disagg", "overlap")
+
+PATH_NAMES: Dict[str, str] = {
+    "chunked": "chunked prefill",
+    "spec": "speculative decoding",
+    "paged": "paged KV",
+    "disagg": "disaggregated prefill/decode",
+    "overlap": "overlapped decode",
+}
+
+# What an ineligible arch gets instead of the path.
+FALLBACKS: Dict[str, str] = {
+    "chunked": "whole-prompt admission",
+    "spec": "plain one-token decode",
+    "paged": "the dense slot engine",
+    "disagg": "the unified paged engine",
+    "overlap": "the blocking engine loop",
+}
+
+# Blocking-capability tags -> full phrases (tags double as matrix-cell
+# annotations; phrases appear in the uniform ``require()`` error).
+BLOCKERS: Dict[str, str] = {
+    "ring": "the sliding-window ring cache layout",
+    "recurrent": "the recurrent-state cache layout (no chunk-boundary carry)",
+    "frontend": "the modality-prefix frontend",
+    "codebooks": "per-codebook sampling (multi-codebook head)",
+}
+
+
+@dataclass(frozen=True)
+class ArchCapabilities:
+    """Declarative serving-capability record for one architecture."""
+
+    arch: str
+    # cache layouts this arch's caches use, e.g. ("dense", "ring")
+    cache_layouts: Tuple[str, ...]
+    # "single" | "per-codebook"
+    sampling: str
+    # in-flight admission prompt clamp (sliding-window archs: the window);
+    # None = no structural clamp beyond max_len
+    max_prompt: Optional[int]
+    # path id -> blocking-capability tag (absent = supported)
+    blockers: Dict[str, str]
+
+    # -- derivation -------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "ArchCapabilities":
+        kinds = set(cfg.layer_pattern)
+        ring = cfg.window > 0 and "local_attn" in kinds
+        recurrent = bool(kinds & {"ssd", "rglru"})
+        multi_cb = cfg.n_codebooks > 1
+        has_frontend = cfg.frontend is not None
+
+        blockers: Dict[str, str] = {}
+
+        def first_blocker(*conds) -> Optional[str]:
+            for tag, hit in conds:
+                if hit:
+                    return tag
+            return None
+
+        chunk_block = first_blocker(
+            ("frontend", has_frontend),
+            ("codebooks", multi_cb),
+            ("recurrent", recurrent),
+        )
+        paged_block = first_blocker(
+            ("ring", ring),
+            ("frontend", has_frontend),
+            ("codebooks", multi_cb),
+        )
+        if chunk_block:
+            blockers["chunked"] = chunk_block
+            blockers["spec"] = chunk_block
+        if paged_block:
+            blockers["paged"] = paged_block
+        disagg_block = chunk_block or paged_block
+        if disagg_block:
+            blockers["disagg"] = disagg_block
+        # "overlap" reorders host observation only — never blocked.
+
+        layouts: List[str] = ["dense"]
+        if cfg.mla is not None:
+            layouts.append("latent")
+        if ring:
+            layouts.append("ring")
+        if recurrent:
+            layouts.append("recurrent-state")
+        if "paged" not in blockers:
+            layouts.append("paged")
+
+        return cls(
+            arch=cfg.name,
+            cache_layouts=tuple(layouts),
+            sampling="per-codebook" if multi_cb else "single",
+            max_prompt=cfg.window if ring else None,
+            blockers=blockers,
+        )
+
+    # -- queries ----------------------------------------------------------
+    def supports(self, path: str) -> bool:
+        if path not in PATHS:
+            raise KeyError(f"unknown serving path {path!r}; known: {PATHS}")
+        return path not in self.blockers
+
+    def blocker(self, path: str) -> Optional[str]:
+        """Blocking-capability tag for ``path`` (None if supported)."""
+        if path not in PATHS:
+            raise KeyError(f"unknown serving path {path!r}; known: {PATHS}")
+        return self.blockers.get(path)
+
+    def require(self, path: str) -> None:
+        """The single eligibility choke point: raise the uniformly worded
+        capability error if ``path`` is not supported by this arch."""
+        tag = self.blocker(path)
+        if tag is None:
+            return
+        raise ValueError(
+            f"arch {self.arch!r} does not support {PATH_NAMES[path]}: "
+            f"blocked by {BLOCKERS[tag]} — use {FALLBACKS[path]} instead"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry over the config registry
+# ---------------------------------------------------------------------------
+
+
+def registry() -> Dict[str, ArchCapabilities]:
+    """arch-id -> capability record, for every registered architecture."""
+    from repro import configs  # local import: configs never imports core
+
+    return {
+        arch: ArchCapabilities.from_config(configs.get_config(arch))
+        for arch in configs.ALL_ARCHS
+    }
+
+
+def _cell(caps: ArchCapabilities, path: str) -> str:
+    tag = caps.blocker(path)
+    return "✓" if tag is None else f"✗ {tag}"
+
+
+def matrix_rows() -> List[Tuple[str, ArchCapabilities]]:
+    return sorted(registry().items())
+
+
+def render_text() -> str:
+    """Plain-text capability matrix (``serve.py --list-archs``)."""
+    header = ["arch", *PATHS, "sampling", "max-prompt"]
+    rows = [header]
+    for arch, caps in matrix_rows():
+        rows.append(
+            [arch, *(_cell(caps, p) for p in PATHS), caps.sampling,
+             str(caps.max_prompt) if caps.max_prompt else "-"]
+        )
+    widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    legend = [""]
+    legend.append("blocking capabilities:")
+    for tag, phrase in sorted(BLOCKERS.items()):
+        legend.append(f"  {tag:<10} {phrase}")
+    return "\n".join(lines + legend)
+
+
+def render_markdown() -> str:
+    """Markdown capability matrix (the README support-matrix section)."""
+    out = ["| arch | " + " | ".join(PATHS) + " | sampling | max prompt |",
+           "|" + "---|" * (len(PATHS) + 3)]
+    for arch, caps in matrix_rows():
+        cells = [f"`{arch}`", *(_cell(caps, p) for p in PATHS),
+                 caps.sampling,
+                 str(caps.max_prompt) if caps.max_prompt else "—"]
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def as_dict() -> Dict[str, dict]:
+    """JSON-ready capability matrix (``GET /health`` ``capabilities``)."""
+    out: Dict[str, dict] = {}
+    for arch, caps in matrix_rows():
+        out[arch] = {
+            "paths": {
+                p: {"supported": caps.supports(p), "blocker": caps.blocker(p)}
+                for p in PATHS
+            },
+            "cache_layouts": list(caps.cache_layouts),
+            "sampling": caps.sampling,
+            "max_prompt": caps.max_prompt,
+        }
+    return out

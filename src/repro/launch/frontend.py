@@ -53,6 +53,18 @@ from repro.runtime.scheduler import PRIORITY_CLASSES, PRIORITY_RANK
 
 _DONE = object()
 
+_CAP_MATRIX = None
+
+
+def _capability_matrix():
+    """JSON capability matrix for /health (computed once: the registry
+    derives from static configs, it cannot change while serving)."""
+    global _CAP_MATRIX
+    if _CAP_MATRIX is None:
+        from repro.core.capabilities import as_dict
+        _CAP_MATRIX = as_dict()
+    return _CAP_MATRIX
+
 # Retry-After scale per class: latency classes retry soonest, batch backs
 # off longest (it is also the first class the degradation ladder sheds).
 # standard stays at 1x so the default-class backoff hint is unchanged.
@@ -365,6 +377,11 @@ class HttpFrontend:
                         is not None
                         else {"level": svc.sched.overload_level(),
                               "level_name": "normal"}),
+                    # the registered capability matrix (same table as
+                    # serve.py --list-archs), plus which arch this server
+                    # is actually running
+                    "arch": svc.sched.engine.cfg.name,
+                    "capabilities": _capability_matrix(),
                 }
                 self._respond(writer,
                               "503 Service Unavailable" if wedged

@@ -31,8 +31,9 @@ Schedulers (``--scheduler``):
               steps, and decode never shares a dispatch with admission.
               Reports per-pool stats: occupancy, migrated blocks/bytes,
               decode-side prefix hits that skipped the copy, and
-              migration-wait percentiles.  Needs ``--dp >= 2`` and a
-              chunk-eligible arch.
+              migration-wait percentiles.  Needs ``--dp >= 2`` and an arch
+              whose capability record supports the disaggregated path
+              (``--list-archs`` prints the matrix).
 
 All continuous schedulers also take ``--spec-k N`` (speculative decoding:
 n-gram prompt-lookup drafts + fused multi-token verify, emitting 1..N+1
@@ -163,6 +164,10 @@ def build_parser(ap=None):
     if ap is None:
         ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--list-archs", action="store_true",
+                    help="print the architecture capability matrix (which "
+                         "serving paths each registered arch supports, and "
+                         "what blocks the rest) and exit")
     ap.add_argument("--scheduler",
                     choices=("wave", "continuous", "paged", "disagg"),
                     default="wave")
@@ -196,8 +201,9 @@ def build_parser(ap=None):
                          "tokens are admitted chunk-by-chunk through the "
                          "fused mixed prefill/decode step (decode advances "
                          "every step during admission); 0 = whole-prompt "
-                         "admission only.  Attention-pure GQA archs only — "
-                         "MLA/windowed/recurrent families fall back")
+                         "admission only.  Gated by the capability registry "
+                         "(--list-archs): recurrent and modality-prefix "
+                         "archs clamp to whole-prompt admission")
     ap.add_argument("--no-flash-prefill", action="store_true",
                     help="keep prefill attention on the pure-JAX scan even "
                          "when Pallas kernels are enabled")
@@ -206,9 +212,9 @@ def build_parser(ap=None):
                          "N draft tokens per active slot from the n-gram "
                          "prompt-lookup drafter and verify all of them in "
                          "one fused multi-token step (emits 1..N+1 tokens "
-                         "per step); 0 = plain one-token decode.  "
-                         "Attention-pure GQA archs only — MLA/windowed/"
-                         "recurrent families fall back")
+                         "per step); 0 = plain one-token decode.  Gated by "
+                         "the capability registry (--list-archs): recurrent "
+                         "and modality-prefix archs clamp to plain decode")
     ap.add_argument("--no-spec-decode", action="store_true",
                     help="force plain one-token decode even when --spec-k "
                          "is set")
@@ -340,6 +346,10 @@ def dump_stats_json(sched, path, extra=None):
 def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
+    if args.list_archs:
+        from repro.core.capabilities import render_text
+        print(render_text())
+        return []
 
     eng = build_engine(args)
     cfg = eng.cfg

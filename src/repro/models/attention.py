@@ -166,10 +166,16 @@ def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
     return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
-def cache_len_for(cfg: ModelConfig, kind: str, seq_len: int, kv_seq_shard_dp: int) -> int:
-    """Per-shard cache length: windowed archs cap at window, seq-sharding
-    divides over the data axis."""
-    eff = min(seq_len, cfg.window) if (cfg.window and kind == "local_attn") else seq_len
+def cache_len_for(cfg: ModelConfig, kind: str, seq_len: int, kv_seq_shard_dp: int,
+                  ring_slack: int = 0) -> int:
+    """Per-shard cache length: windowed archs cap at window (plus
+    ``ring_slack`` spare ring entries so a spec-decode verify writing
+    ``spec_k`` draft tokens past the frontier never clobbers an in-window
+    entry), seq-sharding divides over the data axis."""
+    if cfg.window and kind == "local_attn":
+        eff = min(seq_len, cfg.window + ring_slack)
+    else:
+        eff = seq_len
     if kv_seq_shard_dp > 1 and eff == seq_len:
         eff = -(-seq_len // kv_seq_shard_dp)
     return eff
@@ -211,7 +217,10 @@ def chunked_causal_attention(
     k: jax.Array,                 # (b, hkv, Sk, hd)
     v: jax.Array,
     q_positions: jax.Array,       # (Sq,) absolute positions, or (b, Sq) per-row
-    kv_positions: jax.Array,      # (Sk,) absolute positions (-1 = empty slot)
+    kv_positions: jax.Array,      # (Sk,) absolute positions (-1 = empty slot),
+                                  # or (b, Sk) per-row (ring caches: view
+                                  # index != position, each row's pos stripe
+                                  # names what its ring slots hold)
     window: int,                  # 0 = full causal
     scale: float,
 ) -> jax.Array:
@@ -219,30 +228,40 @@ def chunked_causal_attention(
 
     Batched ``q_positions`` (b, Sq) serve the paged cached-prefix prefill:
     each row's suffix queries start at its own absolute offset while
-    attending one shared KV view (view index == absolute position)."""
+    attending one shared KV view (view index == absolute position).
+    Batched ``kv_positions`` (b, Sk) serve layouts where view index !=
+    position (the sliding-window ring cache): masking follows the per-row
+    position stripe instead of an implied arange."""
     b, hq, sq, hd = q.shape
     sk = k.shape[2]
     chunk = min(KV_CHUNK, sk)
     n_chunks = -(-sk // chunk)
     pad = n_chunks * chunk - sk
+    batched_kv = kv_positions.ndim == 2
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+        kv_positions = jnp.pad(
+            kv_positions,
+            ((0, 0), (0, pad)) if batched_kv else (0, pad),
+            constant_values=-1)
     kc = k.reshape(b, k.shape[1], n_chunks, chunk, k.shape[3]).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, v.shape[1], n_chunks, chunk, v.shape[3]).transpose(2, 0, 1, 3, 4)
-    pc = kv_positions.reshape(n_chunks, chunk)
+    pc = (kv_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+          if batched_kv else kv_positions.reshape(n_chunks, chunk))
     batched_q = q_positions.ndim == 2
 
     def step(carry, inputs):
         m, l, acc = carry
         k_i, v_i, p_i = inputs
         s = _grouped_scores(q, k_i) * scale                      # (b,hq,Sq,chunk)
-        if batched_q:
-            qp = q_positions[:, :, None]                         # (b,Sq,1)
-            valid = (p_i[None, None, :] >= 0) & (p_i[None, None, :] <= qp)
+        if batched_q or batched_kv:
+            qp = (q_positions[:, :, None] if batched_q
+                  else q_positions[None, :, None])               # (b|1,Sq,1)
+            pkv = p_i[:, None, :] if batched_kv else p_i[None, None, :]
+            valid = (pkv >= 0) & (pkv <= qp)
             if window:
-                valid &= p_i[None, None, :] > qp - window
+                valid &= pkv > qp - window
             s = jnp.where(valid[:, None], s, -jnp.inf)
         else:
             valid = (p_i[None, :] >= 0) & (p_i[None, :] <= q_positions[:, None])
@@ -265,6 +284,71 @@ def chunked_causal_attention(
     (m, l, acc), _ = maybe_scan(step, (m0, l0, acc0), (kc, vc, pc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(q.dtype)
+
+
+def mla_latent_attention(
+    qa: jax.Array,                # (b, h, Sq, rank) absorbed nope queries, bf16
+    qr: jax.Array,                # (b, h, Sq, rope) RoPE'd rope queries, bf16
+    kv_src: jax.Array,            # (b, Sk, rank) latent cache / fresh latents
+    krope_src: jax.Array,         # (b, Sk, rope)
+    q_positions: jax.Array,       # (Sq,) shared or (b, Sq) per-row
+    kv_positions: jax.Array,      # (Sk,) shared or (b, Sk) per-row (-1 = empty)
+    scale: float,
+) -> jax.Array:
+    """Streaming two-dot latent attention (MLA prefill/chunk/verify path).
+
+    Per-chunk math mirrors the decode branch exactly — separate nope/rope
+    score dots (§Perf H2: no cache-sized concat), one-pass masked softmax,
+    fp32 accumulation, fp32 output (no bf16 round-trip).  For caches at or
+    below KV_CHUNK entries the stream is a single chunk and the result is
+    bit-identical to decode at the same state — the property the
+    chunked==whole and spec==plain greedy admission identities rest on."""
+    b, h, sq, _ = qa.shape
+    sk = kv_src.shape[1]
+    chunk = min(KV_CHUNK, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    batched_kv = kv_positions.ndim == 2
+    if pad:
+        kv_src = jnp.pad(kv_src, ((0, 0), (0, pad), (0, 0)))
+        krope_src = jnp.pad(krope_src, ((0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(
+            kv_positions,
+            ((0, 0), (0, pad)) if batched_kv else (0, pad),
+            constant_values=-1)
+    kc = kv_src.reshape(b, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+    rc = krope_src.reshape(b, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+    pc = (kv_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+          if batched_kv else kv_positions.reshape(n_chunks, chunk))
+    qpos = q_positions if q_positions.ndim == 2 else q_positions[None, :]
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_i, r_i, p_i = inputs
+        s_nope = jnp.einsum("bhsr,btr->bhst", qa, k_i,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhse,bte->bhst", qr, r_i,
+                            preferred_element_type=jnp.float32)
+        sc = (s_nope + s_rope) * scale                       # (b,h,Sq,chunk)
+        pkv = p_i[:, None, :] if p_i.ndim == 2 else p_i[None, None, :]
+        valid = (pkv >= 0) & (pkv <= qpos[:, :, None])       # (b|1,Sq,chunk)
+        sc = jnp.where(valid[:, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,btr->bhsr", p.astype(qa.dtype), k_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, kv_src.shape[-1]), jnp.float32)
+    from repro.models.common import maybe_scan
+    (m, l, acc), _ = maybe_scan(step, (m0, l0, acc0), (kc, rc, pc))
+    return acc / jnp.maximum(l, 1e-30)[..., None]   # fp32 — decode-congruent
 
 
 def banded_causal_attention(
@@ -459,6 +543,32 @@ def _write_prefill_chunk_scale(cache_side: jax.Array, new: jax.Array,
     b, h, C = new.shape
     vpos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     return cache_side.at[jnp.arange(b)[:, None], :, vpos].set(
+        new.transpose(0, 2, 1).astype(cache_side.dtype), mode="drop")
+
+
+def _write_prefill_chunk_ring(cache_side: jax.Array, new: jax.Array,
+                              positions: jax.Array,
+                              real: jax.Array) -> jax.Array:
+    """Scatter a (b,h,C,hd) chunk into the (b,h,S,hd) RING cache, each token
+    at its ring slot ``position % S``.  Chunk-pad columns (``real`` False)
+    are dropped: unlike the dense chunk writer — whose in-range tail garbage
+    stays dead behind the position row — every in-range ring index is a live
+    in-window entry, so pad garbage must never land."""
+    b, h, C, hd = new.shape
+    S = cache_side.shape[2]
+    wslot = jnp.where(real, positions % S, S)                      # S = drop
+    return cache_side.at[jnp.arange(b)[:, None], :, wslot, :].set(
+        new.transpose(0, 2, 1, 3).astype(cache_side.dtype), mode="drop")
+
+
+def _write_prefill_chunk_ring_scale(cache_side: jax.Array, new: jax.Array,
+                                    positions: jax.Array,
+                                    real: jax.Array) -> jax.Array:
+    """Scale variant: (b,h,C) chunk into the (b,h,S) ring scale stripe."""
+    b, h, C = new.shape
+    S = cache_side.shape[2]
+    wslot = jnp.where(real, positions % S, S)
+    return cache_side.at[jnp.arange(b)[:, None], :, wslot].set(
         new.transpose(0, 2, 1).astype(cache_side.dtype), mode="drop")
 
 
@@ -663,6 +773,8 @@ def gqa_forward(
     use_pallas: bool = False,
     flash_prefill: bool = False,
     block_tables: Optional[jax.Array] = None,   # (b, nbps) -> paged cache
+    length_mask: Optional[jax.Array] = None,    # (b, s) bool: real (non-pad)
+                                                # chunk columns (ring writes)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Returns (partial out (b,s,d) — UNREDUCED over model axis, new_cache)."""
     b, s, d = x.shape
@@ -831,10 +943,53 @@ def gqa_forward(
             # rows are rewritten whole by the engine (set_slot_positions);
             # causality (view index == absolute position) masks both the
             # not-yet-written tail and chunk-pad garbage.
-            if bool(window) or kv_seq_axis is not None:
-                raise ValueError("chunked prefill serves full-attention "
-                                 "dense slots only (windowed archs fall "
-                                 "back to whole-prompt admission)")
+            if kv_seq_axis is not None:
+                raise ValueError("chunked prefill is incompatible with "
+                                 "kv_seq_shard (batch=1 long-context path)")
+            if window:
+                # -- sliding-window RING chunk (view index != position).  A
+                # ring has no dead tail: writing position p claims slot
+                # p % S, clobbering the entry for p - S that THIS chunk's
+                # earlier queries still attend.  So attend the PRE-write
+                # cache — its per-row position stripe names what each ring
+                # slot holds — concatenated with the fresh chunk K/V, then
+                # scatter the chunk afterwards.  Post-chunk, every clobbered
+                # position is >= window behind all later queries, so the
+                # written ring is consistent for the next step.  The same
+                # branch serves the spec-decode verify chunk (all columns
+                # real; ring slack from cache_len_for keeps rejected drafts
+                # from clobbering in-window entries).
+                real = (length_mask.astype(bool) if length_mask is not None
+                        else jnp.ones((b, s), bool))
+                if quant:
+                    kq, ksc = _quantize_kv(k)
+                    vq, vsc = _quantize_kv(v)
+                    k_old = _dequantize_kv(cache["k"], cache["k_scale"])
+                    v_old = _dequantize_kv(cache["v"], cache["v_scale"])
+                    k_new = _dequantize_kv(kq, ksc)
+                    v_new = _dequantize_kv(vq, vsc)
+                    ck = _write_prefill_chunk_ring(cache["k"], kq, positions, real)
+                    cv = _write_prefill_chunk_ring(cache["v"], vq, positions, real)
+                    cks = _write_prefill_chunk_ring_scale(
+                        cache["k_scale"], ksc, positions, real)
+                    cvs = _write_prefill_chunk_ring_scale(
+                        cache["v_scale"], vsc, positions, real)
+                    new_cache = {"k": ck, "v": cv, "k_scale": cks,
+                                 "v_scale": cvs, "pos": cache["pos"]}
+                else:
+                    k_old, v_old = cache["k"], cache["v"]
+                    k_new, v_new = k, v
+                    ck = _write_prefill_chunk_ring(cache["k"], k, positions, real)
+                    cv = _write_prefill_chunk_ring(cache["v"], v, positions, real)
+                    new_cache = {"k": ck, "v": cv, "pos": cache["pos"]}
+                k_att = jnp.concatenate([k_old, k_new.astype(k_old.dtype)], axis=2)
+                v_att = jnp.concatenate([v_old, v_new.astype(v_old.dtype)], axis=2)
+                kv_pos = jnp.concatenate(
+                    [cache["pos"], jnp.where(real, positions, -1)], axis=1)
+                out = chunked_causal_attention(q, k_att, v_att, positions,
+                                               kv_pos, window, scale)
+                partial = fused_out_projection(out, params["w_o"])
+                return partial, new_cache
             starts = positions[:, 0]
             if quant:
                 kq, ksc = _quantize_kv(k)
@@ -999,11 +1154,27 @@ def mla_forward(
                 krope = _write_decode(cache["krope"][:, None], krope_new[:, None],
                                       cur_pos, S, False, seq_shard)[:, 0]
                 cpos = _write_pos(cache["pos"], cur_pos, S, False, seq_shard)
+        elif positions.ndim == 2:
+            # -- chunked admission (dense latent cache): scatter this chunk
+            # of latents at each row's own resume offset (the generic chunk
+            # writer via a dummy head axis) and attend the row's cache
+            # stripe [0, start + C) as MQA over the latent.  View index ==
+            # absolute position in the latent cache, so a plain arange is
+            # the KV position vector; causality masks the unwritten tail
+            # and position rows are rewritten whole by the engine.  The
+            # same branch serves the spec-decode verify chunk.
+            if kv_seq_axis is not None:
+                raise ValueError("chunked prefill is incompatible with "
+                                 "kv_seq_shard (batch=1 long-context path)")
+            starts = positions[:, 0]
+            ckv = _write_prefill_chunk(cache["ckv"][:, None],
+                                       ckv_new[:, None], starts)[:, 0]
+            krope = _write_prefill_chunk(cache["krope"][:, None],
+                                         krope_new[:, None], starts)[:, 0]
+            new_cache = {"ckv": ckv, "krope": krope, "pos": cache["pos"]}
+            kv_src, krope_src = ckv, krope
+            kv_pos = jnp.arange(S, dtype=jnp.int32)
         else:
-            if positions.ndim == 2:
-                raise ValueError(
-                    "chunked prefill does not cover MLA dense caches — the "
-                    "scheduler falls back to whole-prompt admission")
             ckv, cpos = _write_prefill(cache["ckv"][:, None], ckv_new[:, None],
                                        positions, S, kv_seq_axis)
             ckv = ckv[:, 0]
@@ -1012,10 +1183,12 @@ def mla_forward(
             krope = krope[:, 0]
             if cache["pos"].ndim == 2:
                 cpos = jnp.broadcast_to(cpos[None], (b, S))
-        new_cache = {"ckv": ckv, "krope": krope, "pos": cpos}
+        if positions.ndim != 2 or decode:
+            new_cache = {"ckv": ckv, "krope": krope, "pos": cpos}
         if decode:
             kv_src, krope_src, kv_pos = ckv, krope, cpos
-        else:  # prefill attends over the full freshly-computed latents
+        elif positions.ndim != 2:
+            # whole prefill attends over the full freshly-computed latents
             kv_src, krope_src, kv_pos = ckv_new, krope_new, positions
     else:
         new_cache = None
@@ -1054,15 +1227,14 @@ def mla_forward(
                              tag="lse_merge")
         o_lat = acc / jnp.maximum(l, 1e-30)[..., None]
     else:
-        # prefill: MLA as MQA over the latent (k_eff = [ckv ; krope], one
-        # shared head of width rank+rope) — reuses the chunked flash path.
-        q_eff = jnp.concatenate(
-            [q_abs, q_rope.astype(jnp.float32)], axis=-1).astype(x.dtype)
-        k_eff = jnp.concatenate([kv_src, krope_src], axis=-1)[:, None]
-        v_eff = kv_src[:, None]
-        o_lat = chunked_causal_attention(
-            q_eff, k_eff, v_eff, positions, kv_pos, 0, scale
-        ).astype(jnp.float32)
+        # prefill / chunked admission / spec verify: the SAME two-dot latent
+        # math as decode, streamed over KV chunks (fp32 o_lat, no bf16
+        # round-trip through a concat MQA view).  Congruent numerics across
+        # decode/prefill/chunk are what make the chunked==whole and
+        # spec==plain greedy identities hold bitwise for MLA.
+        o_lat = mla_latent_attention(
+            q_abs.astype(x.dtype), q_rope.astype(x.dtype),
+            kv_src, krope_src, positions, kv_pos, scale)
     # value up-projection (absorbed): (b,h,s,rank) @ (rank,h,vd) -> (b,h,s,vd)
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
     o = jnp.einsum("bhsr,rhv->bhsv", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)

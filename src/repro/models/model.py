@@ -452,15 +452,18 @@ def lm_head_local(params, x, ctx: ModelCtx) -> jax.Array:
 
 def init_caches(ctx: ModelCtx, batch_local: int, cache_len: int,
                 *, kv_seq_shard_dp: int = 1, batched_pos: bool = False,
-                paged: Optional[Tuple[int, int]] = None) -> Tuple:
+                paged: Optional[Tuple[int, int]] = None,
+                ring_slack: int = 0) -> Tuple:
     """``paged=(n_blocks_local, block_size)`` builds the paged layout:
     attention layers get block pools, recurrent layers keep their per-slot
-    constant-size state unchanged."""
+    constant-size state unchanged.  ``ring_slack`` adds spare entries to
+    sliding-window ring caches (spec-decode verify headroom)."""
     groups = tfm.build_groups(ctx.cfg)
     return tuple(
         tfm.group_cache(ctx.cfg, ctx.plan, ctx.dist, g, batch_local, cache_len,
                         kv_seq_shard_dp, quant=ctx.parallel.kv_quant,
-                        batched_pos=batched_pos, paged=paged)
+                        batched_pos=batched_pos, paged=paged,
+                        ring_slack=ring_slack)
         for g in groups
     )
 

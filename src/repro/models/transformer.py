@@ -127,9 +127,9 @@ def group_defs(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec) -> D
 
 def sub_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, sub: SubLayer,
               batch_local: int, cache_len_local: int,
-              quant: bool = False) -> Dict[str, jax.Array]:
+              quant: bool = False, ring_slack: int = 0) -> Dict[str, jax.Array]:
     if sub.kind in ATTN_KINDS:
-        clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, 1)
+        clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, 1, ring_slack)
         return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
                                quant=quant)
     if sub.kind == "ssd":
@@ -143,10 +143,12 @@ def group_cache(cfg: ModelConfig, plan: ShardPlan, dist: Dist, g: GroupSpec,
                 batch_local: int, cache_len_local: int,
                 kv_seq_shard_dp: int = 1, quant: bool = False,
                 batched_pos: bool = False,
-                paged: Optional[Tuple[int, int]] = None) -> Dict[str, Any]:
+                paged: Optional[Tuple[int, int]] = None,
+                ring_slack: int = 0) -> Dict[str, Any]:
     def one(sub: SubLayer):
         if sub.kind in ATTN_KINDS:
-            clen = attn.cache_len_for(cfg, sub.kind, cache_len_local, kv_seq_shard_dp)
+            clen = attn.cache_len_for(cfg, sub.kind, cache_len_local,
+                                      kv_seq_shard_dp, ring_slack)
             return attn.init_cache(cfg, plan, dist, batch_local, clen, kind=sub.kind,
                                    quant=quant, batched_pos=batched_pos,
                                    paged=paged)
@@ -169,8 +171,10 @@ def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
                    cur_pos, kv_seq_axis, use_pallas, length_mask=None,
                    block_tables=None, flash_prefill=False):
     if sub.kind in ATTN_KINDS:
-        # attention needs no length mask: padded K/V entries are dead by
-        # position masking (pos = -1) in the cache
+        # dense/paged caches need no length mask (padded K/V entries are
+        # dead by position masking); the sliding-window RING chunk writer
+        # does — every in-range ring index is live, so pad columns must be
+        # dropped at the write
         if cfg.mla is not None:
             return attn.mla_forward(
                 p, xa, positions, cfg, plan, dist, cache=cache, cur_pos=cur_pos,
@@ -181,6 +185,7 @@ def _mixer_forward(p, xa, positions, cfg, plan, dist, sub: SubLayer, cache,
             p, xa, positions, cfg, plan, dist, kind=sub.kind, cache=cache,
             cur_pos=cur_pos, kv_seq_axis=kv_seq_axis, use_pallas=use_pallas,
             flash_prefill=flash_prefill, block_tables=block_tables,
+            length_mask=length_mask,
         )
     if sub.kind == "ssd":
         return ssm_mod.ssd_forward(p, xa, cfg, dist, state=cache,

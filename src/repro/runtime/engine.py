@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig, ParallelConfig, SamplingConfig
+from repro.core.capabilities import ArchCapabilities
 from repro.models import model as M
 from repro.runtime import kvcache
 from repro.runtime.sampling import sample_tokens
@@ -100,17 +101,30 @@ def make_slot_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig):
 
     groups = tfm.build_groups(ctx.cfg)
 
+    prefix = ctx.cfg.frontend.prefix_len if ctx.cfg.frontend else 0
+
     def prefill_slots(params, tokens, caches, admit, plens, rng):
         # fresh requests integrate recurrent state from t=0 and must not see
         # stale positions, so their slots reset before the forward
         caches_r = kvcache.reset_slots(caches, groups, admit)
-        lmask = (jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
-                 < plens[:, None])                              # (b, Lp)
+        features = None
+        if prefix:
+            # modality-prefix archs: the stub encoder consumes zero features
+            # (as in Engine.generate) and projects a fixed-length prefix in
+            # front of every row's prompt, so every prefix column is real and
+            # each row's valid cache extent is prefix + plen.
+            features = jnp.zeros(
+                (tokens.shape[0], prefix, ctx.cfg.frontend.feature_dim),
+                jnp.float32)
+        ext = plens + prefix
+        lmask = (jnp.arange(prefix + tokens.shape[1], dtype=jnp.int32)[None, :]
+                 < ext[:, None])                         # (b, prefix + Lp)
         hidden, new_caches, _ = M.forward(
-            params, tokens, ctx, caches=caches_r, last_only=False,
-            skip_head=True, seq_sharded=True, length_mask=lmask,
+            params, tokens, ctx, features=features, caches=caches_r,
+            last_only=False, skip_head=True, seq_sharded=True,
+            length_mask=lmask,
         )
-        idx = jnp.clip(plens - 1, 0, tokens.shape[1] - 1)
+        idx = jnp.clip(ext - 1, 0, prefix + tokens.shape[1] - 1)
         h_last = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
         logits = M.lm_head_local(params, h_last, ctx)
         tok = sample_tokens(
@@ -118,7 +132,7 @@ def make_slot_prefill_step(ctx: M.ModelCtx, sampling: SamplingConfig):
             topk_sync_enabled=ctx.parallel.topk_sync,
             use_pallas=ctx.parallel.use_pallas,
         )
-        new_caches = kvcache.mask_prompt_padding(new_caches, groups, plens)
+        new_caches = kvcache.mask_prompt_padding(new_caches, groups, ext)
         merged = kvcache.merge_slots(caches, new_caches, groups, admit)
         return tok, merged
 
@@ -235,7 +249,9 @@ def _make_chunk_half(ctx: M.ModelCtx, sampling: SamplingConfig, groups,
             topk_sync_enabled=ctx.parallel.topk_sync,
             use_pallas=ctx.parallel.use_pallas,
         )
-        new_caches = kvcache.set_slot_positions(new_caches, groups, totals)
+        new_caches = kvcache.set_slot_positions(
+            new_caches, groups, totals,
+            window=0 if paged else ctx.cfg.window)
         merged = kvcache.merge_slots(caches, new_caches, groups, admit,
                                      paged=paged)
         return ptok, merged
@@ -311,15 +327,28 @@ def make_mixed_step(ctx: M.ModelCtx, sampling: SamplingConfig, *, paged: bool):
         # The decode half freezes admitting rows (done=True), but a frozen
         # row still performs its row-local cache write at its incoming
         # position — which for an admitting row is STALE and would clobber
-        # the chunk just written.  Redirect those rows' write index to the
-        # last view slot: dead by causality (entry value == index, never
-        # <= any earlier cur_pos) and overwritten by the real decode write
-        # before the row could ever attend it.
-        sink = caches[0]["sub0"]["pos"].shape[-1] - 1
-        dec_pos = jnp.where(admit, jnp.int32(sink), pos)
-        nxt, merged, pos, done, remaining = dec(
-            params, tok, merged, dec_pos, done, remaining, eos,
-            jax.random.fold_in(rng, 1), block_tables=bt)
+        # the chunk just written.
+        if paged:
+            # Redirect those rows' write index to the last view slot: dead
+            # by causality (entry value == index, never <= any earlier
+            # cur_pos), confined by the nulled block table, and overwritten
+            # by the real decode write before the row could ever attend it.
+            sink = caches[0]["sub0"]["pos"].shape[-1] - 1
+            dec_pos = jnp.where(admit, jnp.int32(sink), pos)
+            nxt, merged, pos, done, remaining = dec(
+                params, tok, merged, dec_pos, done, remaining, eos,
+                jax.random.fold_in(rng, 1), block_tables=bt)
+        else:
+            # Dense caches include ring layouts, which have NO dead index to
+            # redirect to (every in-window slot is live).  Let the frozen
+            # write land at the stale position, then re-select the chunk
+            # half's rows for admitting slots — a pure per-row merge that
+            # discards the stale write entirely (and is equivalent to the
+            # sink redirect for non-ring layouts).
+            nxt, dec_caches, pos, done, remaining = dec(
+                params, tok, merged, pos, done, remaining, eos,
+                jax.random.fold_in(rng, 1), block_tables=None)
+            merged = kvcache.merge_slots(dec_caches, merged, groups, admit)
         return ptok, nxt, merged, pos, done, remaining
 
     return mixed
@@ -399,7 +428,9 @@ def make_spec_verify_step(ctx: M.ModelCtx, sampling: SamplingConfig,
             vtokens[:, 0])
         # rewind: exactly [0, pos+e) is valid for active rows; frozen rows
         # keep their old cache (and pos rows) through the per-row merge
-        new_caches = kvcache.set_slot_positions(new_caches, groups, new_pos)
+        new_caches = kvcache.set_slot_positions(
+            new_caches, groups, new_pos,
+            window=0 if paged else ctx.cfg.window)
         merged = kvcache.merge_slots(caches, new_caches, groups, active,
                                      paged=paged)
         return targets, e, nxt, merged, new_pos, new_done, new_remaining
@@ -491,6 +522,9 @@ class Engine:
     def __post_init__(self):
         pod = "pod" if "pod" in self.mesh.axis_names else None
         self.ctx = M.ModelCtx.make(self.cfg, self.parallel, pod_axis=pod)
+        # the declarative capability record every scheduler/serve entry
+        # consults (the single require() choke point for path eligibility)
+        self.caps = ArchCapabilities.from_config(self.cfg)
         wq = self.parallel.weight_quant != "none"
         loaded = False
         if self.params is None:
@@ -575,9 +609,6 @@ class Engine:
 
     # -- continuous batching (slot engine) --------------------------------
     def _slot_gate(self):
-        if self.cfg.frontend is not None:
-            raise NotImplementedError(
-                "slot engine does not support frontend features yet")
         if self.parallel.kv_seq_shard:
             raise ValueError("slot engine is incompatible with kv_seq_shard")
 
@@ -649,11 +680,15 @@ class Engine:
             }
         return self._cb_built
 
-    def init_slot_caches(self, n_slots: int):
+    def init_slot_caches(self, n_slots: int, *, ring_slack: Optional[int] = None):
+        """``ring_slack`` sizes sliding-window ring caches at window + slack
+        so a speculative verify chunk of K drafts never wraps onto live
+        window entries; defaults to the configured spec_k."""
         dp_total = self.ctx.dist.dp * self.ctx.dist.pods
         if n_slots % dp_total:
             raise ValueError(f"n_slots {n_slots} must divide dp*pods {dp_total}")
-        return self.init_caches(n_slots, batched_pos=True)
+        slack = self.parallel.spec_k if ring_slack is None else ring_slack
+        return self.init_caches(n_slots, batched_pos=True, ring_slack=slack)
 
     def prefill_into_slots(self, caches, tokens, admit, plens, rng):
         """Admit requests in-flight: prefill ``tokens`` (B, Lp[, ncb]) into
@@ -973,7 +1008,8 @@ class Engine:
             rng)
 
     # -- API ------------------------------------------------------------
-    def init_caches(self, batch: int, *, batched_pos: bool = False):
+    def init_caches(self, batch: int, *, batched_pos: bool = False,
+                    ring_slack: int = 0):
         """Create the cache pytree as properly-sharded global arrays: each
         shard builds its LOCAL buffers inside shard_map and the runtime
         assembles the global arrays per the cache specs."""
@@ -991,7 +1027,8 @@ class Engine:
         make = jax.jit(compat.shard_map(
             lambda: M.init_caches(self.ctx, b_local, self.max_len,
                                   kv_seq_shard_dp=kv_dp,
-                                  batched_pos=batched_pos),
+                                  batched_pos=batched_pos,
+                                  ring_slack=ring_slack),
             mesh=self.mesh, in_specs=(), out_specs=cspecs, check_vma=False,
         ))
         return make()

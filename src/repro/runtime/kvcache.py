@@ -221,27 +221,56 @@ def merge_slots(old: Tuple, new: Tuple, groups, mask: jax.Array,
                  for g, go, gn in zip(groups, old, new))
 
 
-def set_slot_positions(caches: Tuple, groups, total_lens: jax.Array) -> Tuple:
-    """Rewrite every pos leaf row to [0..total_lens[b]) valid, -1 beyond.
+def _map_by_sub(caches: Tuple, groups, fn) -> Tuple:
+    """Apply ``fn(sub, key, leaf, stacked)`` to every leaf — like
+    ``_map_by_key`` but with the owning :class:`SubLayer` in scope, for
+    transforms that depend on the mixer kind (ring vs identity layout)."""
 
-    Serves both non-ring slot layouts, where a slot's view index IS its
-    absolute position: the paged pool after an admission prefill (shared
-    prefix blocks + freshly-written suffix) and the dense slot cache after
-    a chunked-prefill step (earlier chunks + the chunk just scattered at
-    its resume offset).  Exactly the first ``total_lens[b]`` view positions
-    hold real K/V, so this replaces the dense path's _write_prefill
-    position writes + mask_prompt_padding in one shot; merge_slots then
-    keeps the rewritten rows only for admitted slots."""
+    def walk(sub, subtree, stacked):
+        return {
+            k: walk(sub, v, stacked) if isinstance(v, dict)
+            else fn(sub, k, v, stacked)
+            for k, v in subtree.items()
+        }
 
-    def f(key, leaf, stacked):
+    return tuple(
+        {k: walk(g.subs[int(k[3:])], v, g.n > 1) for k, v in gc.items()}
+        for g, gc in zip(groups, caches)
+    )
+
+
+def set_slot_positions(caches: Tuple, groups, total_lens: jax.Array,
+                       *, window: int = 0) -> Tuple:
+    """Rewrite every pos leaf row so exactly positions
+    [0..total_lens[b]) read as valid, everything else -1.
+
+    Non-ring slot layouts (view index IS absolute position — the paged pool
+    after an admission prefill, the dense slot cache after a chunked-prefill
+    step) get the identity row [0..total) / -1.  With ``window`` > 0,
+    ``local_attn`` leaves use the RING layout instead: ring index ``i``
+    holds the largest position congruent to ``i`` mod S that has been
+    written, so the row is that position where it falls inside the last S
+    written positions, -1 elsewhere.  This replaces the dense path's
+    _write_prefill position writes + mask_prompt_padding in one shot (and,
+    after a spec-decode verify, un-marks rejected draft writes); merge_slots
+    then keeps the rewritten rows only for admitted slots."""
+
+    def f(sub, key, leaf, stacked):
         if key != "pos":
             return leaf
         S = leaf.shape[-1]
         idx = jnp.arange(S, dtype=jnp.int32)
-        row = jnp.where(idx[None, :] < total_lens[:, None], idx[None, :], -1)
+        if window and sub.kind == "local_attn":
+            # largest p ≡ idx (mod S) with p < total; valid iff it is one of
+            # the last S positions written (floor division keeps total=0 and
+            # idx >= total rows at -1)
+            p = idx[None, :] + ((total_lens[:, None] - 1 - idx[None, :]) // S) * S
+            row = jnp.where((p >= 0) & (p >= total_lens[:, None] - S), p, -1)
+        else:
+            row = jnp.where(idx[None, :] < total_lens[:, None], idx[None, :], -1)
         return jnp.broadcast_to(row if not stacked else row[None], leaf.shape)
 
-    return _map_by_key(caches, groups, f)
+    return _map_by_sub(caches, groups, f)
 
 
 def pool_block_bytes(caches: Tuple, groups) -> int:

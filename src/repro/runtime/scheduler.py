@@ -16,16 +16,18 @@ of two).  This closes the batch-utilization gap that arXiv 2407.07304 / the
 LIMINAL analysis identify as the dominant decode-throughput lever once
 per-token sync cost is minimized.
 
-**Chunked prefill** (``prefill_chunk``): EVERY chunk-eligible prompt is
-admitted through the engine's fused mixed prefill/decode step — each
-serving step prefills one fixed-width chunk per admitting slot AND decodes
-one token per active slot, so a long prompt never stalls in-flight decode
-for more than one chunk of compute (LIMINAL's point: inter-token latency,
-not aggregate throughput, is the binding constraint once batching works),
-and a short prompt completes in its first chunk.  The chunked path uses
-one fixed chunk shape, so admission compiles exactly once; the pow-2
-bucketed single-shot prefill survives only as the fallback for ineligible
-families (MLA, windowed, recurrent, multi-codebook) or when chunking is
+**Chunked prefill** (``prefill_chunk``): EVERY prompt on an arch whose
+capability record supports chunked admission streams through the engine's
+fused mixed prefill/decode step — each serving step prefills one
+fixed-width chunk per admitting slot AND decodes one token per active slot,
+so a long prompt never stalls in-flight decode for more than one chunk of
+compute (LIMINAL's point: inter-token latency, not aggregate throughput,
+is the binding constraint once batching works), and a short prompt
+completes in its first chunk.  The chunked path uses one fixed chunk
+shape, so admission compiles exactly once; the pow-2 bucketed single-shot
+prefill survives only as the fallback for families whose capability record
+blocks chunked admission (recurrent state, modality-prefix frontends,
+multi-codebook heads — see ``core/capabilities.py``) or when chunking is
 explicitly disabled.  Greedy outputs are bit-identical either way.
 
 Arrivals are measured on a virtual clock of *decode steps* so schedules are
@@ -76,6 +78,14 @@ def percentile_summary(vals) -> Optional[Dict[str, float]]:
         "p95": float(np.percentile(v, 95)),
         "max": float(v.max()),
     }
+
+
+def _tok_scalar(tok) -> int:
+    """The token id used for EOS / vocab-range checks: the token itself for
+    single-codebook archs, codebook 0 of the frame for multi-codebook ones
+    (codebook 0 carries the primary/EOS stream in every config here)."""
+    a = np.asarray(tok)
+    return int(a if a.ndim == 0 else a.reshape(-1)[0])
 
 
 # Priority classes, best first.  Rank 0 (interactive) admits first, is
@@ -268,10 +278,6 @@ class ContinuousScheduler:
                  reserve_slots: Optional[int] = None,
                  reserve_blocks: Optional[int] = None,
                  overload_opts: Optional[Dict] = None):
-        if engine.cfg.n_codebooks != 1:
-            raise NotImplementedError(
-                "ContinuousScheduler serves single-codebook archs "
-                "(multi-codebook stays on WaveScheduler for now)")
         self.engine = engine
         self.B = n_slots
         self.pad_id = pad_id
@@ -279,17 +285,22 @@ class ContinuousScheduler:
         self.min_bucket = min_bucket
         self.responsive_blocks = responsive_blocks
         self.on_token = on_token
-        # Admission prefill right-pads prompts to a power-of-two bucket.  A
-        # sliding-window (local_attn) ring cache keeps only the LAST S
-        # tokens of that padded batch, so padding past the window would push
-        # real prompt history out of the ring (and the slot-index pad mask
-        # cannot repair a ring layout).  Cap prompts and buckets at the
-        # window cache length so admission always takes the slot==position
-        # write path.
         cfg = engine.cfg
+        caps = engine.caps
+        # multi-codebook archs decode (n_slots, ncb) token frames; codebook
+        # 0 carries the EOS/primary stream (see _tok_scalar)
+        self.ncb = cfg.n_codebooks
+        # modality-prefix archs prepend a fixed encoder prefix: every cache
+        # extent / position is offset by it (the engine's slot prefill
+        # synthesizes the stub features itself)
+        self._prefix = cfg.frontend.prefix_len if cfg.frontend else 0
+        # The capability record's max_prompt caps prompts and buckets: a
+        # sliding-window (local_attn) ring cache keeps only the LAST window
+        # tokens, so padding a bucketed whole-prompt admission past the
+        # window would push real prompt history out of the ring.
         self.prompt_limit = engine.max_len
-        if cfg.window and "local_attn" in cfg.layer_pattern:
-            self.prompt_limit = min(self.prompt_limit, cfg.window)
+        if caps.max_prompt is not None:
+            self.prompt_limit = min(self.prompt_limit, caps.max_prompt)
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self._next_id = 0
@@ -298,7 +309,8 @@ class ContinuousScheduler:
         self.caches = None
         self.slots = [_Slot() for _ in range(n_slots)]
         self.step_count = 0               # virtual clock: decode steps so far
-        self.tok = np.zeros((n_slots,), np.int32)
+        self.tok = np.zeros((n_slots,) if self.ncb == 1
+                            else (n_slots, self.ncb), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
         self.dones = np.ones((n_slots,), bool)
         self.remaining = np.zeros((n_slots,), np.int32)
@@ -363,25 +375,33 @@ class ContinuousScheduler:
         self._stamp_itl_at_dispatch = False   # disagg overrides (see its doc)
         # frontend hook: called with each Request as it retires
         self.on_finish: Optional[Callable[[Request], None]] = None
-        # chunked prefill: EVERY eligible prompt streams through the fused
-        # mixed prefill/decode step — long ones chunk-by-chunk (admission
-        # never stalls in-flight decode for more than one chunk of
-        # compute), short ones in a single chunk.  One fixed chunk shape =
-        # one compiled admission program; only ineligible families fall
-        # back to the legacy bucketed single-shot prefill.
+        # chunked prefill: EVERY prompt on a chunk-capable arch streams
+        # through the fused mixed prefill/decode step — long ones
+        # chunk-by-chunk (admission never stalls in-flight decode for more
+        # than one chunk of compute), short ones in a single chunk.  One
+        # fixed chunk shape = one compiled admission program; blocked
+        # families fall back to the legacy bucketed single-shot prefill.
+        # Gating is the capability record's: an inherited config default
+        # falls back silently, an EXPLICIT constructor request raises the
+        # registry's uniform error.
         chunk = (prefill_chunk if prefill_chunk is not None
                  else engine.parallel.prefill_chunk)
-        if chunk and not self._chunk_eligible(cfg):
+        if chunk and not caps.supports("chunked"):
+            if prefill_chunk is not None:
+                caps.require("chunked")
             chunk = 0
         self.chunk = min(int(chunk), self.prompt_limit) if chunk else 0
         # speculative decoding: an n-gram prompt-lookup drafter proposes
         # spec_k tokens per active slot; one fused verify step (a width
         # spec_k+1 chunk at the decode frontier) scores them all and emits
-        # the accepted prefix + one bonus token.  Eligibility matches
-        # chunked prefill: the verify chunk resumes mid-cache, which needs
-        # view-index == absolute-position attention over the slot stripe.
+        # the accepted prefix + one bonus token.  Eligibility is the
+        # capability record's ``spec`` path (the verify chunk resumes
+        # mid-cache over the slot stripe), gated like chunked prefill:
+        # config defaults fall back silently, explicit requests raise.
         sk = spec_k if spec_k is not None else engine.parallel.spec_k
-        if sk and not self._chunk_eligible(cfg):
+        if sk and not caps.supports("spec"):
+            if spec_k is not None:
+                caps.require("spec")
             sk = 0
         self.spec_k = max(0, int(sk or 0))
         self.spec_ngram = int(spec_ngram if spec_ngram is not None
@@ -454,10 +474,10 @@ class ContinuousScheduler:
                deadline_s: Optional[float] = None,
                priority: str = "standard") -> int:
         prompt = np.asarray(prompt)
-        if len(prompt) + max_new > self.engine.max_len:
+        if self._prefix + len(prompt) + max_new > self.engine.max_len:
             raise ValueError(
-                f"request needs {len(prompt)}+{max_new} positions > "
-                f"max_len {self.engine.max_len}")
+                f"request needs {self._prefix + len(prompt)}+{max_new} "
+                f"positions > max_len {self.engine.max_len}")
         if len(prompt) > self.prompt_limit:
             raise ValueError(
                 f"prompt len {len(prompt)} exceeds the sliding-window cache "
@@ -535,7 +555,8 @@ class ContinuousScheduler:
                 if r.finish_reason is None:
                     r.finish_reason = (
                         "stop" if (r.eos_id is not None and s.toks
-                                   and s.toks[-1] == r.eos_id) else "length")
+                                   and _tok_scalar(s.toks[-1]) == r.eos_id)
+                        else "length")
                 r.stats.update({
                     "emitted": len(s.toks),
                     "finished_at": now,
@@ -545,9 +566,9 @@ class ContinuousScheduler:
                 self._finish(r)
 
     def _bucket(self, plen: int) -> int:
-        """Pow-2 prompt bucket — FALLBACK-ARCH whole-prompt admission only
-        (``self.chunk == 0``: MLA, windowed, recurrent, multi-codebook, or
-        chunking explicitly disabled).  Chunk-eligible archs admit every
+        """Pow-2 prompt bucket — whole-prompt admission only (``self.chunk
+        == 0``: the arch's capability record blocks chunked admission, or
+        chunking is explicitly disabled).  Chunk-capable archs admit every
         prompt — short ones included — through the fixed-width mixed step,
         which compiles exactly once; each distinct bucket width here is a
         separate XLA compilation, the recompile cost this path is gated
@@ -557,18 +578,6 @@ class ContinuousScheduler:
         while b < plen:
             b *= 2
         return min(b, self.prompt_limit)
-
-    @staticmethod
-    def _chunk_eligible(cfg) -> bool:
-        """Chunked admission resumes prefill mid-cache, which needs
-        view-index == absolute-position attention over the slot's stripe:
-        attention-pure GQA archs only.  MLA (latent dense cache), sliding
-        windows (ring layout), recurrent state (SSM/RG-LRU chunk-boundary
-        carry), and frontend/multi-codebook archs fall back to whole-prompt
-        admission."""
-        return (cfg.mla is None and cfg.frontend is None
-                and cfg.n_codebooks == 1
-                and all(k == "attn" for k in cfg.layer_pattern))
 
     def _free_slots(self) -> List[int]:
         """Slots admission may fill (the disagg scheduler restricts this to
@@ -659,7 +668,8 @@ class ContinuousScheduler:
         """Legacy single-shot admission for prompts within the chunk budget
         (and for fallback archs): one bucketed full-width prefill."""
         Lp = self._bucket(max(len(r.prompt) for _, r in pairs))
-        tokens = np.full((self.B, Lp), self.pad_id, np.int32)
+        shape = (self.B, Lp) if self.ncb == 1 else (self.B, Lp, self.ncb)
+        tokens = np.full(shape, self.pad_id, np.int32)
         admit = np.zeros((self.B,), bool)
         plens = np.ones((self.B,), np.int32)
         for slot, r in pairs:
@@ -680,9 +690,10 @@ class ContinuousScheduler:
         decode state.  ``ttft_s`` is stamped HERE — under chunked admission
         that is the step whose chunk completed the prompt, so TTFT reflects
         the first token actually *emitted*, not slot assignment."""
-        self.tok = np.where(admit, new_tok, self.tok)
+        adm = admit if new_tok.ndim == 1 else admit[:, None]
+        self.tok = np.where(adm, new_tok, self.tok)
         for slot, r in zip(free, chosen):
-            t = int(new_tok[slot])
+            t = _tok_scalar(new_tok[slot])
             if not 0 <= t < self.vocab:
                 # poisoned prefill output (the int32 image of non-finite
                 # logits): quarantine before the garbage id reaches the
@@ -690,10 +701,12 @@ class ContinuousScheduler:
                 self._quarantine_slot(
                     slot, "error", f"poisoned prefill token {t}")
                 continue
-            self.slots[slot].toks.append(t)
+            self.slots[slot].toks.append(
+                t if self.ncb == 1
+                else np.asarray(new_tok[slot], np.int32).copy())
             if self.on_token is not None:
                 self.on_token(r.rid, t)
-            self.pos[slot] = len(r.prompt)
+            self.pos[slot] = len(r.prompt) + self._prefix
             self.remaining[slot] = r.max_new - 1
             self.eos[slot] = -1 if r.eos_id is None else r.eos_id
             self.dones[slot] = (r.max_new <= 1) or (
@@ -809,7 +822,7 @@ class ContinuousScheduler:
             for i, slot in enumerate(rec.slots):
                 if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
                     continue
-                t = int(toks[s, i])
+                t = _tok_scalar(toks[s, i])
                 if not 0 <= t < self.vocab:
                     # poisoned step output: freeze the slot NOW so no later
                     # token from this block reaches its stream; quarantine
@@ -817,7 +830,9 @@ class ContinuousScheduler:
                     poisoned[i] = t
                     cur_done[i] = True
                     continue
-                slot.toks.append(t)
+                slot.toks.append(
+                    t if self.ncb == 1
+                    else np.asarray(toks[s, i], np.int32).copy())
                 if self.on_token is not None:
                     self.on_token(slot.req.rid, t)
                 cur_rem[i] -= 1
@@ -895,12 +910,14 @@ class ContinuousScheduler:
             for i, slot in enumerate(self.slots):
                 if slot.req is None or cur_done[i] or cur_rem[i] <= 0:
                     continue
-                t = int(toks[s, i])
+                t = _tok_scalar(toks[s, i])
                 if not 0 <= t < self.vocab:
                     poisoned[i] = t
                     cur_done[i] = True
                     continue
-                slot.toks.append(t)
+                slot.toks.append(
+                    t if self.ncb == 1
+                    else np.asarray(toks[s, i], np.int32).copy())
                 if self.on_token is not None:
                     self.on_token(slot.req.rid, t)
                 cur_rem[i] -= 1
@@ -1454,7 +1471,10 @@ class ContinuousScheduler:
         return classes
 
     def _init_caches(self) -> None:
-        self.caches = self.engine.init_slot_caches(self.B)
+        # ring caches get spec_k slack entries so a verify chunk of K
+        # drafts never wraps onto live window history
+        self.caches = self.engine.init_slot_caches(
+            self.B, ring_slack=self.spec_k)
 
     # -- main loop --------------------------------------------------------
     def _serve_round(self) -> bool:
@@ -1583,6 +1603,9 @@ class PagedContinuousScheduler(ContinuousScheduler):
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None):
+        # paged is a hard backend choice — no silent fallback: the registry
+        # raises its uniform error for ring/frontend/multi-codebook archs
+        engine.caps.require("paged")
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
                          spec_k, spec_ngram, overlap, fault_plan,
@@ -1590,10 +1613,6 @@ class PagedContinuousScheduler(ContinuousScheduler):
                          slo_targets, reserve_slots, reserve_blocks,
                          overload_opts)
         cfg = engine.cfg
-        if cfg.window and "local_attn" in cfg.layer_pattern:
-            raise ValueError(
-                "paged KV does not support sliding-window ring caches yet — "
-                "windowed archs stay on the dense slot engine")
         self.has_attn = any(k in ("attn", "local_attn")
                             for k in cfg.layer_pattern)
         block_size = block_size or engine.parallel.kv_block_size
@@ -2029,17 +2048,11 @@ class DisaggScheduler(PagedContinuousScheduler):
                  prefix_cache: bool = True,
                  on_preempt: Optional[Callable[[int], None]] = None,
                  prefill_shards: Optional[int] = None):
-        # the pool split rides on chunked prefill (a prompt must be
-        # resumable mid-cache on the prefill shards); fallback archs would
-        # silently serve unified, so reject them loudly — mirroring the
-        # spec-decode gating
-        if not self._chunk_eligible(engine.cfg):
-            raise ValueError(
-                "disaggregated serving requires a chunk-eligible arch "
-                "(attention-pure GQA): MLA latent caches, sliding-window "
-                "ring layouts, recurrent state, and multi-codebook heads "
-                "cannot resume prefill mid-cache on a separate pool — serve "
-                f"{engine.cfg.name!r} on the unified paged engine instead")
+        # the pool split rides on chunked prefill over the paged backend (a
+        # prompt must be resumable mid-cache on the prefill shards);
+        # ineligible archs would silently serve unified, so the registry
+        # rejects them loudly with its uniform error
+        engine.caps.require("disagg")
         super().__init__(engine, n_slots, pad_id, block_steps, min_bucket,
                          responsive_blocks, on_token, prefill_chunk,
                          spec_k, spec_ngram, overlap, fault_plan,

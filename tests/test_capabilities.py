@@ -1,0 +1,180 @@
+"""Architecture capability registry: derivation from every registered
+config, the uniform ``require()`` gate, scheduler construction across the
+full matrix, and drift checks (no stray per-family gating left in the
+scheduler, README table matches the registry)."""
+import inspect
+import re
+
+import numpy as np
+import pytest
+
+from repro.configs import (ALL_ARCHS, ParallelConfig, SamplingConfig,
+                           get_config)
+from repro.core.capabilities import (BLOCKERS, FALLBACKS, PATH_NAMES, PATHS,
+                                     ArchCapabilities, as_dict,
+                                     render_markdown, render_text, registry)
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.engine import Engine
+
+
+def greedy_engine(arch, max_len=64, **parallel_kw):
+    cfg = get_config(arch).reduced()
+    return Engine(cfg=cfg,
+                  parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                          **parallel_kw),
+                  sampling=SamplingConfig(greedy=True, top_k=1),
+                  mesh=make_local_mesh(1, 1), max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# Derivation
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_every_arch():
+    reg = registry()
+    assert sorted(reg) == sorted(ALL_ARCHS)
+    for arch, caps in reg.items():
+        assert caps.arch == arch
+        # overlap is pure host-loop reordering: never blocked
+        assert caps.supports("overlap")
+        for path in PATHS:
+            tag = caps.blocker(path)
+            assert tag is None or tag in BLOCKERS, (arch, path, tag)
+
+
+def test_derivation_matches_config_structure():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        caps = ArchCapabilities.from_config(cfg)
+        kinds = set(cfg.layer_pattern)
+        ring = cfg.window > 0 and "local_attn" in kinds
+        recurrent = bool(kinds & {"ssd", "rglru"})
+        gated = cfg.frontend is not None or cfg.n_codebooks > 1 or recurrent
+        assert caps.supports("chunked") == (not gated), arch
+        assert caps.supports("spec") == (not gated), arch
+        # ring caches additionally block the paged pool (view != position)
+        assert caps.supports("paged") == (not ring and cfg.frontend is None
+                                          and cfg.n_codebooks == 1), arch
+        assert caps.supports("disagg") == (caps.supports("chunked")
+                                           and caps.supports("paged")), arch
+        assert (caps.max_prompt == cfg.window) if ring \
+            else (caps.max_prompt is None), arch
+        assert caps.sampling == ("per-codebook" if cfg.n_codebooks > 1
+                                 else "single"), arch
+
+
+def test_require_is_uniformly_worded():
+    for arch, caps in registry().items():
+        for path in PATHS:
+            if caps.supports(path):
+                caps.require(path)      # no-op
+                continue
+            with pytest.raises(ValueError) as ei:
+                caps.require(path)
+            msg = str(ei.value)
+            assert msg == (f"arch {arch!r} does not support "
+                           f"{PATH_NAMES[path]}: blocked by "
+                           f"{BLOCKERS[caps.blocker(path)]} — use "
+                           f"{FALLBACKS[path]} instead")
+
+
+def test_unknown_path_rejected():
+    caps = ArchCapabilities.from_config(get_config("yi-9b"))
+    with pytest.raises(KeyError):
+        caps.supports("warp")
+    with pytest.raises(KeyError):
+        caps.require("warp")
+
+
+# ---------------------------------------------------------------------------
+# Matrix sweep: every arch x every gated path either constructs a scheduler
+# or raises the registry error — nothing falls through to ad-hoc gating.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(ALL_ARCHS))
+def test_matrix_scheduler_construction(arch):
+    from repro.runtime.scheduler import (ContinuousScheduler,
+                                         PagedContinuousScheduler)
+
+    eng = greedy_engine(arch)
+    caps = eng.caps
+    assert caps == ArchCapabilities.from_config(eng.cfg)
+
+    for path, build in (
+        ("chunked", lambda: ContinuousScheduler(eng, n_slots=2,
+                                                prefill_chunk=8)),
+        ("spec", lambda: ContinuousScheduler(eng, n_slots=2, spec_k=4)),
+        ("paged", lambda: PagedContinuousScheduler(eng, n_slots=2,
+                                                   block_size=8)),
+    ):
+        if caps.supports(path):
+            build()
+        else:
+            with pytest.raises(ValueError,
+                               match="does not support "
+                                     + PATH_NAMES[path].split("/")[0]):
+                build()
+    # the plain slot engine serves every arch in the registry
+    sched = ContinuousScheduler(eng, n_slots=2)
+    assert sched.chunk == 0 or caps.supports("chunked")
+    assert sched.spec_k == 0 or caps.supports("spec")
+
+
+@pytest.mark.parametrize("arch", ["gptj-parallel", "mixtral-8x7b", "minicpm3-4b",
+                                  "mamba2-1.3b", "musicgen-medium"])
+def test_matrix_serving_smoke(arch):
+    """Every cache family serves a short greedy stream through the plain
+    slot engine (the path the registry never blocks)."""
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    eng = greedy_engine(arch)
+    sched = ContinuousScheduler(eng, n_slots=2)
+    rng = np.random.default_rng(3)
+    ncb = eng.cfg.n_codebooks
+    shape = (8,) if ncb == 1 else (8, ncb)
+    for _ in range(2):
+        sched.submit(rng.integers(0, eng.cfg.vocab_size, shape)
+                     .astype(np.int32), 3)
+    done = sched.run()
+    assert len(done) == 2
+    for r in done:
+        assert len(r.output) == 3
+
+
+# ---------------------------------------------------------------------------
+# Drift checks
+# ---------------------------------------------------------------------------
+
+
+def test_no_inline_family_gating_left_in_scheduler():
+    """The registry is the ONLY eligibility source: the old per-family
+    inline gates (``_chunk_eligible`` and friends) must not reappear."""
+    from repro.runtime import scheduler
+
+    src = inspect.getsource(scheduler)
+    assert "_chunk_eligible" not in src
+    # family sniffing like `cfg.mla is not None` must not gate serving paths
+    assert not re.search(r"cfg\.mla\s+is\s+not\s+None", src)
+
+
+def test_renderers_agree_with_registry():
+    text = render_text()
+    md = render_markdown()
+    d = as_dict()
+    assert sorted(d) == sorted(ALL_ARCHS)
+    for arch, caps in registry().items():
+        assert arch in text and f"`{arch}`" in md
+        for path in PATHS:
+            assert d[arch]["paths"][path]["supported"] == caps.supports(path)
+            assert d[arch]["paths"][path]["blocker"] == caps.blocker(path)
+
+
+def test_readme_matrix_in_sync():
+    """The README support-matrix section is generated from the registry;
+    regenerate it (core.capabilities.render_markdown) when archs change."""
+    import pathlib
+
+    readme = pathlib.Path(__file__).resolve().parent.parent / "README.md"
+    assert render_markdown() in readme.read_text()

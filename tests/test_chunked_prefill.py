@@ -244,14 +244,19 @@ def test_chunked_prefix_reuse_paged(yi_engine):
         assert_tokens_match(done[8][rid].output, solo)
 
 
-@pytest.mark.parametrize("arch", ["mamba2-1.3b", "minicpm3-4b"])
-def test_chunked_fallback_ineligible_archs(arch):
-    """Recurrent and MLA families silently fall back to whole-prompt
-    admission (chunking needs view-index == position attention over the
-    slot stripe) and still match solo generation."""
-    eng = greedy_engine(arch, max_len=64)
-    sched = ContinuousScheduler(eng, n_slots=2, block_steps=4,
-                                prefill_chunk=8)
+def test_chunked_capability_gating_recurrent():
+    """Recurrent-state archs stay chunk-ineligible under the capability
+    registry: an EXPLICIT per-scheduler prefill_chunk raises the uniform
+    registry error, while the config-default path (engine-level
+    prefill_chunk, no constructor override) silently clamps to whole-prompt
+    admission and still matches solo generation."""
+    with pytest.raises(ValueError, match="does not support chunked prefill"):
+        ContinuousScheduler(greedy_engine("mamba2-1.3b", max_len=64),
+                            n_slots=2, block_steps=4, prefill_chunk=8)
+    eng = greedy_engine("mamba2-1.3b", max_len=64,
+                        parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                                prefill_chunk=8))
+    sched = ContinuousScheduler(eng, n_slots=2, block_steps=4)
     assert sched.chunk == 0
     rng = np.random.default_rng(7)
     reqs = [(rng.integers(0, eng.cfg.vocab_size, 20).astype(np.int32), 4)
@@ -261,6 +266,24 @@ def test_chunked_fallback_ineligible_archs(arch):
     done = {r.rid: r for r in sched.run()}
     assert sched.stats["chunked_admissions"] == 0
     for rid, (p, mn) in enumerate(reqs):
+        solo = eng.generate(p[None], mn)[0]
+        assert_tokens_match(done[rid].output, solo)
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "mixtral-8x7b"])
+def test_chunked_matches_whole_prompt_newly_eligible(arch):
+    """MLA latent caches and sliding-window ring caches stream chunks now
+    (latent scatter-resume and pre-write ring stripe attention): chunked
+    admission is bit-identical to whole-prompt admission and to solo
+    generation."""
+    eng = greedy_engine(arch)
+    reqs = long_requests(eng.cfg, n=4, seed=3)
+    sched, done = run_chunked_vs_whole(
+        eng, reqs,
+        lambda e, C: ContinuousScheduler(e, n_slots=2, block_steps=4,
+                                         prefill_chunk=C))
+    assert sched.stats["chunked_admissions"] == len(reqs)
+    for rid, (p, mn, _) in enumerate(reqs):
         solo = eng.generate(p[None], mn)[0]
         assert_tokens_match(done[rid].output, solo)
 

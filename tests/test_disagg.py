@@ -89,13 +89,14 @@ def test_split_data_shards():
             split_data_shards(4, bad)
 
 
-@pytest.mark.parametrize("arch", ["minicpm3-4b", "mamba2-1.3b"])
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "recurrentgemma-9b"])
 def test_disagg_rejects_fallback_archs(arch):
-    """MLA / recurrent families cannot resume prefill mid-cache on a
-    separate pool; the scheduler must refuse loudly (not silently serve
-    unified) — mirroring the spec-decode gating."""
+    """Recurrent-state families cannot resume prefill mid-cache on a
+    separate pool; the capability registry must refuse loudly (not
+    silently serve unified) — the same uniform error every gated path
+    raises."""
     eng = greedy_engine(arch)
-    with pytest.raises(ValueError, match="chunk-eligible"):
+    with pytest.raises(ValueError, match="does not support disaggregated"):
         DisaggScheduler(eng, n_slots=2, block_size=8, prefill_shards=1)
 
 

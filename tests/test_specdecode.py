@@ -521,14 +521,42 @@ def test_spec_stats_and_itl_accounting(yi_engine):
     assert itl_n >= emitted_in_spec - 2 * (sched.spec_k + 1)
 
 
-def test_spec_gated_off_for_ineligible_archs():
-    """MLA / recurrent families silently fall back to plain decode (the
-    verify chunk needs view-index == position attention)."""
-    for arch in ("mamba2-1.3b", "minicpm3-4b"):
-        eng = greedy_engine(arch, max_len=64)
-        from repro.runtime.scheduler import ContinuousScheduler
-        sched = ContinuousScheduler(eng, n_slots=2, spec_k=4)
-        assert sched.spec_k == 0 and sched.drafter is None
+def test_spec_capability_gating_recurrent():
+    """Recurrent archs stay spec-ineligible under the capability registry:
+    an EXPLICIT per-scheduler spec_k raises the uniform registry error,
+    while the config-default path (engine-level spec_k, no constructor
+    override) silently clamps to plain decode."""
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    with pytest.raises(ValueError, match="does not support speculative"):
+        ContinuousScheduler(greedy_engine("mamba2-1.3b", max_len=64),
+                            n_slots=2, spec_k=4)
+    eng = greedy_engine("mamba2-1.3b", max_len=64,
+                        parallel=ParallelConfig(tp=1, dp=1, remat=False,
+                                                spec_k=4))
+    sched = ContinuousScheduler(eng, n_slots=2)
+    assert sched.spec_k == 0 and sched.drafter is None
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "mixtral-8x7b"])
+def test_spec_matches_plain_newly_eligible(arch):
+    """MLA latent caches (decode-congruent two-dot verify chunk) and
+    sliding-window ring caches (spec_k slack entries so rejected drafts
+    never clobber in-window history) verify speculative drafts now: served
+    greedy streams are bit-identical to plain decode."""
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    eng = greedy_engine(arch, max_len=96)
+    reqs = requests_mix(eng.cfg, n=4, seed=13, mmin=8, mmax=16)
+
+    def mk(e, k):
+        return ContinuousScheduler(e, n_slots=2, block_steps=2, spec_k=k)
+
+    _, base = serve(eng, reqs, mk, 0)
+    sched, spec = serve(eng, reqs, mk, 4)
+    assert sched.stats["spec_steps"] > 0
+    for rid in base:
+        assert_tokens_match(spec[rid].output, base[rid].output)
 
 
 def test_spec_with_chunked_admission(yi_engine):
